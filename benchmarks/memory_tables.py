@@ -1,0 +1,127 @@
+"""Paper Tables 1/2/3/5/6 + appendix Table 2: optimizer-state memory.
+
+Every number is exact byte arithmetic over the real optimizer-state pytree
+at the paper's full model shapes (no allocation). Each table prints the
+paper's claimed reduction next to ours.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+import jax
+import jax.numpy as jnp2  # noqa: F401 (dtype args)
+
+from benchmarks import param_trees as PT
+from benchmarks.common import Csv, shapes_of, state_bytes_for
+from repro.core.accounting import abstract_state_bytes, _leaf_bytes
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.models.lora import LoRAConfig, lora_init
+
+
+def _lora_row(csv, table, tree, rank, dtype, claim_opt, claim_model,
+              min_dim=128):
+    """LoRA baseline: Adam over adapters only + model-size growth."""
+    shapes = shapes_of(tree)
+    lcfg = LoRAConfig(rank=rank, min_dim=min_dim)
+    adapters = jax.eval_shape(
+        lambda: lora_init(jax.random.key(0), shapes, lcfg))
+    tx = make_optimizer(OptimizerConfig(name="adamw", learning_rate=1e-3,
+                                        state_dtype=dtype, grad_clip=None))
+    opt_b = abstract_state_bytes(tx, adapters).total_bytes
+    ad_b = sum(_leaf_bytes(x) for x in jax.tree_util.tree_leaves(adapters))
+    model_b = sum(_leaf_bytes(x) for x in jax.tree_util.tree_leaves(shapes))
+    csv.add(f"{table}/lora_rank{rank}", 0.0,
+            f"opt_gb={opt_b/1e9:.3f};model_growth={ad_b/model_b:+.1%};"
+            f"paper_opt={claim_opt};paper_model={claim_model}")
+    print(f"  {'lora_rank%d' % rank:28s} {opt_b/1e9:7.3f} GB opt "
+          f"(+{ad_b/model_b:.1%} model) paper: {claim_opt} opt, "
+          f"{claim_model} model")
+
+
+def _report(csv: Csv, table: str, tree, rows, dtype=jnp.float32):
+    shapes = shapes_of(tree)
+    base_name = rows[0][1]
+    base = state_bytes_for(shapes, base_name, rank=rows[0][2],
+                           rank_ratio=rows[0][3], state_dtype=dtype,
+                           min_dim=rows[0][4] if len(rows[0]) > 4 else 128)
+    print(f"# {table} (baseline {base_name}: {base/1e9:.2f} GB)")
+    for row in rows:
+        label, name, rank, ratio = row[:4]
+        min_dim = row[4] if len(row) > 4 else 128
+        claim = row[5] if len(row) > 5 else None
+        b = state_bytes_for(shapes, name, rank=rank, rank_ratio=ratio,
+                            state_dtype=dtype, min_dim=min_dim)
+        red = 1 - b / base
+        claim_s = f" paper_claim={claim}" if claim else ""
+        csv.add(f"{table}/{label}", 0.0,
+                f"state_gb={b/1e9:.3f};reduction={red:+.1%}{claim_s}")
+        print(f"  {label:28s} {b/1e9:7.3f} GB  ({red:+.1%}){claim_s}")
+
+
+def run(csv: Csv, fast: bool = False):
+    # ---- Table 5: LLaMA-1B pre-training (paper: GaLore/COAP -61%) ----
+    _report(csv, "table5_llama1b", PT.LLAMA_1B, [
+        ("adamw", "adamw", None, None),
+        ("galore_rank512", "galore-adamw", 512, None, 128, "-61%"),
+        ("coap_rank512", "coap-adamw", 512, None, 128, "-61%"),
+        ("8bit_coap_rank512", "8bit-coap-adamw", 512, None),
+    ], dtype=jnp.bfloat16)  # paper Table 5 reports states in BF16
+    _lora_row(csv, "table5_llama1b", PT.LLAMA_1B, 512, jnp.bfloat16,
+              "-55%", "+36%")
+
+    # ---- Table 5 (7B, 8-bit): 8bit-GaLore/COAP -58% vs 8bit Adam ----
+    _report(csv, "table5_llama7b_8bit", PT.LLAMA_7B, [
+        ("8bit_adam", "8bit-adamw", None, None),
+        ("8bit_galore_rank1024", "8bit-galore-adamw", 1024, None, 128, "-58%"),
+        ("8bit_coap_rank1024", "8bit-coap-adamw", 1024, None, 128, "-58%"),
+    ])
+
+    # ---- Table 6: LLaVA-7B fine-tune (rank ratio 4; -49% / 8bit -81%) ----
+    _report(csv, "table6_llava7b", PT.LLAVA_7B, [
+        ("adamw", "adamw", None, None),
+        ("coap_ratio4", "coap-adamw", None, 4.0, 128, "-49%"),
+        ("galore_ratio4", "galore-adamw", None, 4.0, 128, "-49%"),
+        ("8bit_coap_ratio4", "8bit-coap-adamw", None, 4.0, 128, "-81%"),
+    ], dtype=jnp.bfloat16)
+    _lora_row(csv, "table6_llava7b", PT.LLAVA_7B, 1024, jnp.bfloat16,
+              "-49%", "+30%")
+
+    # ---- Table 2: SiT-XL/2 (rank 512; COAP/GaLore -49% AdamW fp32) ----
+    _report(csv, "table2_sit_xl2", PT.SIT_XL_2, [
+        ("adamw", "adamw", None, None),
+        ("coap_rank512", "coap-adamw", 512, None, 128, "-49%"),
+        ("galore_rank512", "galore-adamw", 512, None, 128, "-49%"),
+        ("flora_rank512", "flora-adamw", 512, None, 128, "-36%(adafactor)"),
+    ])
+    _lora_row(csv, "table2_sit_xl2", PT.SIT_XL_2, 512, jnp.float32,
+              "-29%", "+48%")
+
+    # ---- Table 1: LDM U-Net conv (ratio 2; COAP -40% AdamW fp32) ----
+    _report(csv, "table1_ldm_unet", PT.LDM_UNET, [
+        ("adamw", "adamw", None, None),
+        ("coap_tucker2_ratio2", "coap-adamw", None, 2.0, 96, "-40%"),
+        ("galore_ratio2", "galore-adamw", None, 2.0, 96, "-33%"),
+    ])
+
+    # ---- Table 3: ControlNet-SDXL rank-ratio sweep ----
+    _report(csv, "table3_controlnet_sdxl", PT.SDXL_CONTROLNET, [
+        ("adamw", "adamw", None, None),
+        ("coap_ratio2", "coap-adamw", None, 2.0, 96, "-29%(vs adafactor)"),
+        ("coap_ratio4", "coap-adamw", None, 4.0, 96, "-65%"),
+        ("coap_ratio8", "coap-adamw", None, 8.0, 96, "-82%"),
+        ("8bit_coap_ratio8", "8bit-coap-adamw", None, 8.0, 96, "-90%"),
+        ("galore_ratio8", "galore-adamw", None, 8.0, 96, "-47%"),
+    ], dtype=jnp.bfloat16)
+
+    # ---- appendix Table 2: DDPM U-Nets ----
+    if not fast:
+        _report(csv, "app_table2_ddpm_cifar", PT.DDPM_CIFAR_UNET, [
+            ("adamw", "adamw", None, None),
+            ("coap_ratio1p5", "coap-adamw", None, 1.5, 96, "214.66MB"),
+            ("galore_ratio1p5", "galore-adamw", None, 1.5, 96, "302.43MB"),
+        ])
+        _report(csv, "app_table2_ddpm_celeba", PT.DDPM_CELEBA_UNET, [
+            ("adamw", "adamw", None, None),
+            ("coap_ratio2", "coap-adamw", None, 2.0, 96, "525.18MB"),
+            ("galore_ratio2", "galore-adamw", None, 2.0, 96, "562.56MB"),
+        ])

@@ -1,0 +1,113 @@
+"""Training-time overhead columns (Tables 1/2/3/5/6).
+
+Per-step optimizer overhead = measured P-update cost amortized over its
+interval + measured per-step projection cost, divided by the analytic step
+time at the paper's hardware (8xH100 @ 40% MFU). Printed alongside the
+paper's claimed +x% columns. Absolute CPU times are reported in the CSV so
+the derivation is auditable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, analytic_step_seconds, time_fn
+from repro.core import correlation, recalibrate
+from repro.kernels import ref as kref
+
+
+# (m, n) matrices of LLaMA-1B with multiplicity per step
+LLAMA1B_MATS = [
+    ((2048, 2048), 4 * 24), ((5461, 2048), 3 * 24), ((32000, 2048), 1),
+]
+LLAMA1B_N = 1.1e9
+LLAMA1B_TOKENS = 512 * 256  # batch 512, seq 256 (paper's GaLore recipe)
+
+
+def _p_update_cost(mats, rank, strategy: str) -> float:
+    """Wall seconds to refresh ALL projections once."""
+    total = 0.0
+    for (m, n), count in mats:
+        mm, nn = max(m, n), min(m, n)
+        r = min(rank, nn)
+        g = jax.random.normal(jax.random.key(0), (mm, nn))
+        p = jax.random.normal(jax.random.key(1), (nn, r)) / np.sqrt(r)
+        mp = 0.1 * jax.random.normal(jax.random.key(2), (mm, r))
+        if strategy == "galore":
+            fn = jax.jit(lambda gg: recalibrate.galore_svd(gg, r))
+            t = time_fn(fn, g, iters=1)
+        elif strategy == "coap_recal":
+            fn = jax.jit(recalibrate.lowcost_svd)
+            t = time_fn(fn, g, p, iters=1)
+        elif strategy == "coap_eqn6":
+            fn = jax.jit(lambda pp, gg, m2: correlation.sgd_update(pp, gg, m2))
+            t = time_fn(fn, p, g, mp, iters=2)
+        else:  # flora
+            fn = jax.jit(lambda k: recalibrate.random_projection(k, (mm, nn), r))
+            t = time_fn(fn, jax.random.key(3), iters=2)
+        total += t * count
+    return total
+
+
+def _per_step_projection_cost(mats, rank) -> float:
+    """G@P + moment update + backproject per step (the fused-kernel path)."""
+    total = 0.0
+    for (m, n), count in mats:
+        mm, nn = max(m, n), min(m, n)
+        r = min(rank, nn)
+        g = jax.random.normal(jax.random.key(0), (mm, nn))
+        p = jax.random.normal(jax.random.key(1), (nn, r)) / np.sqrt(r)
+        mo = jnp.zeros((mm, r))
+        vo = jnp.zeros((mm, r))
+        cnt = jnp.asarray(3, jnp.int32)
+        fn = jax.jit(lambda *a: kref.coap_fused_update(*a))
+        t = time_fn(fn, g, p, mo, vo, cnt, iters=2)
+        total += t * count
+    return total
+
+
+def run(csv: Csv, fast: bool = False):
+    rank = 512
+    t_u, lam = 40, 5  # paper's LLaMA-1B recipe
+    step_s = analytic_step_seconds(LLAMA1B_N, LLAMA1B_TOKENS)
+    print(f"# overhead (LLaMA-1B shapes; analytic step {step_s*1e3:.0f} ms "
+          f"@8xH100 40% MFU)")
+
+    costs = {
+        "galore_svd": _p_update_cost(LLAMA1B_MATS, rank, "galore"),
+        "coap_recal": _p_update_cost(LLAMA1B_MATS, rank, "coap_recal"),
+        "coap_eqn6": _p_update_cost(LLAMA1B_MATS, rank, "coap_eqn6"),
+        "flora_random": _p_update_cost(LLAMA1B_MATS, rank, "flora"),
+    }
+    proj_step = _per_step_projection_cost(LLAMA1B_MATS, rank)
+
+    # CPU->accelerator scaling: P updates are dense linalg; scale measured
+    # CPU time by the same factor for all strategies (ratios exact, levels
+    # approximate). Factor = measured CPU matmul rate vs A100 ~ measured
+    # below via one reference matmul.
+    a = jax.random.normal(jax.random.key(0), (2048, 2048))
+    t_mm = time_fn(jax.jit(lambda x: x @ x), a, iters=3)
+    cpu_flops = 2 * 2048**3 / t_mm
+    scale = cpu_flops / 150e12  # vs ~150 TF/s effective dense linalg on A100
+
+    # amortized per-step seconds (accelerator-scaled)
+    rows = {
+        "galore(+SVD/T_u)": costs["galore_svd"] / t_u * scale,
+        "coap(eqn6/T_u + recal/λT_u)": (
+            costs["coap_eqn6"] / t_u + costs["coap_recal"] / (lam * t_u)
+        ) * scale,
+        "flora(resample each step)": costs["flora_random"] * scale,
+    }
+    for label, s in rows.items():
+        overhead = s / step_s
+        csv.add(f"overhead/{label}", s * 1e6,
+                f"overhead_vs_step={overhead:+.1%}")
+        print(f"  {label:34s} {s*1e3:8.2f} ms/step  ({overhead:+.1%} of step)"
+              )
+    ratio = costs["galore_svd"] / costs["coap_recal"]
+    csv.add("overhead/fullsvd_vs_lowcost_ratio", 0.0,
+            f"ratio={ratio:.1f}x;paper_claim=20x+")
+    print(f"  full-SVD vs low-cost-SVD ratio: {ratio:.1f}x (paper: >20x)")
+    csv.add("overhead/per_step_projection", proj_step * scale * 1e6,
+            f"fused_update_all_mats_cpu_s={proj_step:.3f}")

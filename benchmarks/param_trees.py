@@ -1,0 +1,129 @@
+"""Full-size parameter-shape trees for the paper's models (memory tables).
+
+Shapes only (ShapeDtypeStructs downstream) — nothing is allocated. Sources:
+public configs of each model; conv nets list every (O, I, k, k) at its real
+channel widths.
+"""
+from __future__ import annotations
+
+
+def llama(n_layers: int, d: int, ffn: int, vocab: int, kv_heads=None, heads=32,
+          head_dim=None):
+    head_dim = head_dim or d // heads
+    kv = (kv_heads or heads) * head_dim
+    layers = {
+        "wq": (n_layers, d, heads * head_dim),
+        "wk": (n_layers, d, kv),
+        "wv": (n_layers, d, kv),
+        "wo": (n_layers, heads * head_dim, d),
+        "gate": (n_layers, d, ffn),
+        "up": (n_layers, d, ffn),
+        "down": (n_layers, ffn, d),
+        "ln1_scale": (n_layers, d),
+        "ln2_scale": (n_layers, d),
+    }
+    return {"layers": layers, "embed": {"embedding": (vocab, d)},
+            "lm_head": {"w": (d, vocab)}, "final_norm_scale": (d,)}
+
+
+LLAMA_1B = llama(24, 2048, 5461, 32000)
+LLAMA_7B = llama(32, 4096, 11008, 32000)
+
+
+def vit(n_layers: int, d: int, ffn: int, patches=196, n_classes=1000):
+    return {
+        "layers": {
+            "wq": (n_layers, d, d), "wk": (n_layers, d, d),
+            "wv": (n_layers, d, d), "wo": (n_layers, d, d),
+            "fc1": (n_layers, d, ffn), "fc2": (n_layers, ffn, d),
+            "ln1_scale": (n_layers, d), "ln2_scale": (n_layers, d),
+        },
+        "patch_embed": {"w": (d, 768)},  # 16x16x3 flattened
+        "pos_embedding": (patches + 1, d),
+        "head": {"w": (d, n_classes)},
+    }
+
+
+DEIT_BASE = vit(12, 768, 3072)
+def dit(n_layers: int, d: int, ffn: int):
+    """DiT/SiT: ViT blocks + adaLN-zero modulation (d -> 6d per block)."""
+    tree = vit(n_layers, d, ffn)
+    tree["layers"]["adaln"] = (n_layers, d, 6 * d)
+    tree["t_embed"] = {"fc1": (256, d), "fc2": (d, d)}
+    tree["y_embed"] = {"w": (1001, d)}
+    return tree
+
+
+SIT_XL_2 = dit(28, 1152, 4608)  # SiT-XL/2 backbone (~675M)
+
+
+def _unet_convs(base: int, mults, in_ch=4, attn_from=1, ctx=768,
+                tfmr_depth=1):
+    """Representative LDM/SDXL-style U-Net: resnet convs + (cross-)attention
+    transformer blocks at the deeper resolutions + time-embedding MLPs —
+    the mix matters because GaLore projects only the linear (attention/MLP)
+    weights while COAP's Tucker-2 also covers the convs (paper Table 1/3)."""
+    tree = {}
+    chans = [base * m for m in mults]
+    prev = base
+    tree["conv_in"] = (base, in_ch, 3, 3)
+    t_dim = base * 4
+    tree["time_embed_fc1"] = (base, t_dim)
+    tree["time_embed_fc2"] = (t_dim, t_dim)
+
+    def attn_block(prefix, d):
+        for rep in range(tfmr_depth):
+            p = f"{prefix}_t{rep}"
+            tree[f"{p}_self_wq"] = (d, d)
+            tree[f"{p}_self_wk"] = (d, d)
+            tree[f"{p}_self_wv"] = (d, d)
+            tree[f"{p}_self_wo"] = (d, d)
+            tree[f"{p}_cross_wq"] = (d, d)
+            tree[f"{p}_cross_wk"] = (ctx, d)
+            tree[f"{p}_cross_wv"] = (ctx, d)
+            tree[f"{p}_cross_wo"] = (d, d)
+            tree[f"{p}_ff1"] = (d, 4 * d)
+            tree[f"{p}_ff2"] = (4 * d, d)
+
+    for i, ch in enumerate(chans):
+        for blk in range(2):
+            tree[f"down{i}_res{blk}_conv1"] = (ch, prev, 3, 3)
+            tree[f"down{i}_res{blk}_conv2"] = (ch, ch, 3, 3)
+            tree[f"down{i}_res{blk}_temb"] = (t_dim, ch)
+            prev = ch
+            if i >= attn_from:
+                attn_block(f"down{i}_b{blk}", ch)
+        if i < len(chans) - 1:
+            tree[f"down{i}_ds_conv"] = (ch, ch, 3, 3)
+    attn_block("mid", chans[-1])
+    tree["mid_res_conv1"] = (chans[-1], chans[-1], 3, 3)
+    tree["mid_res_conv2"] = (chans[-1], chans[-1], 3, 3)
+    for i, ch in enumerate(reversed(chans)):
+        lvl = len(chans) - 1 - i
+        for blk in range(3):
+            tree[f"up{i}_res{blk}_conv1"] = (ch, prev + ch, 3, 3)
+            tree[f"up{i}_res{blk}_conv2"] = (ch, ch, 3, 3)
+            tree[f"up{i}_res{blk}_temb"] = (t_dim, ch)
+            prev = ch
+            if lvl >= attn_from:
+                attn_block(f"up{i}_b{blk}", ch)
+    tree["conv_out"] = (in_ch, base, 3, 3)
+    return tree
+
+
+LDM_UNET = _unet_convs(224, (1, 2, 3, 4), attn_from=1)
+SDXL_CONTROLNET = _unet_convs(320, (1, 2, 4), ctx=2048,
+                              attn_from=1, tfmr_depth=2)
+DDPM_CIFAR_UNET = _unet_convs(128, (1, 2, 2, 2), in_ch=3, attn_from=2)
+DDPM_CELEBA_UNET = _unet_convs(128, (1, 1, 2, 2, 4), in_ch=3, attn_from=3)
+
+
+def llava_7b():
+    """LLaVA-v1.5-7B = Vicuna-7B + CLIP ViT-L/14 + mm projector."""
+    tree = llama(32, 4096, 11008, 32000)
+    tree["vision"] = vit(24, 1024, 4096, patches=576, n_classes=0)["layers"]
+    tree["mm_projector"] = {"fc1": (1024, 4096), "fc2": (4096, 4096)}
+    return tree
+
+
+LLAVA_7B = llava_7b()

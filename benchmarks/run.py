@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only memory,fig3,...]
+
+Prints human-readable tables followed by the machine-readable
+``name,us_per_call,derived`` CSV block (the run.py contract).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="trim the largest shapes / fewest steps")
+    ap.add_argument("--only", default="",
+                    help="comma list: memory,svd,overhead,fig3,table7,fig4,t5q")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import convergence, memory_tables, overhead, svd_cost
+    from benchmarks.common import Csv
+
+    csv = Csv()
+    t0 = time.time()
+
+    def want(key):
+        return only is None or key in only
+
+    if want("memory"):
+        memory_tables.run(csv, fast=args.fast)
+    if want("svd"):
+        svd_cost.run(csv, fast=args.fast)
+    if want("overhead"):
+        overhead.run(csv, fast=args.fast)
+    steps = 80 if args.fast else 200
+    if want("fig3"):
+        convergence.fig3_ceu(csv, steps=steps)
+    if want("table7"):
+        convergence.table7_ablation(csv, steps=max(60, steps // 2))
+    if want("fig4"):
+        convergence.fig4_hparams(csv, steps=max(50, steps // 2))
+    if want("t5q"):
+        convergence.table5_quality(csv, steps=max(100, steps))
+
+    print(f"\n# total benchmark wall time: {time.time()-t0:.1f}s")
+    print("name,us_per_call,derived")
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

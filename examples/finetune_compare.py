@@ -1,0 +1,79 @@
+"""Optimizer shoot-out (paper Fig 3 / Table 6 style): fine-tune the same
+pre-trained checkpoint with AdamW / COAP / GaLore / Flora / 8-bit COAP and
+report eval CE, CEU, optimizer memory, and wall-clock.
+
+  PYTHONPATH=src python examples/finetune_compare.py [--steps 120]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core.accounting import optimizer_state_bytes
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.data.synthetic import SyntheticLM
+from repro.models.model import build_model
+from repro.optim import apply_updates
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke("llama-1b"), dtype=jnp.float32)
+    model = build_model(cfg)
+    data = SyntheticLM(vocab=cfg.vocab_size, order=2, noise=0.1)
+
+    # "pre-train" briefly to get a common starting checkpoint
+    base = model.init(jax.random.key(0))
+    tx0 = make_optimizer(OptimizerConfig(name="adamw", learning_rate=3e-3))
+    s0 = tx0.init(base)
+
+    @jax.jit
+    def pre_step(p, s, b):
+        (_, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+        u, s = tx0.update(g, s, p)
+        return apply_updates(p, u), s
+
+    for i in range(40):
+        base, s0 = pre_step(base, s0, data.batch(i, 8, 64))
+
+    print(f"{'optimizer':20s} {'opt MB':>8s} {'eval CE':>8s} {'CEU':>10s} "
+          f"{'steps/s':>8s}")
+    for name in ["adamw", "coap-adamw", "galore-adamw", "flora-adamw",
+                 "8bit-coap-adamw"]:
+        tx = make_optimizer(OptimizerConfig(
+            name=name, learning_rate=1e-3, rank=16, t_update=10, lam=4,
+            min_dim=32,
+        ))
+        params, state = base, tx.init(base)
+        mem = optimizer_state_bytes(state).total_bytes / 1e6
+
+        @jax.jit
+        def step(p, s, b):
+            (loss, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+            u, s = tx.update(g, s, p)
+            ceu = sum(jnp.sum(jnp.abs(x)) for x in jax.tree_util.tree_leaves(u))
+            return apply_updates(p, u), s, loss, ceu
+
+        ceu_total, t0 = 0.0, time.perf_counter()
+        for i in range(args.steps):
+            params, state, loss, ceu = step(params, state,
+                                            data.batch(1000 + i, 8, 64))
+            ceu_total += float(ceu)
+        dt = time.perf_counter() - t0
+        ces = []
+        for i in range(5):
+            _, m = jax.jit(model.loss)(params, data.batch(90_000 + i, 8, 64))
+            ces.append(float(m["ce"]))
+        print(f"{name:20s} {mem:8.2f} {sum(ces)/5:8.4f} {ceu_total:10.1f} "
+              f"{args.steps/dt:8.1f}")
+    print(f"(ce floor {data.ce_floor():.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: COAP in 40 lines — project a model's gradients into low-rank
+space, train, and compare optimizer memory against AdamW.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core.accounting import optimizer_state_bytes
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.data.synthetic import SyntheticLM
+from repro.models.model import build_model
+from repro.optim import apply_updates
+
+
+def main():
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    data = SyntheticLM(vocab=cfg.vocab_size, order=2, noise=0.1)
+
+    for name in ["adamw", "coap-adamw", "8bit-coap-adamw"]:
+        tx = make_optimizer(OptimizerConfig(
+            name=name, learning_rate=3e-3, rank=16, t_update=10, lam=4,
+            min_dim=16,
+        ))
+        state = tx.init(params)
+        mem = optimizer_state_bytes(state)
+
+        @jax.jit
+        def step(p, s, batch):
+            (loss, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
+            upd, s = tx.update(g, s, p)
+            return apply_updates(p, upd), s, loss
+
+        p = params
+        for i in range(30):
+            p, state, loss = step(p, state, data.batch(i, 8, 64))
+        print(f"{name:18s} optimizer_state={mem.total_bytes/1e6:7.2f} MB "
+              f"loss@30={float(loss):.3f}")
+    print(f"(irreducible CE floor: {data.ce_floor():.3f})")
+
+
+if __name__ == "__main__":
+    main()

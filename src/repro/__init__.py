@@ -1,0 +1,5 @@
+"""repro: production-grade JAX framework reproducing COAP
+(Correlation-Aware Gradient Projection, Xiao et al. 2024) with multi-pod
+distribution, a 10-architecture model zoo, and Pallas TPU kernels."""
+
+__version__ = "1.0.0"

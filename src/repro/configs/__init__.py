@@ -1,0 +1,6 @@
+"""Assigned architecture configs (exact public numbers) + smoke variants."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, input_specs, supports_shape
+from repro.configs.registry import get_config, get_smoke, list_archs
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "input_specs",
+           "supports_shape", "get_config", "get_smoke", "list_archs"]

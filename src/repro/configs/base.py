@@ -1,0 +1,186 @@
+"""Architecture + shape schema for the assigned configs.
+
+Every architecture file in this package exports ``CONFIG`` (exact public
+numbers) and ``SMOKE`` (a reduced same-family config for CPU tests). The
+four assigned input shapes are global; ``input_specs`` builds the
+ShapeDtypeStruct stand-ins the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # attention features
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None
+    logit_softcap: Optional[float] = None
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl
+    qkv_bias: bool = False
+    # MLA (minicpm3)
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    attn_every: int = 0  # hybrid: shared attn block after every k ssm layers
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # e.g. 1500 mel frames
+    # frontend stubs (audio/vlm): inputs are precomputed embeddings
+    embed_inputs: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "dots_no_batch"
+    attn_impl: str = "naive"  # "chunked"/"flash" (see §Perf)
+    bf16_elementwise: bool = False  # pure-bf16 norms/activations (§Perf)
+    mla_absorbed_decode: bool = False  # latent-space MLA decode (§Perf)
+    moe_impl: str = "auto"  # "local_ep" = shard_map local dispatch (§Perf)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS roofline)."""
+        d, f, l, v = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        if self.mla:
+            attn = (
+                self.d_model * self.q_lora_rank
+                + self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                + self.d_model * (self.kv_lora_rank + self.qk_rope_dim)
+                + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.n_experts:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        elif self.family in ("ssm",):
+            ffn = 0
+        else:
+            ffn = 3 * d * f
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            d_inner = self.ssm_expand * d
+            nh = d_inner // self.ssm_head_dim
+            ssm = (
+                d * (2 * d_inner + 2 * self.ssm_groups * self.ssm_state + nh)
+                + d_inner * d
+            )
+        if self.family == "ssm":
+            per_layer = ssm
+        elif self.family == "hybrid":
+            per_layer = ssm
+        else:
+            per_layer = attn + ffn
+        total = l * per_layer + v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "hybrid" and self.attn_every:
+            total += attn + 3 * d * f  # one shared transformer block
+        if self.encoder_layers:
+            total += self.encoder_layers * (2 * attn + 2 * d * f)
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        inactive = l * (self.n_experts - self.top_k) * 3 * d * f
+        return self.n_params() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment skip rules (documented in DESIGN.md §7)."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, "O(1)-state decode"
+        if cfg.sliding_window and cfg.sliding_window < shape.seq_len:
+            return True, "SWA rolling cache (sub-quadratic)"
+        return False, (
+            "pure full attention: 524k dense KV decode is quadratic-history; "
+            "assignment says skip"
+        )
+    if cfg.encoder_layers and shape.name == "prefill_32k":
+        return True, "decoder prefill vs encoder stub"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, batch_override=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation — this is what dryrun.py lowers against, and what
+    smoke tests materialize (at reduced sizes) with jnp.zeros.
+    """
+    b = batch_override or shape.global_batch
+    t = shape.seq_len
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.dtype)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((3, b, t), jnp.int32)
+        else:
+            specs["positions"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep cache
+        if cfg.embed_inputs:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.dtype)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+        else:
+            specs["positions"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    if cfg.encoder_layers:
+        enc_t = cfg.encoder_seq or 1500
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, enc_t, cfg.d_model), cfg.dtype)
+    return specs

@@ -1,0 +1,14 @@
+"""GLM4-9B [hf:THUDM/glm-4-9b]: 40L d4096 32H GQA(kv=2) d_ff 13696,
+vocab 151552, RoPE."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="glm4-9b", family="dense", n_layers=40, d_model=4096, n_heads=32,
+    n_kv_heads=2, d_ff=13696, vocab_size=151552, head_dim=128, rope_theta=1e4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, remat=False,
+)

@@ -1,0 +1,16 @@
+"""grok-1 314B MoE [hf:xai-org/grok-1; unverified]: 64L d6144 48H GQA(kv=8)
+d_ff 32768, 8 experts top-2, vocab 131072. Attn logit softcap 30 per the
+public config."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=32768, vocab_size=131072, head_dim=128, n_experts=8,
+    top_k=2, logit_softcap=30.0, rope_theta=1e4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, n_experts=4, capacity_factor=4.0, remat=False,
+)

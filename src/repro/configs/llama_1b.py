@@ -1,0 +1,14 @@
+"""LLaMA-1B — the paper's own Table-5 pretraining model (GaLore recipe:
+24L d2048 32H MHA d_ff 5461, vocab 32000; rank 512, T_u 40, λ 5)."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-1b", family="dense", n_layers=24, d_model=2048, n_heads=32,
+    n_kv_heads=32, d_ff=5461, vocab_size=32000, head_dim=64,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256, head_dim=16, remat=False,
+)

@@ -1,0 +1,15 @@
+"""Mamba2-2.7B [arXiv:2405.21060; unverified]: 64L d2560 attention-free SSD,
+d_state 128, head_dim 64, expand 2, vocab 50280."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560, n_heads=1,
+    n_kv_heads=1, d_ff=0, vocab_size=50280, ssm_state=128, ssm_head_dim=64,
+    ssm_expand=2, ssm_conv=4, ssm_chunk=256,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, vocab_size=256, ssm_state=16,
+    ssm_head_dim=16, ssm_chunk=8, remat=False,
+)

@@ -1,0 +1,18 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: 62L d2560 40H d_ff 6400
+vocab 73448 with Multi-head Latent Attention (q_lora 768, kv_lora 256,
+qk_nope 64, qk_rope 32, v_head 64). MLA compresses the *weights/cache*;
+COAP compresses the *optimizer* — orthogonal (DESIGN.md §7)."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b", family="dense", n_layers=62, d_model=2560, n_heads=40,
+    n_kv_heads=40, d_ff=6400, vocab_size=73448, mla=True, q_lora_rank=768,
+    kv_lora_rank=256, qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256, q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=8,
+    qk_rope_dim=8, v_head_dim=8, remat=False,
+)

@@ -1,0 +1,15 @@
+"""Mixtral-8x22B [arXiv:2401.04088; hf]: 56L d6144 48H GQA(kv=8) d_ff 16384,
+8 experts top-2, sliding-window attention (4096), vocab 32768."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b", family="moe", n_layers=56, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=16384, vocab_size=32768, head_dim=128, n_experts=8,
+    top_k=2, sliding_window=4096, rope_theta=1e6,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, n_experts=4, capacity_factor=4.0, sliding_window=8, remat=False,
+)

@@ -1,0 +1,18 @@
+"""Qwen2-VL-72B [arXiv:2409.12191; hf]: 80L d8192 64H GQA(kv=8) d_ff 29568,
+vocab 152064, M-RoPE (sections 16/24/24 over head_dim 128), qkv bias.
+Vision frontend is a STUB — input_specs provides precomputed patch
+embeddings plus (3, B, T) multimodal position ids."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b", family="vlm", n_layers=80, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=29568, vocab_size=152064, head_dim=128,
+    mrope_sections=(16, 24, 24), qkv_bias=True, rope_theta=1e6,
+    embed_inputs=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, mrope_sections=(2, 3, 3), remat=False,
+)

@@ -1,0 +1,33 @@
+"""Architecture registry: --arch <id> resolution for launch/ and tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_MODULES: Dict[str, str] = {
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1p1b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "llama-1b": "repro.configs.llama_1b",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "llama-1b"]
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str):
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke(name: str):
+    return importlib.import_module(_MODULES[name]).SMOKE

@@ -1,0 +1,15 @@
+"""TinyLlama-1.1B [arXiv:2401.02385; hf]: 22L d2048 32H GQA(kv=4)
+d_ff 5632, vocab 32000 (llama2 arch, small)."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="tinyllama-1.1b", family="dense", n_layers=22, d_model=2048,
+    n_heads=32, n_kv_heads=4, d_ff=5632, vocab_size=32000, head_dim=64,
+    rope_theta=1e4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, remat=False,
+)

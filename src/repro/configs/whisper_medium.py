@@ -1,0 +1,17 @@
+"""Whisper-medium [arXiv:2212.04356; unverified]: enc-dec, 24+24L d1024 16H
+d_ff 4096, vocab 51865. Conv mel frontend is a STUB — input_specs provides
+precomputed frame embeddings (B, 1500, d). Decoder uses RoPE in this impl
+(orig uses learned positions; mechanical simplification, DESIGN.md §8)."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="audio", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=51865, head_dim=64,
+    encoder_layers=24, encoder_seq=1500,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256, head_dim=16, encoder_layers=2, encoder_seq=16, remat=False,
+)

@@ -1,0 +1,17 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: 38 Mamba2 layers (d2048, ssm_state 64)
+with ONE shared attention+MLP block applied every 6 layers (6 applications),
+GQA kv=32, d_ff 8192 in the shared block, vocab 32000."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32000, head_dim=64,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, attn_every=6,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256, head_dim=16, ssm_state=16, ssm_head_dim=16, attn_every=2,
+    ssm_chunk=8, remat=False,
+)

@@ -1,0 +1,35 @@
+"""COAP core: correlation-aware low-rank gradient projection (the paper).
+
+Public surface:
+  * ``make_optimizer``            — factory for every optimizer in the paper
+                                    (AdamW/Adafactor × {full, COAP, GaLore,
+                                    Flora} × {fp32/bf16, 8-bit}).
+  * ``scale_by_projected_adam``   — Algorithm 1 (and GaLore/Flora variants).
+  * ``scale_by_projected_adafactor`` — Algorithm 2.
+  * ``correlation``               — Eqn 6 objective + closed-form gradient.
+  * ``recalibrate``               — Eqn 7 low-cost SVD.
+"""
+from repro.core.api import make_optimizer, OptimizerConfig
+from repro.core.coap_adam import (
+    scale_by_projected_adam,
+    coap_adamw,
+    galore_adamw,
+    flora_adamw,
+)
+from repro.core.coap_adafactor import scale_by_projected_adafactor, coap_adafactor
+from repro.core import correlation, recalibrate, projector, accounting
+
+__all__ = [
+    "make_optimizer",
+    "OptimizerConfig",
+    "scale_by_projected_adam",
+    "scale_by_projected_adafactor",
+    "coap_adamw",
+    "coap_adafactor",
+    "galore_adamw",
+    "flora_adamw",
+    "correlation",
+    "recalibrate",
+    "projector",
+    "accounting",
+]

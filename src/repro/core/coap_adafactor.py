@@ -1,0 +1,214 @@
+"""Algorithm 2: Adafactor with COAP (and GaLore/Flora strategy variants).
+
+Projected leaves hold: ``P (n,r)``, first moment ``M_proj (m,r)``, and the
+*factored* second moment of the projected gradient: ``R (m,)``, ``C (r,)``
+with the paper's β₂ schedule ``β₂ = 1 − t^{−γ}``. Per Algorithm 2:
+
+    R_t = β₂R + (1−β₂)·Sum(G_proj², −1)
+    C_t = β₂C + (1−β₂)·Sum(G_proj², −2)
+    V̂_t = sqrt(Mean(R_t) / (R_t C_t))          # note: reciprocal-sqrt form
+    ΔW_proj = β₁·M + (1−β₁)·η·V̂ ⊙ G_proj
+    W ← W − ΔW_proj Pᵀ
+
+FAITHFULNESS NOTE: Algorithm 2 as printed also contains the line
+``M_t ← β₁M + (1−β₁)G_proj`` which is unit-inconsistent with the ΔW line
+(it would subtract an *unscaled* gradient EMA from W). We implement the
+self-consistent reading — M accumulates the scaled update, i.e.
+``M_t = ΔW_proj`` (momentum-on-update, as in Adafactor-with-momentum) — and
+expose ``interpretation='literal'`` for the verbatim text. The consistent
+reading reproduces the paper's convergence behaviour in our small-scale
+benchmarks; the literal one diverges for any η < 1, corroborating the typo
+(see DESIGN.md §8).
+
+Because learning rate is *inside* ΔW here, this transformation is terminal:
+chain it with ``scale(-1)`` only (no extra lr scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import correlation, projector, recalibrate
+from repro.core.coap_adam import ProjectedAdamConfig, _refresh_p, _maybe_transplant
+from repro.core.projector import (
+    KIND_DENSE,
+    KIND_PROJECT,
+    ProjectionRules,
+    path_str,
+)
+from repro.optim.transform import GradientTransformation, chain, scale
+
+_EPS = 1e-30
+
+
+class ProjFactorLeaf(NamedTuple):
+    p: Any  # (..., n, r)
+    m: Any  # (..., M, r)
+    row: Any  # (..., M)
+    col: Any  # (..., r)
+
+
+class DenseFactorLeaf(NamedTuple):
+    row: Any
+    col: Any
+    nu: Any  # unfactored fallback for <2-D
+
+
+class ProjectedAdafactorState(NamedTuple):
+    count: jnp.ndarray
+    leaves: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectedAdafactorConfig(ProjectedAdamConfig):
+    gamma: float = 0.8  # β₂ decay-rate exponent
+    learning_rate: float = 1e-4  # η lives inside ΔW (Algorithm 2)
+    interpretation: str = "consistent"  # 'consistent' | 'literal'
+
+
+def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTransformation:
+    def init_fn(params):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        key = jax.random.key(cfg.seed)
+        leaves = []
+        for idx, (kp, leaf) in enumerate(flat):
+            spec = cfg.rules.spec_for(path_str(kp), leaf.shape)
+            if spec.kind == KIND_PROJECT:
+                p0 = projector.init_p(
+                    jax.random.fold_in(key, idx), leaf.shape, spec, jnp.float32
+                )
+                msh = projector.moment_shape(leaf.shape, spec)
+                leaves.append(
+                    ProjFactorLeaf(
+                        p=p0,
+                        m=jnp.zeros(msh, jnp.float32),
+                        row=jnp.zeros(msh[:-1], jnp.float32),
+                        col=jnp.zeros(msh[:-2] + msh[-1:], jnp.float32),
+                    )
+                )
+            else:
+                # Dense leaves: classic Adafactor (factored iff ndim >= 2).
+                if leaf.ndim >= 2:
+                    leaves.append(
+                        DenseFactorLeaf(
+                            row=jnp.zeros(leaf.shape[:-1], jnp.float32),
+                            col=jnp.zeros(leaf.shape[:-2] + leaf.shape[-1:], jnp.float32),
+                            nu=jnp.zeros((1,), jnp.float32),
+                        )
+                    )
+                else:
+                    leaves.append(
+                        DenseFactorLeaf(
+                            row=jnp.zeros((1,), jnp.float32),
+                            col=jnp.zeros((1,), jnp.float32),
+                            nu=jnp.zeros(leaf.shape, jnp.float32),
+                        )
+                    )
+        return ProjectedAdafactorState(
+            count=jnp.zeros([], jnp.int32),
+            leaves=jax.tree_util.tree_unflatten(treedef, leaves),
+        )
+
+    def _vhat(row, col):
+        """V̂ = sqrt(Mean(R)/(R C)) — the reciprocal-sqrt normalizer."""
+        mean_r = jnp.mean(row, axis=-1, keepdims=True)
+        denom = row[..., :, None] * col[..., None, :] + _EPS
+        return jnp.sqrt(mean_r[..., None] / denom)
+
+    def _update_proj(leaf: ProjFactorLeaf, g, spec, count, t, idx, b2):
+        gc = projector.to_canonical(g, spec).astype(jnp.float32)
+        p_old = leaf.p
+        new_p, refreshed = _refresh_p(cfg, spec, p_old, gc, leaf.m, count, idx)
+        m = _maybe_transplant(cfg, leaf.m, p_old, new_p, refreshed)
+        g_proj = projector.project(gc, new_p)
+        g2 = jnp.square(g_proj)
+        new_row = b2 * leaf.row + (1.0 - b2) * jnp.sum(g2, axis=-1)
+        new_col = b2 * leaf.col + (1.0 - b2) * jnp.sum(g2, axis=-2)
+        vhat = _vhat(new_row, new_col)
+        if cfg.interpretation == "literal":
+            new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
+            delta = cfg.b1 * new_m + (1.0 - cfg.b1) * cfg.learning_rate * vhat * g_proj
+        else:
+            delta = cfg.b1 * m + (1.0 - cfg.b1) * cfg.learning_rate * vhat * g_proj
+            new_m = delta  # momentum over scaled updates (consistent units)
+        upd_c = projector.backproject(delta, new_p)
+        upd = projector.from_canonical(upd_c, spec) * cfg.update_scale
+        return upd.astype(g.dtype), ProjFactorLeaf(
+            p=new_p, m=new_m, row=new_row, col=new_col
+        )
+
+    def _update_dense(leaf: DenseFactorLeaf, g, t, b2):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + _EPS
+        if g.ndim >= 2:
+            new_row = b2 * leaf.row + (1.0 - b2) * jnp.sum(g2, axis=-1)
+            new_col = b2 * leaf.col + (1.0 - b2) * jnp.sum(g2, axis=-2)
+            vhat = _vhat(new_row, new_col)
+            upd = cfg.learning_rate * vhat * g32
+            new_leaf = DenseFactorLeaf(row=new_row, col=new_col, nu=leaf.nu)
+        else:
+            new_nu = b2 * leaf.nu + (1.0 - b2) * g2
+            upd = cfg.learning_rate * g32 / jnp.sqrt(new_nu + _EPS)
+            new_leaf = DenseFactorLeaf(row=leaf.row, col=leaf.col, nu=new_nu)
+        return upd.astype(g.dtype), new_leaf
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count
+        t = count + 1
+        b2 = 1.0 - (t.astype(jnp.float32)) ** (-cfg.gamma)
+        flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
+        flat_s = treedef.flatten_up_to(state.leaves)
+        new_updates, new_leaves = [], []
+        for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
+            spec = cfg.rules.spec_for(path_str(kp), g.shape)
+            if spec.kind == KIND_PROJECT:
+                u, nl = _update_proj(leaf, g, spec, count, t, idx, b2)
+            else:
+                u, nl = _update_dense(leaf, g, t, b2)
+            new_updates.append(u)
+            new_leaves.append(nl)
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_updates),
+            ProjectedAdafactorState(
+                count=count + 1,
+                leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
+            ),
+        )
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def coap_adafactor(
+    learning_rate: float,
+    rules: ProjectionRules,
+    *,
+    strategy: str = "coap",
+    b1: float = 0.9,
+    gamma: float = 0.8,
+    t_update: int = 200,
+    lam: int = 5,
+    eqn6_lr: float = 0.1,
+    eqn6_steps: int = 1,
+    seed: int = 0,
+    update_scale: float = 1.0,
+) -> GradientTransformation:
+    """Adafactor+COAP per Algorithm 2 (η inside; terminal sign flip only)."""
+    cfg = ProjectedAdafactorConfig(
+        rules=rules,
+        strategy=strategy,
+        b1=b1,
+        gamma=gamma,
+        t_update=t_update,
+        lam=lam,
+        eqn6_lr=eqn6_lr,
+        eqn6_steps=eqn6_steps,
+        seed=seed,
+        learning_rate=learning_rate,
+        update_scale=update_scale,
+    )
+    return chain(scale_by_projected_adafactor(cfg), scale(-1.0))

@@ -1,0 +1,392 @@
+"""Algorithm 1: Adam with COAP — plus GaLore/Flora strategy variants.
+
+One GradientTransformation covers the whole family because the only
+difference between COAP, GaLore and Flora is the projection-refresh rule:
+
+  * ``coap``   — every ``T_u`` steps refresh P by Eqn-6 SGD; every
+                 ``λ·T_u`` steps recalibrate by Eqn-7 low-cost SVD; at t=0
+                 initialize by Eqn 7 from the first gradient (Algorithm 1).
+  * ``galore`` — every ``T_u`` steps recompute P as the truncated SVD of the
+                 current gradient (O(mn²)).
+  * ``flora``  — resample a Gaussian P every ``T_u`` steps (paper: every
+                 step, T_u=1) and transplant the first moment into the new
+                 subspace.
+
+Leaves are classified statically (see ``projector.ProjectionRules``):
+2-D-matrix leaves (with arbitrary leading stack axes — scan-over-layers
+weights ``(L,m,n)``, per-expert weights ``(L,E,m,n)``) are projected;
+conv ``(O,I,K1,K2)`` kernels take the Tucker-2 path (Algorithm 3, in
+``core/conv.py``); everything else gets dense Adam. Refreshes happen inside
+the jitted step under ``lax.cond`` — no host round-trips (DESIGN.md §3).
+
+Optimizer states are fp32 by default or block-wise int8 when
+``quantize=True`` (8-bit COAP / 8-bit Adam baselines, via kernels/quant8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import conv as conv_mod
+from repro.core import correlation, projector, recalibrate
+from repro.core.projector import (
+    KIND_CONV,
+    KIND_DENSE,
+    KIND_PROJECT,
+    ProjSpec,
+    ProjectionRules,
+    path_str,
+)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.optim.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    scale_by_learning_rate,
+)
+
+STRATEGIES = ("coap", "galore", "flora")
+
+
+class ProjLeaf(NamedTuple):
+    """Low-rank leaf state: P (…,n,r); moments on the large side (…,m,r)."""
+
+    p: Any
+    m: Any
+    v: Any
+    m_scale: Any  # int8-codec scales; zeros((1,)) placeholders when fp32
+    v_scale: Any
+
+
+class DenseLeaf(NamedTuple):
+    mu: Any
+    nu: Any
+    mu_scale: Any
+    nu_scale: Any
+
+
+class ConvLeaf(NamedTuple):
+    """Tucker-2 leaf (Algorithm 3): two factor projections + core moments."""
+
+    p_o: Any  # (O, r_O)
+    p_i: Any  # (I, r_I)
+    m: Any  # (r_O, r_I, K1, K2)
+    v: Any
+    m_scale: Any
+    v_scale: Any
+
+
+class ProjectedAdamState(NamedTuple):
+    count: jnp.ndarray
+    leaves: Any  # pytree congruent with params; leaf = Proj/Dense/ConvLeaf
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectedAdamConfig:
+    rules: ProjectionRules
+    strategy: str = "coap"
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    t_update: int = 200  # T_u (refresh interval; GaLore SVD interval; Flora=1)
+    lam: int = 5  # λ: Eqn-7 recalibration every λ·T_u steps
+    eqn6_lr: float = 0.1  # paper appendix: SGD lr for Eqn 6, default 0.1
+    eqn6_steps: int = 1
+    eqn6_normalize: bool = False  # beyond-paper scale-invariant Eqn-6 step
+    seed: int = 0
+    state_dtype: Any = jnp.float32
+    quantize: bool = False  # 8-bit block-wise states
+    quant_block: int = kref.QUANT_BLOCK
+    update_scale: float = 1.0  # GaLore's α (their repo default 0.25)
+    moment_transplant: bool = False  # carry M into the new subspace at refresh
+    use_fused_kernel: bool = True  # route through kernels/ops (Pallas on TPU)
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
+
+
+def _zeros_scales(shape_numel: int, block: int):
+    nblocks = -(-shape_numel // block)
+    return jnp.zeros((nblocks,), jnp.float32)
+
+
+def _store(x: jnp.ndarray, cfg: ProjectedAdamConfig):
+    """fp32 array -> (stored, scale) under the configured codec."""
+    if not cfg.quantize:
+        return x.astype(cfg.state_dtype), jnp.zeros((1,), jnp.float32)
+    q, s = kops.quantize_blockwise(x, block=cfg.quant_block)
+    return q, s
+
+
+def _load(stored: jnp.ndarray, scale: jnp.ndarray, shape, cfg: ProjectedAdamConfig):
+    if not cfg.quantize:
+        return stored.astype(jnp.float32)
+    return kops.dequantize_blockwise(stored, scale, tuple(shape), block=cfg.quant_block)
+
+
+def _init_stored(shape, cfg: ProjectedAdamConfig):
+    numel = 1
+    for s in shape:
+        numel *= int(s)
+    if not cfg.quantize:
+        return jnp.zeros(shape, cfg.state_dtype), jnp.zeros((1,), jnp.float32)
+    nblocks = -(-numel // cfg.quant_block)
+    return (
+        jnp.zeros((nblocks, cfg.quant_block), jnp.int8),
+        jnp.zeros((nblocks,), jnp.float32),
+    )
+
+
+def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
+    return cfg.rules.spec_for(path, shape)
+
+
+def _refresh_p(
+    cfg: ProjectedAdamConfig,
+    spec: ProjSpec,
+    p: jnp.ndarray,
+    gc: jnp.ndarray,
+    m_full: jnp.ndarray,
+    count: jnp.ndarray,
+    leaf_idx: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Strategy-specific P refresh. Returns (new_p, refreshed?bool)."""
+    if cfg.strategy == "coap":
+        t_u = cfg.t_update
+        do_ref = (count % t_u) == 0
+        do_recal = (count % (cfg.lam * t_u)) == 0
+
+        def refreshed():
+            return lax.cond(
+                do_recal,
+                lambda: recalibrate.lowcost_svd(gc, p),
+                lambda: correlation.sgd_update(
+                    p, gc, m_full, lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
+                    normalize=cfg.eqn6_normalize,
+                ),
+            )
+
+        new_p = lax.cond(do_ref, refreshed, lambda: p)
+        return new_p, do_ref
+    if cfg.strategy == "galore":
+        do_ref = (count % cfg.t_update) == 0
+        new_p = lax.cond(
+            do_ref, lambda: recalibrate.galore_svd(gc, spec.rank).astype(p.dtype),
+            lambda: p,
+        )
+        return new_p, do_ref
+    # flora
+    do_ref = (count % cfg.t_update) == 0
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.key(cfg.seed), leaf_idx), count)
+    new_p = lax.cond(
+        do_ref,
+        lambda: recalibrate.random_projection(key, gc.shape, spec.rank, p.dtype),
+        lambda: p,
+    )
+    return new_p, do_ref
+
+
+def _maybe_transplant(
+    cfg: ProjectedAdamConfig, m: jnp.ndarray, p_old, p_new, refreshed
+) -> jnp.ndarray:
+    """M_new = (M P_oldᵀ) P_new — keeps momentum direction across subspace
+    switches. Flora's mechanism; optional (off = Algorithm 1 verbatim) for
+    COAP/GaLore."""
+    transplant = cfg.strategy == "flora" or cfg.moment_transplant
+
+    if not transplant:
+        return m
+
+    def do():
+        restored = projector.backproject(m, p_old)
+        return projector.project(restored, p_new)
+
+    return lax.cond(refreshed, do, lambda: m)
+
+
+def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
+    """The regularizer ρ_t of paper Eqn 5 as a GradientTransformation.
+
+    Produces *positive* update directions (caller chains lr sign-flip).
+    """
+
+    def init_fn(params):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        key = jax.random.key(cfg.seed)
+        leaves = []
+        for idx, (kp, leaf) in enumerate(flat):
+            path = path_str(kp)
+            spec = _leaf_spec(cfg, path, leaf.shape)
+            if spec.kind == KIND_PROJECT:
+                p0 = projector.init_p(
+                    jax.random.fold_in(key, idx), leaf.shape, spec,
+                    cfg.state_dtype,
+                )
+                msh = projector.moment_shape(leaf.shape, spec)
+                m0, ms0 = _init_stored(msh, cfg)
+                v0, vs0 = _init_stored(msh, cfg)
+                leaves.append(ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0))
+            elif spec.kind == KIND_CONV:
+                po, pi = conv_mod.init_factors(
+                    jax.random.fold_in(key, idx), leaf.shape, spec
+                )
+                msh = conv_mod.core_shape(leaf.shape, spec)
+                m0, ms0 = _init_stored(msh, cfg)
+                v0, vs0 = _init_stored(msh, cfg)
+                leaves.append(
+                    ConvLeaf(p_o=po, p_i=pi, m=m0, v=v0, m_scale=ms0, v_scale=vs0)
+                )
+            else:
+                m0, ms0 = _init_stored(leaf.shape, cfg)
+                v0, vs0 = _init_stored(leaf.shape, cfg)
+                leaves.append(DenseLeaf(mu=m0, nu=v0, mu_scale=ms0, nu_scale=vs0))
+        return ProjectedAdamState(
+            count=jnp.zeros([], jnp.int32),
+            leaves=jax.tree_util.tree_unflatten(treedef, leaves),
+        )
+
+    def _update_proj_leaf(leaf: ProjLeaf, g, spec: ProjSpec, count, t, leaf_idx):
+        gc = projector.to_canonical(g, spec).astype(jnp.float32)
+        msh = projector.moment_shape(g.shape, spec)
+        m = _load(leaf.m, leaf.m_scale, msh, cfg)
+        v = _load(leaf.v, leaf.v_scale, msh, cfg)
+        p_old = leaf.p
+        new_p, refreshed = _refresh_p(cfg, spec, p_old, gc, m, count, leaf_idx)
+        m = _maybe_transplant(cfg, m, p_old, new_p, refreshed)
+        if cfg.use_fused_kernel and not cfg.quantize:
+            new_m, new_v, delta_proj = kops.coap_fused_update(
+                gc, new_p, m, v, t, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps
+            )
+        else:
+            g_proj = projector.project(gc, new_p)
+            new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
+            new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_proj)
+            tf = t.astype(jnp.float32)
+            delta_proj = (new_m / (1.0 - cfg.b1**tf)) / (
+                jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+            )
+            if cfg.quantize:  # int8-v underflow guard (see kernels/ref.py)
+                delta_proj = jnp.clip(delta_proj, -kref.QUANT_DELTA_CLIP,
+                                      kref.QUANT_DELTA_CLIP)
+        update_c = projector.backproject(delta_proj, new_p)
+        update = projector.from_canonical(update_c, spec) * cfg.update_scale
+        sm, sms = _store(new_m, cfg)
+        sv, svs = _store(new_v, cfg)
+        return update.astype(g.dtype), ProjLeaf(
+            p=new_p, m=sm, v=sv, m_scale=sms, v_scale=svs
+        )
+
+    def _update_dense_leaf(leaf: DenseLeaf, g, count, t):
+        g32 = g.astype(jnp.float32)
+        mu = _load(leaf.mu, leaf.mu_scale, g.shape, cfg)
+        nu = _load(leaf.nu, leaf.nu_scale, g.shape, cfg)
+        new_mu = cfg.b1 * mu + (1.0 - cfg.b1) * g32
+        new_nu = cfg.b2 * nu + (1.0 - cfg.b2) * jnp.square(g32)
+        tf = t.astype(jnp.float32)
+        upd = (new_mu / (1.0 - cfg.b1**tf)) / (
+            jnp.sqrt(new_nu / (1.0 - cfg.b2**tf)) + cfg.eps
+        )
+        if cfg.quantize:  # int8-v underflow guard (see kernels/ref.py)
+            upd = jnp.clip(upd, -kref.QUANT_DELTA_CLIP, kref.QUANT_DELTA_CLIP)
+        smu, smus = _store(new_mu, cfg)
+        snu, snus = _store(new_nu, cfg)
+        return upd.astype(g.dtype), DenseLeaf(
+            mu=smu, nu=snu, mu_scale=smus, nu_scale=snus
+        )
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count  # 0-based: first call refreshes/initializes P
+        t = count + 1  # 1-based for bias correction (Algorithm 1)
+        flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
+        flat_s = treedef.flatten_up_to(state.leaves)
+        new_updates, new_leaves = [], []
+        for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
+            path = path_str(kp)
+            spec = _leaf_spec(cfg, path, g.shape)
+            if spec.kind == KIND_PROJECT:
+                u, nl = _update_proj_leaf(leaf, g, spec, count, t, idx)
+            elif spec.kind == KIND_CONV:
+                u, nl = conv_mod.update_conv_leaf(cfg, leaf, g, spec, count, t, idx)
+            else:
+                u, nl = _update_dense_leaf(leaf, g, count, t)
+            new_updates.append(u)
+            new_leaves.append(nl)
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_updates),
+            ProjectedAdamState(
+                count=count + 1,
+                leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
+            ),
+        )
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# User-facing optimizers
+# ---------------------------------------------------------------------------
+def _projected_adamw(
+    strategy: str,
+    learning_rate,
+    rules: ProjectionRules,
+    *,
+    b1=0.9,
+    b2=0.999,
+    eps=1e-8,
+    weight_decay=0.0,
+    t_update=200,
+    lam=5,
+    eqn6_lr=0.1,
+    eqn6_steps=1,
+    seed=0,
+    quantize=False,
+    state_dtype=jnp.float32,
+    update_scale=1.0,
+    moment_transplant=False,
+    mask=None,
+) -> GradientTransformation:
+    cfg = ProjectedAdamConfig(
+        rules=rules,
+        strategy=strategy,
+        b1=b1,
+        b2=b2,
+        eps=eps,
+        t_update=t_update,
+        lam=lam,
+        eqn6_lr=eqn6_lr,
+        eqn6_steps=eqn6_steps,
+        seed=seed,
+        quantize=quantize,
+        state_dtype=state_dtype,
+        update_scale=update_scale,
+        moment_transplant=moment_transplant,
+    )
+    txs = [scale_by_projected_adam(cfg)]
+    if weight_decay:
+        txs.append(add_decayed_weights(weight_decay, mask=mask))
+    txs.append(scale_by_learning_rate(learning_rate))
+    return chain(*txs)
+
+
+def coap_adamw(learning_rate, rules: ProjectionRules, **kw) -> GradientTransformation:
+    """AdamW + COAP (paper Algorithm 1 + decoupled weight decay)."""
+    return _projected_adamw("coap", learning_rate, rules, **kw)
+
+
+def galore_adamw(learning_rate, rules: ProjectionRules, **kw) -> GradientTransformation:
+    """GaLore baseline. Note their repo's update scale α defaults to 0.25."""
+    kw.setdefault("update_scale", 0.25)
+    return _projected_adamw("galore", learning_rate, rules, **kw)
+
+
+def flora_adamw(learning_rate, rules: ProjectionRules, **kw) -> GradientTransformation:
+    """Flora baseline: fresh random projections (+ moment transplant)."""
+    kw.setdefault("t_update", 1)
+    return _projected_adamw("flora", learning_rate, rules, **kw)

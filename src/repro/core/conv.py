@@ -1,0 +1,145 @@
+"""Algorithm 3: COAP for conv tensors via Tucker-2 factorized projection.
+
+A conv weight ``W ∈ R^{O×I×K1×K2}`` gets two factor projections
+``P_O ∈ R^{O×r_O}`` and ``P_I ∈ R^{I×r_I}`` (kernel dims are tiny and left
+alone — the appendix's Tucker-2 ablation shows this beats Tucker-1/full
+Tucker). The projected gradient is the Tucker-2 core
+
+    G_proj = G ×₁ P_Oᵀ ×₂ P_Iᵀ  ∈ R^{r_O×r_I×K1×K2}
+
+and moments live in that core shape. Each factor is refreshed with the same
+Eqn-6 / Eqn-7 machinery as the matrix case applied to the mode-1 / mode-2
+unfoldings of G (appendix §1.5): for the ``P_O`` update the canonical matrix
+is ``unfold₁(G)ᵀ ∈ R^{(I·K1·K2)×O}`` so the half-restored first moment
+``M_proj ×₂ P_I`` provides the direction term.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import correlation, recalibrate
+from repro.core.projector import ProjSpec
+
+
+def init_factors(key, w_shape, spec: ProjSpec):
+    o, i = int(w_shape[0]), int(w_shape[1])
+    ko, ki = jax.random.split(key)
+    p_o = jax.random.normal(ko, (o, spec.rank_o), jnp.float32) / jnp.sqrt(
+        jnp.asarray(spec.rank_o, jnp.float32)
+    )
+    p_i = jax.random.normal(ki, (i, spec.rank_i), jnp.float32) / jnp.sqrt(
+        jnp.asarray(spec.rank_i, jnp.float32)
+    )
+    return p_o, p_i
+
+
+def core_shape(w_shape, spec: ProjSpec) -> Tuple[int, ...]:
+    return (spec.rank_o, spec.rank_i) + tuple(int(s) for s in w_shape[2:])
+
+
+def mode1_canonical(g: jnp.ndarray) -> jnp.ndarray:
+    """(O,I,K1,K2) -> unfold₁ᵀ = (I·K1·K2, O): canonical m≥n matrix whose
+    right-projection P is P_O."""
+    o = g.shape[0]
+    return jnp.moveaxis(g, 0, -1).reshape(-1, o)
+
+
+def mode2_canonical(g: jnp.ndarray) -> jnp.ndarray:
+    """(O,I,K1,K2) -> (O·K1·K2, I): right-projection P is P_I."""
+    i = g.shape[1]
+    return jnp.moveaxis(g, 1, -1).reshape(-1, i)
+
+
+def project_core(g: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
+    """G ×₁ P_Oᵀ ×₂ P_Iᵀ."""
+    return jnp.einsum("oikl,oa,ib->abkl", g, p_o, p_i)
+
+
+def restore_core(core: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
+    """ΔW = core ×₁ P_O ×₂ P_I."""
+    return jnp.einsum("abkl,oa,ib->oikl", core, p_o, p_i)
+
+
+def _half_restored_m(m_core, p_o, p_i, mode: int):
+    """First moment restored on the *other* mode, reshaped to the canonical
+    projected layout for the Eqn-6 direction term of this mode's factor."""
+    if mode == 1:  # updating P_O: restore mode-2 -> (r_O, I, K1, K2)
+        half = jnp.einsum("abkl,ib->aikl", m_core, p_i)
+        # canonical m_proj: (I*K1*K2, r_O)
+        return jnp.moveaxis(half, 0, -1).reshape(-1, p_o.shape[1])
+    half = jnp.einsum("abkl,oa->obkl", m_core, p_o)  # (O, r_I, K1, K2)
+    return jnp.moveaxis(half, 1, -1).reshape(-1, p_i.shape[1])
+
+
+def _refresh_factor(cfg, p, g_canon, m_proj_canon, count, leaf_idx, rank, mode):
+    """Same schedule as the matrix case (strategy-aware)."""
+    if cfg.strategy == "coap":
+        do_ref = (count % cfg.t_update) == 0
+        do_recal = (count % (cfg.lam * cfg.t_update)) == 0
+
+        def refreshed():
+            return lax.cond(
+                do_recal,
+                lambda: recalibrate.lowcost_svd(g_canon, p),
+                lambda: correlation.sgd_update(
+                    p, g_canon, m_proj_canon, lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
+                    normalize=cfg.eqn6_normalize,
+                ),
+            )
+
+        return lax.cond(do_ref, refreshed, lambda: p)
+    if cfg.strategy == "galore":
+        do_ref = (count % cfg.t_update) == 0
+        return lax.cond(
+            do_ref,
+            lambda: recalibrate.galore_svd(g_canon, rank).astype(p.dtype),
+            lambda: p,
+        )
+    do_ref = (count % cfg.t_update) == 0
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(cfg.seed), 7919 * leaf_idx + mode), count
+    )
+    return lax.cond(
+        do_ref,
+        lambda: recalibrate.random_projection(key, g_canon.shape, rank, p.dtype),
+        lambda: p,
+    )
+
+
+def update_conv_leaf(cfg, leaf, g, spec: ProjSpec, count, t, leaf_idx):
+    """One Algorithm-3 step for a conv leaf. Returns (update, new_leaf)."""
+    from repro.core.coap_adam import ConvLeaf, _load, _store  # circular-safe
+
+    g32 = g.astype(jnp.float32)
+    csh = core_shape(g.shape, spec)
+    m = _load(leaf.m, leaf.m_scale, csh, cfg)
+    v = _load(leaf.v, leaf.v_scale, csh, cfg)
+
+    g1 = mode1_canonical(g32)
+    g2 = mode2_canonical(g32)
+    m1 = _half_restored_m(m, leaf.p_o, leaf.p_i, mode=1)
+    m2 = _half_restored_m(m, leaf.p_o, leaf.p_i, mode=2)
+    p_o = _refresh_factor(cfg, leaf.p_o, g1, m1, count, leaf_idx, spec.rank_o, 1)
+    p_i = _refresh_factor(cfg, leaf.p_i, g2, m2, count, leaf_idx, spec.rank_i, 2)
+
+    g_core = project_core(g32, p_o, p_i)
+    new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_core
+    new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_core)
+    tf = t.astype(jnp.float32)
+    delta_core = (new_m / (1.0 - cfg.b1**tf)) / (
+        jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+    )
+    if cfg.quantize:  # int8-v underflow guard (see kernels/ref.py)
+        from repro.kernels.ref import QUANT_DELTA_CLIP
+
+        delta_core = jnp.clip(delta_core, -QUANT_DELTA_CLIP, QUANT_DELTA_CLIP)
+    update = restore_core(delta_core, p_o, p_i) * cfg.update_scale
+    sm, sms = _store(new_m, cfg)
+    sv, svs = _store(new_v, cfg)
+    return update.astype(g.dtype), ConvLeaf(
+        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs
+    )

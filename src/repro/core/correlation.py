@@ -1,0 +1,145 @@
+"""Eqn 6: inter-projection correlation-aware P update.
+
+Objective (paper Eqn 6):
+
+    L(P) = MSE(Ĝ, G) · (1 − CosSim(M̂, G)),
+    Ĝ = G P Pᵀ,   M̂ = M_proj Pᵀ,
+    CosSim = row-wise cosine averaged over the m rows (appendix Eqn 5).
+
+We implement the appendix's closed-form gradients (Eqn 4 for the MSE term,
+Eqn 6 for the cosine term) and combine them with the product rule:
+
+    ∇L = ∇MSE · (1 − CosSim) − MSE · ∇CosSim.
+
+NOTE ON A PAPER TYPO: appendix Eqn 3/7 write the combination as
+``∂MSE·(1−CosSim) + ∂CosSim·MSE``; descending that expression *decreases*
+cosine similarity, contradicting the stated goal (the direction term
+``1 − CosSim`` is minimized by *increasing* CosSim). The product rule gives
+the minus sign used here; ``tests/test_core_correlation.py`` verifies our
+closed form equals ``jax.grad`` of the printed objective to float32 precision,
+so the implementation is faithful to Eqn 6 itself.
+
+All functions broadcast over leading (layer/expert stack) axes; reductions
+are per-matrix so every stacked matrix optimizes its own P independently.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _dot_last2(a, b):
+    """Frobenius inner product over last two axes, keeps leading axes."""
+    return jnp.sum(a * b, axis=(-1, -2))
+
+
+def mse(g_hat: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Per-matrix MSE over last two axes (leading axes preserved)."""
+    d = g_hat - g
+    return jnp.mean(jnp.square(d), axis=(-1, -2))
+
+
+def cos_sim_rows(m_hat: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Appendix Eqn 5: mean over rows of row-cosine(m_hat_i, g_i)."""
+    num = jnp.sum(m_hat * g, axis=-1)
+    den = jnp.linalg.norm(m_hat, axis=-1) * jnp.linalg.norm(g, axis=-1) + _EPS
+    return jnp.mean(num / den, axis=-1)
+
+
+def objective(p: jnp.ndarray, g: jnp.ndarray, m_proj: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eqn 6, per matrix. p:(...,n,r) g:(...,m,n) m_proj:(...,m,r)."""
+    g_hat = jnp.einsum("...mr,...nr->...mn", jnp.einsum("...mn,...nr->...mr", g, p), p)
+    m_hat = jnp.einsum("...mr,...nr->...mn", m_proj, p)
+    return mse(g_hat, g) * (1.0 - cos_sim_rows(m_hat, g))
+
+
+def mse_grad(p: jnp.ndarray, g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Appendix Eqn 4: ∂MSE/∂P = 2/(mn) (ĜᵀGP − 2GᵀGP + GᵀĜP).
+
+    Returns (grad, mse_value). Computed right-to-left so cost is O(mnr),
+    never materializing the n×n Gram matrix.
+    """
+    m = g.shape[-2]
+    n = g.shape[-1]
+    gp = jnp.einsum("...mn,...nr->...mr", g, p)  # G P
+    g_hat = jnp.einsum("...mr,...nr->...mn", gp, p)  # G P Pᵀ
+    # ĜᵀGP = P (GP)ᵀ (GP)
+    t1 = jnp.einsum("...nr,...mr,...ms->...ns", p, gp, gp)
+    t2 = jnp.einsum("...mn,...mr->...nr", g, gp)  # GᵀG P
+    # t3 = Gᵀ Ĝ P = Gᵀ (G P Pᵀ) P — computed as Gᵀ @ (GP @ (PᵀP)).
+    ptp = jnp.einsum("...nr,...nk->...rk", p, p)
+    t3 = jnp.einsum("...mn,...mk->...nk", g, jnp.einsum("...mr,...rk->...mk", gp, ptp))
+    grad = (2.0 / (m * n)) * (t1 - 2.0 * t2 + t3)
+    val = mse(g_hat, g)
+    return grad, val
+
+
+def cos_grad(
+    p: jnp.ndarray, g: jnp.ndarray, m_proj: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Appendix Eqn 6: ∂CosSim/∂P = Dᵀ M_proj with
+    D_i = (1/m)(G_i/(‖M̂_i‖‖G_i‖) − M̂_i⟨M̂_i,G_i⟩/(‖M̂_i‖³‖G_i‖)).
+
+    Returns (grad, cos_value).
+    """
+    m = g.shape[-2]
+    m_hat = jnp.einsum("...mr,...nr->...mn", m_proj, p)
+    mh_norm = jnp.linalg.norm(m_hat, axis=-1, keepdims=True)  # (...,m,1)
+    g_norm = jnp.linalg.norm(g, axis=-1, keepdims=True)
+    inner = jnp.sum(m_hat * g, axis=-1, keepdims=True)  # (...,m,1)
+    denom = mh_norm * g_norm + _EPS
+    d = (g / denom - m_hat * inner / (mh_norm**3 * g_norm + _EPS)) / m
+    grad = jnp.einsum("...mn,...mr->...nr", d, m_proj)
+    val = jnp.mean(jnp.squeeze(inner / denom, -1), axis=-1)
+    return grad, val
+
+
+def loss_and_grad(
+    p: jnp.ndarray, g: jnp.ndarray, m_proj: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Closed-form value+gradient of Eqn 6 (product rule; see module note)."""
+    g_mse, v_mse = mse_grad(p, g)
+    g_cos, v_cos = cos_grad(p, g, m_proj)
+    one_minus = 1.0 - v_cos
+    val = v_mse * one_minus
+    grad = (
+        g_mse * one_minus[..., None, None] - g_cos * v_mse[..., None, None]
+    )
+    return val, grad
+
+
+def sgd_update(
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    m_proj: jnp.ndarray,
+    lr: float = 0.1,
+    steps: int = 1,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    """Paper: 'use SGD to iteratively update P_t' — lr 0.1 by default.
+
+    ``normalize=True`` is a beyond-paper option: Eqn 6's MSE factor makes the
+    P-gradient scale like ‖G‖², so for small/clipped gradients the refresh is
+    numerically inert at any fixed lr. Normalizing G to unit RMS per matrix
+    makes the step scale-invariant (the direction term is already
+    scale-free). Off by default for faithfulness; ablated in
+    benchmarks/table7_ablation.py.
+    """
+    dtype = p.dtype
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m_proj = m_proj.astype(jnp.float32)
+    if normalize:
+        rms = jnp.sqrt(jnp.mean(jnp.square(g), axis=(-1, -2), keepdims=True)) + _EPS
+        g = g / rms
+        m_proj = m_proj / rms
+
+    def body(_, p_cur):
+        _, grad = loss_and_grad(p_cur, g, m_proj)
+        return p_cur - lr * grad
+
+    return jax.lax.fori_loop(0, steps, body, p).astype(dtype)

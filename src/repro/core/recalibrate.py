@@ -1,0 +1,67 @@
+"""Eqn 7: occasional low-cost SVD recalibration of P.
+
+    Q_red      = QR_red(G P_{t-1})          # (m, r), orthonormal columns
+    U, Σ, Zᵀ   = SVD(Q_redᵀ G)              # SVD of an r×n matrix
+    P_t        = Z                          # (n, r)
+
+This is a projection-seeded randomized SVD: the previous subspace P_{t-1}
+plays the role of the sketch, so cost drops from O(mn²) (GaLore's full SVD)
+to O(mr² + nr²) while recalibrating toward the top right-singular subspace
+of the *current* gradient. Also provides GaLore's full-SVD projection for the
+baseline. Everything broadcasts over leading stack axes (vmapped linalg).
+
+SVD/QR run in float32 regardless of gradient dtype — bf16 Householder/Jacobi
+on TPU is ill-conditioned (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowcost_svd(g: jnp.ndarray, p_prev: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eqn 7. g: (..., m, n) canonical (m >= n); p_prev: (..., n, r)."""
+    dtype = p_prev.dtype
+    g32 = g.astype(jnp.float32)
+    p32 = p_prev.astype(jnp.float32)
+    y = jnp.einsum("...mn,...nr->...mr", g32, p32)  # G P
+    q, _ = jnp.linalg.qr(y)  # reduced QR, (..., m, r)
+    b = jnp.einsum("...mr,...mn->...rn", q, g32)  # Qᵀ G, (..., r, n)
+    _, _, zt = jnp.linalg.svd(b, full_matrices=False)  # zt: (..., r, n)
+    p_new = jnp.swapaxes(zt, -1, -2)  # (..., n, r)
+    return p_new.astype(dtype)
+
+
+def galore_svd(g: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """GaLore baseline: truncated right-singular vectors of the full SVD.
+
+    O(mn²) — this is the cost the paper's Eqn 7 removes. g canonical (m>=n);
+    returns (..., n, rank).
+    """
+    g32 = g.astype(jnp.float32)
+    _, _, vt = jnp.linalg.svd(g32, full_matrices=False)  # vt: (..., n, n)
+    p = jnp.swapaxes(vt, -1, -2)[..., :, :rank]
+    return p
+
+
+def random_projection(key: jax.Array, g_shape, rank: int, dtype=jnp.float32):
+    """Flora baseline: fresh Gaussian projection N(0, 1/r). g canonical."""
+    lead = tuple(g_shape[:-2])
+    n = g_shape[-1]
+    p = jax.random.normal(key, lead + (n, rank), jnp.float32) / jnp.sqrt(
+        jnp.asarray(rank, jnp.float32)
+    )
+    return p.astype(dtype)
+
+
+def subspace_overlap(p_a: jnp.ndarray, p_b: jnp.ndarray) -> jnp.ndarray:
+    """Diagnostic: ‖P_aᵀ P_b‖_F² / r ∈ [0, 1] — 1 ⇒ identical subspaces.
+
+    Used by tests and the CEU benchmark to show COAP's inter-projection
+    correlation (high overlap across refreshes) vs Flora (≈ r/n).
+    """
+    qa, _ = jnp.linalg.qr(p_a.astype(jnp.float32))
+    qb, _ = jnp.linalg.qr(p_b.astype(jnp.float32))
+    x = jnp.einsum("...nr,...nk->...rk", qa, qb)
+    r = p_a.shape[-1]
+    return jnp.sum(x * x, axis=(-1, -2)) / r

@@ -1,0 +1,8 @@
+"""Data substrate: deterministic synthetic LM streams, byte tokenizer, and
+a host-sharded double-buffered pipeline (restart-exact: batch(step, host) is
+a pure function, so fault-tolerant resumes replay identically)."""
+from repro.data.synthetic import SyntheticLM, synthetic_batch
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["SyntheticLM", "synthetic_batch", "ByteTokenizer", "DataPipeline"]

@@ -1,0 +1,20 @@
+"""Byte-level tokenizer (vocab 256 + specials) for real-text examples."""
+from __future__ import annotations
+
+from typing import List
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB_SIZE = 259
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB_SIZE
+    bos, eos, pad = BOS, EOS, PAD
+
+    def encode(self, text: str, add_bos: bool = True) -> List[int]:
+        ids = list(text.encode("utf-8", errors="replace"))
+        return ([BOS] if add_bos else []) + ids
+
+    def decode(self, ids) -> str:
+        data = bytes(i for i in ids if 0 <= int(i) < 256)
+        return data.decode("utf-8", errors="replace")

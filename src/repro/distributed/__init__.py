@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, cross-pod gradient
+compression, collective helpers, and an optional pipeline stage."""

@@ -1,0 +1,154 @@
+"""Cross-pod projected-gradient compression (beyond-paper; DESIGN.md §5).
+
+The pod axis is pure data parallelism over the slowest links. The baseline
+step all-reduces the full gradient G (m·n per matrix) across pods. But COAP
+consumes G only two ways:
+
+  1. every step:   G_proj = G P        (m·r — the moment/update input)
+  2. every T_u:    the full G          (Eqn-6/Eqn-7 refresh input)
+
+Projection is linear, so  mean_pods(G)·P == mean_pods(G·P)  exactly. We
+therefore all-reduce the r-rank projection each step and the full gradient
+only on refresh steps:
+
+    cross-pod bytes/step = m·r + m·n/T_u      vs      m·n
+
+At paper ranks (n/r = 4–12, T_u = 40–200) that is a 3.8–11× cross-pod
+traffic cut with bitwise-identical optimizer semantics (equivalence proven
+in tests/test_distributed.py on a (2,2,2) host mesh).
+
+Implementation: ``shard_map`` manual over the 'pod' axis only (data/model
+stay auto inside), computing per-pod gradients, reducing the compressed
+tensors, and running the same leaf update the core transform uses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import correlation, projector, recalibrate
+from repro.core.coap_adam import (
+    DenseLeaf,
+    ProjLeaf,
+    ProjectedAdamConfig,
+    ProjectedAdamState,
+)
+from repro.core.projector import KIND_PROJECT, path_str
+from repro.optim import apply_updates
+from repro.train.train_state import TrainState
+
+
+def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState,
+                      axis_name: str = "pod"):
+    """Per-pod grads -> (updates, new_state) with compressed cross-pod
+    reduction. Must run inside shard_map manual over ``axis_name``.
+
+    Semantics == all-reduce(grads) then core update (linearity; the full-G
+    all-reduce still happens on refresh steps, under the same lax.cond)."""
+    count = state.count
+    t = count + 1
+    flat_u, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    flat_s = treedef.flatten_up_to(state.leaves)
+    new_updates, new_leaves = [], []
+    for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
+        spec = cfg.rules.spec_for(path_str(kp), g.shape)
+        if spec.kind == KIND_PROJECT:
+            gc_local = projector.to_canonical(g, spec).astype(jnp.float32)
+            do_ref = (count % cfg.t_update) == 0
+            do_recal = (count % (cfg.lam * cfg.t_update)) == 0
+
+            # Refresh path: needs the full averaged gradient (rare).
+            def refreshed():
+                gc_full = lax.pmean(gc_local, axis_name)
+                return lax.cond(
+                    do_recal,
+                    lambda: recalibrate.lowcost_svd(gc_full, leaf.p),
+                    lambda: correlation.sgd_update(
+                        leaf.p, gc_full, leaf.m, lr=cfg.eqn6_lr,
+                        steps=cfg.eqn6_steps, normalize=cfg.eqn6_normalize,
+                    ),
+                )
+
+            new_p = lax.cond(do_ref, refreshed, lambda: leaf.p)
+            # Every-step path: reduce only the r-rank projection.
+            g_proj = lax.pmean(projector.project(gc_local, new_p), axis_name)
+            new_m = cfg.b1 * leaf.m + (1.0 - cfg.b1) * g_proj
+            new_v = cfg.b2 * leaf.v + (1.0 - cfg.b2) * jnp.square(g_proj)
+            tf = t.astype(jnp.float32)
+            delta = (new_m / (1.0 - cfg.b1**tf)) / (
+                jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+            )
+            upd_c = projector.backproject(delta, new_p)
+            upd = projector.from_canonical(upd_c, spec) * cfg.update_scale
+            new_updates.append(upd.astype(g.dtype))
+            new_leaves.append(ProjLeaf(p=new_p, m=new_m, v=new_v,
+                                       m_scale=leaf.m_scale,
+                                       v_scale=leaf.v_scale))
+        else:
+            # Dense leaves: classic full all-reduce + Adam.
+            g32 = lax.pmean(g.astype(jnp.float32), axis_name)
+            new_mu = cfg.b1 * leaf.mu + (1.0 - cfg.b1) * g32
+            new_nu = cfg.b2 * leaf.nu + (1.0 - cfg.b2) * jnp.square(g32)
+            tf = t.astype(jnp.float32)
+            upd = (new_mu / (1.0 - cfg.b1**tf)) / (
+                jnp.sqrt(new_nu / (1.0 - cfg.b2**tf)) + cfg.eps
+            )
+            new_updates.append(upd.astype(g.dtype))
+            new_leaves.append(DenseLeaf(mu=new_mu, nu=new_nu,
+                                        mu_scale=leaf.mu_scale,
+                                        nu_scale=leaf.nu_scale))
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_updates),
+        ProjectedAdamState(
+            count=count + 1,
+            leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
+        ),
+    )
+
+
+def make_compressed_train_step(model, cfg: ProjectedAdamConfig, mesh,
+                               learning_rate: float):
+    """COAP train step with compressed cross-pod gradient sync.
+
+    shard_map is manual over 'pod' only; 'data'/'model' remain auto so the
+    in-pod FSDP/TP sharding is still XLA-partitioned. The optimizer states
+    and params are replicated across pods (pure DP) — specs P() over pod.
+    """
+    axis = "pod"
+
+    def per_pod(params, opt_state, step, batch):
+        def loss_fn(p):
+            loss, _ = model.loss(p, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # NOTE: no pmean(grads) here — compressed_update reduces instead.
+        inner = opt_state  # ProjectedAdamState
+        updates, new_inner = compressed_update(cfg, grads, inner, axis)
+        updates = jax.tree_util.tree_map(lambda u: -learning_rate * u, updates)
+        params = apply_updates(params, updates)
+        loss = lax.pmean(loss, axis)
+        return params, new_inner, loss
+
+    pspec = P()  # replicated over pod (manual axis)
+    in_specs = (pspec, pspec, pspec, P(axis))
+    out_specs = (pspec, pspec, pspec)
+    mapped = jax.shard_map(
+        per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False, axis_names={axis},
+    )
+
+    def step_fn(state: TrainState, batch):
+        params, inner, loss = mapped(state.params, state.opt_state, state.step,
+                                     batch)
+        return (
+            TrainState(step=state.step + 1, params=params, opt_state=inner),
+            {"loss": loss},
+        )
+
+    return step_fn

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for COAP's compute hot-spots.
+
+Kernels (each <name>.py has the pallas_call + BlockSpec; ops.py holds the
+jit'd dispatching wrappers; ref.py the pure-jnp oracles):
+  * coap_update.py — fused G@P projection + Adam moment EMA + ΔW epilogue.
+  * quant8.py      — block-wise absmax int8 quant/dequant + fused 8-bit step.
+  * rmsnorm.py     — fused RMSNorm for the serving path.
+"""

@@ -1,0 +1,157 @@
+"""Fused COAP-Adam update kernel (the paper's per-step hot loop, TPU-native).
+
+Computes, in ONE pass over HBM:
+
+    G_proj = G @ P            (MXU matmul, fp32 accumulation in VMEM scratch)
+    M'     = β₁M + (1−β₁)G_proj
+    V'     = β₂V + (1−β₂)G_proj²          (VPU epilogue on the resident tile)
+    ΔW_p   = (M'/c₁) / (sqrt(V'/c₂) + ε)
+
+Why fuse: the unfused schedule writes G_proj (m·r) to HBM, then re-reads
+G_proj+M+V and writes M'+V'+ΔW — ≈ mn + 7mr words of traffic. The fused
+kernel reads G once, streams P per n-block, and touches M/V exactly once:
+≈ mn + (m/bm)·nr + 5mr. For LLaMA-1B shapes (m=5461, n=2048, r=512,
+bm=512) that is a ~1.9× HBM-traffic reduction on the optimizer step
+(measured against cost_analysis in EXPERIMENTS.md §Perf).
+
+Tiling: grid (m/bm, n/bn), n innermost ('arbitrary') for the reduction;
+blocks bm=512, bn=512 keep the working set
+(G 1MB + P 1MB + acc bm·r ≤ 2MB + M/V/out tiles 3·bm·r) under 16MB VMEM for
+r ≤ 1024, with all MXU dims 128-aligned. The wrapper pads ragged shapes and
+vmaps over leading (layer/expert) stack axes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only compiler params; absent/renamed on some builds
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+DEFAULT_BM = 512
+DEFAULT_BN = 512
+
+
+def _kernel(corr_ref, g_ref, p_ref, m_ref, v_ref,
+            new_m_ref, new_v_ref, delta_ref, acc_ref,
+            *, b1: float, b2: float, eps: float, n_steps: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: accumulate this n-block's contribution to G @ P.
+    acc_ref[...] += jnp.dot(
+        g_ref[...].astype(jnp.float32),
+        p_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_steps - 1)
+    def _epilogue():
+        g_proj = acc_ref[...]
+        m = m_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        new_m = b1 * m + (1.0 - b1) * g_proj
+        new_v = b2 * v + (1.0 - b2) * g_proj * g_proj
+        c1 = corr_ref[0]
+        c2 = corr_ref[1]
+        delta = (new_m / c1) / (jnp.sqrt(new_v / c2) + eps)
+        new_m_ref[...] = new_m
+        new_v_ref[...] = new_v
+        delta_ref[...] = delta
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b1", "b2", "eps", "interpret", "bm", "bn")
+)
+def coap_fused_update_pallas(
+    g, p, m, v, count, b1=0.9, b2=0.999, eps=1e-8,
+    interpret: bool = False, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+):
+    """Public entry. g (...,m,n), p (...,n,r), m/v (...,m,r) -> (m', v', Δ)."""
+    if g.ndim > 2:  # stacked weights: vmap over the leading axes
+        fn = functools.partial(
+            coap_fused_update_pallas, b1=b1, b2=b2, eps=eps,
+            interpret=interpret, bm=bm, bn=bn,
+        )
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, None))
+        return fn(g, p, m, v, count)
+
+    m_dim, n_dim = g.shape
+    r = p.shape[-1]
+    t = count.astype(jnp.float32)
+    corr = jnp.stack([1.0 - b1**t, 1.0 - b2**t])
+
+    bm_eff = min(bm, max(8, m_dim))
+    bn_eff = min(bn, max(128, n_dim))
+    g_p = _pad_to(_pad_to(g, bm_eff, 0), bn_eff, 1)
+    p_p = _pad_to(p, bn_eff, 0)
+    m_p = _pad_to(m.astype(jnp.float32), bm_eff, 0)
+    v_p = _pad_to(v.astype(jnp.float32), bm_eff, 0)
+    mp, np_ = g_p.shape
+    grid = (mp // bm_eff, np_ // bn_eff)
+
+    kernel = functools.partial(
+        _kernel, b1=b1, b2=b2, eps=eps, n_steps=grid[1]
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((mp, r), jnp.float32),
+        jax.ShapeDtypeStruct((mp, r), jnp.float32),
+        jax.ShapeDtypeStruct((mp, r), jnp.float32),
+    ]
+    in_specs = [
+        pl.BlockSpec((2,), lambda i, k: (0,)),  # corr coefficients
+        pl.BlockSpec((bm_eff, bn_eff), lambda i, k: (i, k)),  # G
+        pl.BlockSpec((bn_eff, r), lambda i, k: (k, 0)),  # P
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),  # M
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),  # V
+    ]
+    out_specs = [
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),
+    ]
+    kwargs = dict(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    if _HAS_PLTPU:
+        kwargs["scratch_shapes"] = [pltpu.VMEM((bm_eff, r), jnp.float32)]
+        if not interpret:
+            try:
+                kwargs["compiler_params"] = pltpu.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+            except Exception:  # older naming
+                kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+    else:  # pragma: no cover
+        raise RuntimeError("Pallas TPU backend unavailable; use ops ref path")
+
+    new_m, new_v, delta = pl.pallas_call(kernel, **kwargs)(
+        corr, g_p, p_p, m_p, v_p
+    )
+    return new_m[:m_dim], new_v[:m_dim], delta[:m_dim]

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas implementations run natively; elsewhere (this CPU
+container) we execute the ``ref.py`` oracle, or the Pallas body under
+``interpret=True`` when ``REPRO_PALLAS=interpret`` is set (used by the kernel
+test suite). The numerics are identical by construction (tests enforce it).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_MODE_ENV = "REPRO_PALLAS"
+
+
+def _mode() -> str:
+    forced = os.environ.get(_MODE_ENV, "")
+    if forced:
+        return forced  # 'pallas' | 'interpret' | 'ref'
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret_flag():
+    return _mode() == "interpret"
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps"))
+def coap_fused_update(g, p, m, v, count, b1=0.9, b2=0.999, eps=1e-8):
+    """Fused G@P + Adam moment EMA + bias-corrected ΔW_proj. See kernel
+    ``coap_update.py`` for the TPU implementation and tiling rationale."""
+    if _mode() == "ref":
+        return ref.coap_fused_update(g, p, m, v, count, b1=b1, b2=b2, eps=eps)
+    from repro.kernels import coap_update
+
+    return coap_update.coap_fused_update_pallas(
+        g, p, m, v, count, b1=b1, b2=b2, eps=eps, interpret=_interpret_flag()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_blockwise(x, block=ref.QUANT_BLOCK):
+    if _mode() == "ref":
+        return ref.quantize_blockwise(x, block)
+    from repro.kernels import quant8
+
+    return quant8.quantize_blockwise_pallas(x, block, interpret=_interpret_flag())
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "block"))
+def dequantize_blockwise(q, scale, shape, dtype=jnp.float32, block=ref.QUANT_BLOCK):
+    if _mode() == "ref":
+        return ref.dequantize_blockwise(q, scale, shape, dtype)
+    from repro.kernels import quant8
+
+    return quant8.dequantize_blockwise_pallas(
+        q, scale, shape, dtype, block, interpret=_interpret_flag()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "block"))
+def quantized_adam_update(
+    g_proj, m_q, m_scale, v_q, v_scale, count, b1=0.9, b2=0.999, eps=1e-8,
+    block=ref.QUANT_BLOCK,
+):
+    if _mode() == "ref":
+        return ref.quantized_adam_update(
+            g_proj, m_q, m_scale, v_q, v_scale, count, b1, b2, eps, block
+        )
+    from repro.kernels import quant8
+
+    return quant8.quantized_adam_update_pallas(
+        g_proj, m_q, m_scale, v_q, v_scale, count, b1, b2, eps, block,
+        interpret=_interpret_flag(),
+    )
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    if _mode() == "ref":
+        return ref.rmsnorm(x, scale, eps)
+    from repro.kernels import rmsnorm as _rk
+
+    return _rk.rmsnorm_pallas(x, scale, eps, interpret=_interpret_flag())

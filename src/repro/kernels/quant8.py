@@ -1,0 +1,177 @@
+"""Block-wise absmax int8 quantization kernels (8-bit COAP states).
+
+Layout: optimizer tensors are viewed as (nblocks, 256) — 256 = 2×VPU lane
+width — with one fp32 scale per block. Three kernels:
+
+  * quantize:   x -> (q, scale)         scale = absmax/127, q = round(x/scale)
+  * dequantize: (q, scale) -> x
+  * fused 8-bit Adam step: dequant M,V -> moment EMA + ΔW -> requant, one
+    VMEM round trip (the 8-bit COAP optimizer step; avoids materializing
+    fp32 M/V in HBM, which would forfeit the memory savings).
+
+Hardware adaptation note (DESIGN.md §3): Dettmers' dynamic-tree codebook is
+a CUDA-LUT trick; linear absmax maps onto the TPU VPU (mul + round + clip)
+with no gather. Same state size, slightly coarser tails.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+from repro.kernels.ref import QUANT_BLOCK, QUANT_DELTA_CLIP
+
+ROWS_PER_PROGRAM = 64  # (64, 256) int8 tiles: fits the int8 (32,128) layout
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(x * inv), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def _fused8_kernel(corr_ref, g_ref, mq_ref, ms_ref, vq_ref, vs_ref,
+                   nmq_ref, nms_ref, nvq_ref, nvs_ref, delta_ref,
+                   *, b1, b2, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = mq_ref[...].astype(jnp.float32) * ms_ref[...]
+    v = vq_ref[...].astype(jnp.float32) * vs_ref[...]
+    new_m = b1 * m + (1.0 - b1) * g
+    new_v = b2 * v + (1.0 - b2) * g * g
+    delta = (new_m / corr_ref[0]) / (jnp.sqrt(new_v / corr_ref[1]) + eps)
+    delta_ref[...] = jnp.clip(delta, -QUANT_DELTA_CLIP, QUANT_DELTA_CLIP)
+
+    def requant(x, q_out, s_out):
+        absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = absmax / 127.0
+        inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+        q_out[...] = jnp.clip(jnp.round(x * inv), -127, 127).astype(jnp.int8)
+        s_out[...] = scale
+
+    requant(new_m, nmq_ref, nms_ref)
+    requant(new_v, nvq_ref, nvs_ref)
+
+
+def _to_blocks(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, block)
+
+
+def _row_pad(x, rows):
+    pad = (-x.shape[0]) % rows
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_blockwise_pallas(x, block=QUANT_BLOCK, interpret=False):
+    blocks = _to_blocks(x.astype(jnp.float32), block)
+    nblocks = blocks.shape[0]
+    rows = min(ROWS_PER_PROGRAM, nblocks)
+    bp = _row_pad(blocks, rows)
+    grid = (bp.shape[0] // rows,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(bp.shape, jnp.int8),
+            jax.ShapeDtypeStruct((bp.shape[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bp)
+    return q[:nblocks], s[:nblocks, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "block", "interpret"))
+def dequantize_blockwise_pallas(q, scale, shape, dtype=jnp.float32,
+                                block=QUANT_BLOCK, interpret=False):
+    nblocks = q.shape[0]
+    rows = min(ROWS_PER_PROGRAM, nblocks)
+    qp = _row_pad(q, rows)
+    sp = _row_pad(scale[:, None], rows)
+    grid = (qp.shape[0] // rows,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, jnp.float32),
+        interpret=interpret,
+    )(qp, sp)
+    size = 1
+    for s_ in shape:
+        size *= s_
+    return x.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b1", "b2", "eps", "block", "interpret")
+)
+def quantized_adam_update_pallas(
+    g_proj, m_q, m_scale, v_q, v_scale, count,
+    b1=0.9, b2=0.999, eps=1e-8, block=QUANT_BLOCK, interpret=False,
+):
+    shape = g_proj.shape
+    gb = _to_blocks(g_proj.astype(jnp.float32), block)
+    nblocks = gb.shape[0]
+    assert m_q.shape[0] == nblocks, (m_q.shape, nblocks)
+    rows = min(ROWS_PER_PROGRAM, nblocks)
+    gp = _row_pad(gb, rows)
+    mqp, vqp = _row_pad(m_q, rows), _row_pad(v_q, rows)
+    msp, vsp = _row_pad(m_scale[:, None], rows), _row_pad(v_scale[:, None], rows)
+    grid = (gp.shape[0] // rows,)
+    t = count.astype(jnp.float32)
+    corr = jnp.stack([1.0 - b1**t, 1.0 - b2**t])
+
+    row_spec = pl.BlockSpec((rows, block), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    npad = gp.shape[0]
+    nmq, nms, nvq, nvs, delta = pl.pallas_call(
+        functools.partial(_fused8_kernel, b1=b1, b2=b2, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), row_spec, row_spec,
+                  s_spec, row_spec, s_spec],
+        out_specs=[row_spec, s_spec, row_spec, s_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, block), jnp.int8),
+            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((npad, block), jnp.int8),
+            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((npad, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(corr, gp, mqp, msp, vqp, vsp)
+    size = 1
+    for s_ in shape:
+        size *= s_
+    delta_full = delta.reshape(-1)[:size].reshape(shape)
+    return nmq[:nblocks], nms[:nblocks, 0], nvq[:nblocks], nvs[:nblocks, 0], delta_full

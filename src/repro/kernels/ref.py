@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *canonical semantics*: kernels must match them bit-for-bit in
+fp32 (tests sweep shapes/dtypes with ``interpret=True``). They are also the
+CPU execution path — ``ops.py`` dispatches to these off-TPU, so the whole
+framework runs (slowly but exactly) in this container.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+QUANT_BLOCK = 256  # VPU lane width (128) x 2; absmax granularity for int8 states.
+# Linear absmax int8 can quantize tiny second-moment entries to 0 while the
+# first moment stays nonzero -> m/(sqrt(0)+eps) explodes (observed divergence
+# in examples/finetune_compare.py). Dynamic-tree codebooks avoid this by
+# construction; our TPU-friendly linear codec instead clips the bias-corrected
+# update elementwise (normal Adam updates are |d| <~ 3, so 5 is inert).
+QUANT_DELTA_CLIP = 5.0
+
+
+# ---------------------------------------------------------------------------
+# Fused COAP-Adam update (kernel: coap_update.py)
+# ---------------------------------------------------------------------------
+def coap_fused_update(
+    g: jnp.ndarray,  # (m, n) canonical gradient tile
+    p: jnp.ndarray,  # (n, r) projection
+    m: jnp.ndarray,  # (m, r) first moment (fp32)
+    v: jnp.ndarray,  # (m, r) second moment (fp32)
+    count: jnp.ndarray,  # scalar int32, 1-based step for bias correction
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One projected-Adam step: G@P on the MXU + moment EMA + bias-corrected
+    ΔW_proj epilogue. Returns (new_m, new_v, delta_w_proj) — all (m, r) fp32.
+    Broadcasts over leading (layer/expert) stack axes.
+    """
+    g_proj = jnp.einsum(
+        "...mn,...nr->...mr", g.astype(jnp.float32), p.astype(jnp.float32)
+    )
+    new_m = b1 * m + (1.0 - b1) * g_proj
+    new_v = b2 * v + (1.0 - b2) * jnp.square(g_proj)
+    t = count.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+    delta = (new_m / c1) / (jnp.sqrt(new_v / c2) + eps)
+    return new_m, new_v, delta
+
+
+# ---------------------------------------------------------------------------
+# Block-wise absmax int8 quantization (kernel: quant8.py)
+# ---------------------------------------------------------------------------
+def _flat_padded(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_blockwise(
+    x: jnp.ndarray, block: int = QUANT_BLOCK
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape) -> (q int8 [nblocks, block], scale f32 [nblocks])."""
+    flat, _ = _flat_padded(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(blocks * inv[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blockwise(
+    q: jnp.ndarray, scale: jnp.ndarray, shape: Tuple[int, ...], dtype=jnp.float32
+) -> jnp.ndarray:
+    """(q [nblocks, block], scale [nblocks]) -> original-shape array."""
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape).astype(dtype)
+
+
+def quantized_adam_update(
+    g_proj: jnp.ndarray,  # (m, r) fresh projected gradient
+    m_q: jnp.ndarray,
+    m_scale: jnp.ndarray,
+    v_q: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    count: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block: int = QUANT_BLOCK,
+):
+    """Fused dequant -> Adam moment update -> requant (8-bit COAP step).
+
+    Returns (new_m_q, new_m_scale, new_v_q, new_v_scale, delta_w_proj).
+    """
+    shape = g_proj.shape
+    m = dequantize_blockwise(m_q, m_scale, shape)
+    v = dequantize_blockwise(v_q, v_scale, shape)
+    g32 = g_proj.astype(jnp.float32)
+    new_m = b1 * m + (1.0 - b1) * g32
+    new_v = b2 * v + (1.0 - b2) * jnp.square(g32)
+    t = count.astype(jnp.float32)
+    delta = (new_m / (1.0 - b1**t)) / (jnp.sqrt(new_v / (1.0 - b2**t)) + eps)
+    delta = jnp.clip(delta, -QUANT_DELTA_CLIP, QUANT_DELTA_CLIP)
+    nmq, nms = quantize_blockwise(new_m, block)
+    nvq, nvs = quantize_blockwise(new_v, block)
+    return nmq, nms, nvq, nvs, delta
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (kernel: rmsnorm.py) — model-side hot spot for long-context decode
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

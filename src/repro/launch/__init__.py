@@ -1,0 +1,2 @@
+"""Launchers: production meshes, the multi-pod dry-run, roofline analysis,
+and the train/serve drivers."""

@@ -1,0 +1,328 @@
+"""HLO cost model for the roofline: call-graph-aware FLOPs / HBM bytes /
+collective bytes from the compiled SPMD module text.
+
+Why not ``compiled.cost_analysis()``: XLA's aggregate counts while-loop
+bodies ONCE, but all our stacks are scan-over-layers — an 80-layer model
+would be under-counted 80x. This walker multiplies each while body by its
+``known_trip_count`` (emitted by XLA in backend_config) and attributes cost
+through fusion/call/conditional edges from ENTRY.
+
+Three quantities per device (the HLO is already the per-device module):
+  * flops            — 2·result·contraction for every dot (+conv estimate);
+                       elementwise ops ignored (dots dominate transformers).
+  * hbm_bytes        — operand+result bytes of top-level fusions/dots/copies/
+                       collectives (fusion boundaries ≈ HBM materialization).
+  * collective_bytes — ring-adjusted per-op communicated volume:
+        all-reduce 2(k-1)/k · b;  all-gather (k-1)/k · b(gathered);
+        reduce-scatter (k-1) · b(shard);  all-to-all (k-1)/k · b;
+        collective-permute 1 · b.
+
+Each quantity is split into ``steady`` (always executed) and ``cond``
+(inside `conditional` branches — COAP's Eqn-6/7 refresh path), so the
+steady-state roofline can amortize refresh cost by 1/T_u.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w.\-]+)\s+\((.*)\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_COLL_FACTORS = {
+    "all-reduce": lambda k: 2.0 * (k - 1) / k,
+    "all-gather": lambda k: (k - 1) / k,
+    "reduce-scatter": lambda k: float(k - 1),
+    "all-to-all": lambda k: (k - 1) / k,
+    "collective-permute": lambda k: 1.0,
+}
+# ops whose operands/results approximate HBM traffic post-fusion
+# Deliberately excludes view-ish ops (reshape/broadcast/slice/transpose/
+# iota/ds/dus/reduce): on TPU these fuse into consumers; counting them on the
+# CPU-backend HLO (where they appear unfused) would inflate the memory term
+# severalfold. Fusion call sites carry the real operand/result traffic.
+_TRAFFIC_OPS = (
+    "fusion", "dot", "convolution", "copy", "gather", "scatter", "sort",
+    "custom-call", "cholesky", "triangular-solve",
+) + _COLL_OPS
+_FREE_OPS = ("get-tuple-element", "bitcast", "tuple", "parameter", "constant",
+             "after-all", "partition-id", "replica-id")
+
+# Kernel-boundary accounting: ops inside a jax.named_scope carrying this tag
+# correspond to a validated Pallas kernel (kernels/flash_attention.py). Their
+# FLOPs are real, but intermediate tensors live in VMEM on TPU — so only
+# dataflow ENTERING the region from outside counts as HBM traffic (the
+# kernel's q/k/v reads); region outputs are counted by their consumers.
+REGION_TAG = "PALLAS_FLASH_REGION"
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shapes(type_str: str) -> List[Tuple[str, int, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            dim_list = [int(d) for d in dims.split(",") if d]
+            out.append((dtype, _elems(dims), dim_list))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[d] * n for d, n, _ in _first_shapes(type_str))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+    def __add__(self, o: "Cost") -> "Cost":
+        coll = dict(self.coll)
+        for k, v in o.coll.items():
+            coll[k] = coll.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes, coll)
+
+    def __mul__(self, s: float) -> "Cost":
+        return Cost(self.flops * s, self.bytes * s,
+                    {k: v * s for k, v in self.coll.items()})
+
+
+@dataclasses.dataclass
+class Edge:
+    callee: str
+    multiplier: float
+    conditional: bool
+    fusion: bool = False  # fusion/to_apply internals: flops real, bytes not
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.defs: Dict[str, str] = {}  # %op name -> result type string
+        self.region_defs: set = set()  # names defined inside a kernel region
+        self.local = Cost()
+        self.local_cond = Cost()  # nothing at local level; kept for symmetry
+        self.edges: List[Edge] = []
+
+
+def _op_kind(rhs: str) -> Optional[str]:
+    m = re.match(r"(?:\(?[\w\[\],{}\s\-]*\)?\s)?.*?([\w\-]+)\(", rhs)
+    # robust: find first "name(" that is a known op
+    for op in _COLL_OPS:
+        if re.search(rf"\b{op}(?:-start|-done)?\(", rhs):
+            return op
+    m2 = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+    return m2.group(1) if m2 else None
+
+
+def parse(hlo: str) -> Tuple[Dict[str, _Computation], str, int]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(raw)
+        if hdr and "{" in raw:
+            cur = _Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if raw.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            # parameters: name: type pairs
+            for pname, ptype in re.findall(r"([\w.\-]+):\s*([\w\[\],]+)",
+                                           hdr.group(2)):
+                cur.defs[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(raw)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        result_type = rhs.split(" ", 1)[0] if " " in rhs else rhs
+        # tuple results keep full "(a, b)" prefix up to the op name
+        cur.defs[name] = rhs.split("=", 1)[0] if False else result_type
+        _accumulate(cur, name, rhs, raw)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].defs)) if comps else ""
+    n_dev = 1
+    return comps, entry, n_dev
+
+
+def _operands(rhs: str) -> List[str]:
+    m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", rhs[rhs.find("("):])
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _accumulate(comp: _Computation, name: str, rhs: str, raw: str):
+    in_region = REGION_TAG in raw
+    if in_region:
+        comp.region_defs.add(name)
+    op = _op_kind(rhs)
+    if op is None or op in _FREE_OPS:
+        return
+    result_type = rhs[: rhs.find(op + "(")] if (op + "(") in rhs else rhs
+    # tuple result: everything before the op name
+    res_bytes = _type_bytes(result_type)
+
+    # ---- call edges
+    if op == "while":
+        body = re.search(r"body=%?([\w.\-]+)", raw)
+        cond = re.search(r"condition=%?([\w.\-]+)", raw)
+        trip = _TRIP_RE.search(raw)
+        n = int(trip.group(1)) if trip else 1
+        if body:
+            comp.edges.append(Edge(body.group(1), float(max(n, 1)), False))
+        if cond:
+            comp.edges.append(Edge(cond.group(1), float(max(n, 1)) + 1, False))
+        return
+    if op == "conditional":
+        names = re.findall(
+            r"(?:branch_computations=\{([^}]*)\}|"
+            r"(?:true|false)_computation=%?([\w.\-]+))", raw)
+        for grp, single in names:
+            if grp:
+                for nme in grp.split(","):
+                    comp.edges.append(Edge(nme.strip().lstrip("%"), 1.0, True))
+            if single:
+                comp.edges.append(Edge(single, 1.0, True))
+        return
+    for callee in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", raw):
+        # fusion internals: count flops (a fused dot is still a dot) but not
+        # bytes (VMEM-resident) — the fusion call site carries the traffic.
+        comp.edges.append(Edge(callee, 1.0, False, fusion=True))
+
+    # ---- flops
+    if op == "dot":
+        ops_ = _operands(rhs)
+        contract = 1
+        lhs_type = comp.defs.get(ops_[0], "") if ops_ else ""
+        lhs_shapes = _first_shapes(lhs_type)
+        cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", raw)
+        if lhs_shapes and cdims:
+            dims = lhs_shapes[0][2]
+            for i in cdims.group(1).split(","):
+                if i and int(i) < len(dims):
+                    contract *= dims[int(i)]
+        res_elems = sum(n for _, n, _ in _first_shapes(result_type))
+        comp.local.flops += 2.0 * res_elems * max(contract, 1)
+    elif op == "convolution":
+        res_elems = sum(n for _, n, _ in _first_shapes(result_type))
+        win = re.search(r"window=\{size=([\dx]+)", raw)
+        wprod = 1
+        if win:
+            for d in win.group(1).split("x"):
+                wprod *= int(d)
+        ops_ = _operands(rhs)
+        in_ch = 1
+        if len(ops_) >= 2:
+            ksh = _first_shapes(comp.defs.get(ops_[1], ""))
+            if ksh:
+                in_ch = max(ksh[0][2][-2] if len(ksh[0][2]) >= 2 else 1, 1)
+        comp.local.flops += 2.0 * res_elems * wprod * in_ch
+
+    # ---- bytes (HBM traffic approximation at fusion boundaries)
+    if op in _TRAFFIC_OPS:
+        if in_region:
+            # kernel-boundary: only region-external operands are HBM reads
+            opn_bytes = sum(
+                _type_bytes(comp.defs.get(o, ""))
+                for o in _operands(rhs) if o not in comp.region_defs
+            )
+            comp.local.bytes += opn_bytes
+        else:
+            opn_bytes = 0
+            for o in _operands(rhs):
+                opn_bytes += _type_bytes(comp.defs.get(o, ""))
+            comp.local.bytes += res_bytes + opn_bytes
+
+    # ---- collectives
+    if op in _COLL_OPS:
+        k = _group_size(raw, 0)
+        comm = _COLL_FACTORS[op](max(k, 2)) * res_bytes
+        comp.local.coll[op] = comp.local.coll.get(op, 0.0) + comm
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+def analyze(hlo: str, n_devices: int = 1) -> Dict:
+    """Full-module per-device cost. Returns dict with steady/cond splits."""
+    comps, entry, _ = parse(hlo)
+    memo: Dict[Tuple[str, bool], Tuple[Cost, Cost]] = {}
+
+    def walk(name: str) -> Tuple[Cost, Cost]:
+        """Returns (steady, cond) subtree costs."""
+        if name not in comps:
+            return Cost(), Cost()
+        if name in memo:
+            return memo[name]
+        memo[name] = (Cost(), Cost())  # cycle guard
+        comp = comps[name]
+        steady = Cost() + comp.local
+        cond = Cost()
+        for e in comp.edges:
+            s, c = walk(e.callee)
+            if e.fusion:
+                s = Cost(flops=s.flops)
+                c = Cost(flops=c.flops)
+            if e.conditional:
+                cond = cond + (s + c) * e.multiplier
+            else:
+                steady = steady + s * e.multiplier
+                cond = cond + c * e.multiplier
+        memo[name] = (steady, cond)
+        return memo[name]
+
+    steady, cond = walk(entry)
+    return {
+        "flops": steady.flops,
+        "flops_cond": cond.flops,
+        "hbm_bytes": steady.bytes,
+        "hbm_bytes_cond": cond.bytes,
+        "collective_bytes": steady.coll_total(),
+        "collective_bytes_cond": cond.coll_total(),
+        "collective_by_op": steady.coll,
+        "collective_by_op_cond": cond.coll,
+    }
+
+
+# Back-compat shim used by dryrun.py's earlier artifacts
+def collective_bytes(hlo: str, n_devices: int) -> Dict[str, float]:
+    a = analyze(hlo, n_devices)
+    return {
+        "total": a["collective_bytes"] + a["collective_bytes_cond"],
+        "steady": a["collective_bytes"],
+        "by_op": a["collective_by_op"],
+        "conditional": a["collective_bytes_cond"],
+    }

@@ -1,0 +1,156 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+For every (arch × shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs_per_device / 197 TFLOP/s      (v5e bf16)
+    memory term     = HLO_bytes_per_device / 819 GB/s         (HBM)
+    collective term = ring-adjusted collective bytes / 50 GB/s (ICI link)
+
+COAP's Eqn-6/7 refresh lives under lax.cond; its cost is amortized by
+1/T_u into the steady-state terms (reported both ways). MODEL_FLOPS uses
+6·N·D (train, dense), 6·N_active·D (MoE), 2·N·D (prefill), 2·N·B (decode).
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    n_act = rec["n_active_params"]
+    nd = rec["n_devices"]
+    if rec["kind"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n_act * tokens / nd
+    if rec["kind"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n_act * tokens / nd
+    return 2.0 * n_act * rec["global_batch"] / nd  # decode: 1 token/seq
+
+
+def terms(rec: Dict, amortize: bool = True) -> Dict:
+    t_u = rec.get("t_update", 40)
+    amort = (1.0 / t_u) if amortize else 1.0
+    flops = rec["flops_per_device"] + amort * rec.get("flops_cond_per_device", 0.0)
+    bytes_ = rec["bytes_per_device"] + amort * rec.get("bytes_cond_per_device", 0.0)
+    coll = rec["collective_bytes"]
+    coll_b = coll["steady"] + amort * coll.get("conditional", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_n = coll_b / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    mf = model_flops_per_device(rec)
+    bound = max(t_c, t_m, t_n)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dom[0],
+        "step_bound_s": bound,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / max(flops, 1.0),
+        # fraction of roofline: useful work per second at the bound vs peak
+        "roofline_fraction": (mf / max(bound, 1e-12)) / PEAK_FLOPS,
+    }
+
+
+_SUGGEST = {
+    "compute": ("compute-bound: raise MXU utilization (bigger per-device "
+                "tiles, fewer remat recomputes, fused COAP update)"),
+    "memory": ("HBM-bound: fuse attention (flash/chunked, avoid score "
+               "materialization), int8 optimizer states, better remat policy"),
+    "collective": ("ICI-bound: reshard to cut all-gathers (TP-only layout "
+                   "for small models), compress cross-pod grads (G@P), "
+                   "overlap collectives with compute"),
+}
+
+
+def load(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*{suffix}"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        if len(parts) != (3 if not tag else 4):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    return rows
+
+
+def build_table(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    out = []
+    for rec in load(mesh, tag):
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "status": rec["status"]}
+        if rec["status"] == "ok":
+            row.update(terms(rec))
+            row["suggestion"] = _SUGGEST[row["dominant"]]
+            row["mem_temp_gb"] = rec["memory"]["temp_bytes"] / 1e9
+            row["grad_accum"] = rec.get("grad_accum", "-")
+        else:
+            row["reason"] = rec.get("reason", rec.get("error", ""))[:100]
+        out.append(row)
+    return out
+
+
+def markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.1%} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.mesh, args.tag)
+    print(markdown(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        most_coll = max(ok, key=lambda r: r["collective_s"] /
+                        max(r["step_bound_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.2%})")
+        print(f"most collective-bound: {most_coll['arch']}/{most_coll['shape']} "
+              f"(coll {most_coll['collective_s']:.3g}s of bound "
+              f"{most_coll['step_bound_s']:.3g}s)")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json), exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

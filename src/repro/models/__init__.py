@@ -1,0 +1,8 @@
+"""Model substrate: the 10 assigned architectures + the paper's LLaMA-1B.
+
+Everything is functional (explicit param pytrees, init/apply pairs) with
+logical-axis metadata carried alongside every parameter so the distributed
+layer can lay any architecture out on the (pod, data, model) mesh without
+per-model sharding code. Decoder stacks are lax.scan-over-layers with
+configurable remat, so XLA compiles one layer body regardless of depth.
+"""

@@ -1,0 +1,435 @@
+"""Attention: GQA (w/ RoPE, M-RoPE, sliding-window, logit softcap), MLA,
+cross-attention, and dense/rolling KV caches for decode.
+
+Weights stay 2-D ((d_model, H*hd) etc.) so the COAP projector treats them
+exactly like the paper's per-layer matrices; head structure is a reshape at
+apply time. Caches are explicit pytrees threaded through serve steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+def gqa_defs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             qkv_bias: bool = False):
+    defs = {
+        "wq": ParamDef((d_model, n_heads * head_dim), "fan_in", ("embed", "heads")),
+        "wk": ParamDef((d_model, n_kv * head_dim), "fan_in", ("embed", "heads")),
+        "wv": ParamDef((d_model, n_kv * head_dim), "fan_in", ("embed", "heads")),
+        "wo": ParamDef((n_heads * head_dim, d_model), "fan_in", ("heads", "embed")),
+    }
+    if qkv_bias:
+        defs["wq_bias"] = ParamDef((n_heads * head_dim,), "zeros", ("heads",))
+        defs["wk_bias"] = ParamDef((n_kv * head_dim,), "zeros", ("heads",))
+        defs["wv_bias"] = ParamDef((n_kv * head_dim,), "zeros", ("heads",))
+    return defs
+
+
+def mla_defs(d_model: int, n_heads: int, q_lora: int, kv_lora: int,
+             qk_nope: int, qk_rope: int, v_head: int):
+    """DeepSeek/MiniCPM3-style Multi-head Latent Attention. The KV path is
+    compressed to ``kv_lora + qk_rope`` per token — that compressed latent IS
+    the cache."""
+    return {
+        "wq_a": ParamDef((d_model, q_lora), "fan_in", ("embed", "lora")),
+        "q_a_norm": L.rmsnorm_def(q_lora),
+        "wq_b": ParamDef((q_lora, n_heads * (qk_nope + qk_rope)), "fan_in",
+                         ("lora", "heads")),
+        "wkv_a": ParamDef((d_model, kv_lora + qk_rope), "fan_in", ("embed", "lora")),
+        "kv_a_norm": L.rmsnorm_def(kv_lora),
+        "wkv_b": ParamDef((kv_lora, n_heads * (qk_nope + v_head)), "fan_in",
+                          ("lora", "heads")),
+        "wo": ParamDef((n_heads * v_head, d_model), "fan_in", ("heads", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks & core attention
+# ---------------------------------------------------------------------------
+def _causal_mask(q_len, kv_len, q_offset, window: Optional[int] = None):
+    """(q_len, kv_len) boolean keep-mask. q_offset = absolute position of
+    query 0 (for decode). window = sliding-window size (None = full)."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    keep = k_pos <= q_pos
+    if window is not None:
+        keep = keep & (k_pos > q_pos - window)
+    return keep
+
+
+def _attend_chunked(q, k, v, *, q_offset, window, softcap, scale,
+                    q_chunk=512, kv_chunk=1024, causal=True):
+    """Flash-style memory-efficient attention (Rabe & Staats / FlashAttention
+    schedule in pure JAX): lax.scan over query blocks x online-softmax scan
+    over KV blocks. The (T, S) score matrix never materializes in HBM — per
+    step only a (q_chunk, kv_chunk) tile is live. This is the §Perf fix for
+    the memory-bound train/prefill cells (EXPERIMENTS.md); on real TPU the
+    same schedule becomes a Pallas kernel, here XLA fuses the tile ops.
+
+    q: (B,T,H,hd); k/v: (B,S,K,hd). Returns (B,T,H,hd) like _attend.
+    """
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    tp = (-t) % q_chunk
+    sp = (-s) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, tp), (0, 0), (0, 0))) if tp else q
+    kp = jnp.pad(k, ((0, 0), (0, sp), (0, 0), (0, 0))) if sp else k
+    vp = jnp.pad(v, ((0, 0), (0, sp), (0, 0), (0, 0))) if sp else v
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    qb = qp.reshape(b, nq, q_chunk, kh, group, hd)
+    kb = kp.reshape(b, nk, kv_chunk, kh, hd)
+    vb = vp.reshape(b, nk, kv_chunk, kh, hd)
+
+    q_pos_base = q_offset + jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def one_q_block(qi, q_blk):
+        q_pos = q_pos_base + qi * q_chunk  # (qc,)
+
+        def kv_step(carry, inp):
+            m_prev, l_prev, acc = carry
+            ki, k_blk, v_blk = inp
+            k_pos = k_pos_base + ki * kv_chunk
+            logits = jnp.einsum(
+                "bqkgh,bskh->bkgqs", q_blk, k_blk,
+                preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                logits = softcap * jnp.tanh(logits / softcap)
+            keep = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                keep &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                keep &= k_pos[None, :] > q_pos[:, None] - window
+            keep &= (k_pos < s)[None, :]
+            logits = jnp.where(keep[None, None, None, :, :], logits, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, group, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, group, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, group, q_chunk, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (b, qc, kh, group, hd)
+
+    outs = jax.lax.map(
+        lambda args: one_q_block(*args),
+        (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)),
+    )  # (nq, b, qc, kh, group, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, kh, group, hd)
+    return out[:, :t].reshape(b, t, h, hd).astype(v.dtype)
+
+
+def _flash_or_tagged(q, k, v, scale, window, softcap):
+    """attn_impl='flash': the Pallas flash kernel on TPU (or under
+    REPRO_PALLAS=interpret); elsewhere the naive math inside a
+    PALLAS_FLASH_REGION named_scope, which the roofline analyzer accounts at
+    kernel boundaries (the validated-kernel's true HBM traffic)."""
+    import os
+
+    backend = jax.default_backend()
+    if backend == "tpu" or os.environ.get("REPRO_PALLAS") == "interpret":
+        from repro.kernels.flash_attention import attend_flash
+
+        return attend_flash(q, k, v, scale=scale, window=window,
+                            softcap=softcap, interpret=backend != "tpu")
+    with jax.named_scope("PALLAS_FLASH_REGION"):
+        t = q.shape[1]
+        mask = _causal_mask(t, k.shape[1], 0, window)
+        return _attend(q, k, v, mask, softcap, scale)
+
+
+def _attend(q, k, v, mask, softcap: Optional[float], scale: float):
+    """q: (B,T,H,hd) k/v: (B,S,K,hd[v]) grouped; mask: (T,S) or (B,T,S)."""
+    b, t, h, hd = q.shape
+    s, kheads = k.shape[1], k.shape[2]
+    group = h // kheads
+    qg = q.reshape(b, t, kheads, group, hd)
+    # bf16 operands + fp32 accumulation (MXU-native); upcasting the INPUTS
+    # instead forces every upstream tensor (incl. saved scan residuals) to
+    # fp32 via XLA's reduce_precision folding — measured 2x HBM waste.
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None, :, :]
+    else:
+        mask_b = mask[:, None, None, :, :]
+    logits = jnp.where(mask_b, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train/prefill and cached decode)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: Any  # (B, S_max, K, hd) — rolling buffer when window is set
+    v: Any
+    length: Any  # scalar int32: tokens already in cache
+
+
+def gqa_init_cache(batch, max_len, n_kv, head_dim, dtype, window=None):
+    size = min(max_len, window) if window else max_len
+    return KVCache(
+        k=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        length=jnp.zeros([], jnp.int32),
+    )
+
+
+def gqa_apply(params, x, positions, *, n_heads, n_kv, head_dim,
+              rope_theta=1e4, window=None, softcap=None, mrope_sections=None,
+              cache: Optional[KVCache] = None, qkv_bias=False,
+              attn_impl: str = "naive"):
+    """Returns (out, new_cache). cache=None ⇒ train/prefill over full x."""
+    b, t, _ = x.shape
+    q = L.linear_apply(params, x, "wq").reshape(b, t, n_heads, head_dim)
+    k = L.linear_apply(params, x, "wk").reshape(b, t, n_kv, head_dim)
+    v = L.linear_apply(params, x, "wv").reshape(b, t, n_kv, head_dim)
+
+    if mrope_sections is not None:
+        q = L.apply_mrope(q, positions, rope_theta, mrope_sections)
+        k = L.apply_mrope(k, positions, rope_theta, mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+
+    scale = 1.0 / (head_dim**0.5)
+    if cache is None:
+        if attn_impl == "flash" and t >= 512:
+            out = _flash_or_tagged(q, k, v, scale, window, softcap)
+        elif attn_impl == "chunked" and t >= 512:
+            out = _attend_chunked(q, k, v, q_offset=0, window=window,
+                                  softcap=softcap, scale=scale)
+        else:
+            mask = _causal_mask(t, t, 0, window)
+            out = _attend(q, k, v, mask, softcap, scale)
+        new_cache = None
+    else:
+        # Decode: append t (usually 1) tokens at cache.length, attend over
+        # the buffer. With a sliding window the buffer is rolling (mod size).
+        size = cache.k.shape[1]
+        if window:
+            # Rolling ring buffer. When t >= size only the last `size` tokens
+            # can remain: write exactly those (unique slots). NOTE: ring
+            # prefill attention is exact only for queries whose full window
+            # survives — the serve engine prefills in ≤window chunks.
+            if t >= size:
+                k_w, v_w = k[:, -size:], v[:, -size:]
+                start = cache.length + t - size
+                idx = (start + jnp.arange(size)) % size
+            else:
+                k_w, v_w = k, v
+                idx = (cache.length + jnp.arange(t)) % size
+            new_k = cache.k.at[:, idx].set(k_w.astype(cache.k.dtype))
+            new_v = cache.v.at[:, idx].set(v_w.astype(cache.v.dtype))
+            # per-query keep mask over ring slots
+            slot_pos = _ring_positions(cache.length + t, size)  # (size,)
+            q_pos = cache.length + jnp.arange(t)  # (t,)
+            mask = (
+                (slot_pos[None, :] >= 0)
+                & (slot_pos[None, :] <= q_pos[:, None])
+                & (slot_pos[None, :] > q_pos[:, None] - window)
+            )  # (t, size)
+        else:
+            new_k = _dyn_append(cache.k, k, cache.length)
+            new_v = _dyn_append(cache.v, v, cache.length)
+            kv_pos = jnp.arange(size)
+            q_pos = cache.length + jnp.arange(t)
+            mask = kv_pos[None, :] <= q_pos[:, None]  # (T, S)
+        out = _attend(q, new_k, new_v, mask, softcap, scale)
+        new_cache = KVCache(k=new_k, v=new_v, length=cache.length + t)
+    out = out.reshape(b, t, n_heads * head_dim)
+    return L.linear_apply({"w": params["wo"]}, out, "w"), new_cache
+
+
+def _dyn_append(buf, new, start):
+    """Write ``new`` (B,t,...) into ``buf`` (B,S,...) at row ``start``."""
+    return jax.lax.dynamic_update_slice(
+        buf, new.astype(buf.dtype), (0, start, 0, 0)
+    )
+
+
+def _ring_positions(length, size):
+    """Absolute position stored in each ring slot (-1 if empty).
+
+    Slot s holds absolute position p where p ≡ s (mod size) and p is the
+    largest such p < length.
+    """
+    s = jnp.arange(size)
+    full_cycles = (length - 1 - s) // size
+    pos = s + full_cycles * size
+    return jnp.where(length > 0, jnp.where(pos >= 0, pos, -1), -1)
+
+
+# ---------------------------------------------------------------------------
+# MLA forward
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c_kv: Any  # (B, S, kv_lora) compressed latents
+    k_rope: Any  # (B, S, qk_rope)
+    length: Any
+
+
+def mla_init_cache(batch, max_len, kv_lora, qk_rope, dtype):
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, kv_lora), dtype),
+        k_rope=jnp.zeros((batch, max_len, qk_rope), dtype),
+        length=jnp.zeros([], jnp.int32),
+    )
+
+
+def mla_absorbed_decode(params, x, positions, cache: MLACache, *, n_heads,
+                        q_lora, kv_lora, qk_nope, qk_rope, v_head,
+                        rope_theta=1e4):
+    """Absorbed-matmul MLA decode (DeepSeek-V2 trick; §Perf hillclimb).
+
+    The naive decode expands k/v = c_kv @ W_kv_b over ALL cached positions
+    every step — O(S·H·(nope+v)·r) FLOPs and a (B,S,H,·) intermediate that
+    dominated the minicpm3 decode_32k roofline. Absorbing W_uk into the
+    query (q_lat = q_nope·W_ukᵀ) lets attention run directly in the
+    compressed latent space: scores O(S·H·r), context O(S·H·r), and W_uv is
+    applied once to the (B,1,H,r) context. Exact same math (verified in
+    tests/test_models_attention.py::test_mla_absorbed_matches_naive).
+    """
+    b, t, _ = x.shape
+    q_a = L.rmsnorm(x @ params["wq_a"].astype(x.dtype), params["q_a_norm"])
+    q = (q_a @ params["wq_b"].astype(x.dtype)).reshape(
+        b, t, n_heads, qk_nope + qk_rope
+    )
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    q_pe = L.apply_rope(q_pe, positions, rope_theta)
+
+    kv_a = x @ params["wkv_a"].astype(x.dtype)
+    c_kv_new = L.rmsnorm(kv_a[..., :kv_lora], params["kv_a_norm"])
+    k_pe_new = L.apply_rope(kv_a[..., kv_lora:][:, :, None, :], positions,
+                            rope_theta)[:, :, 0, :]
+    c_kv_all = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), (0, cache.length, 0))
+    k_pe_all = jax.lax.dynamic_update_slice(
+        cache.k_rope, k_pe_new.astype(cache.k_rope.dtype),
+        (0, cache.length, 0))
+    new_cache = MLACache(c_kv_all, k_pe_all, cache.length + t)
+
+    # W_kv_b (kv_lora, H*(nope+v)) -> W_uk (r,H,nope), W_uv (r,H,v)
+    w_kv_b = params["wkv_b"].astype(x.dtype).reshape(
+        kv_lora, n_heads, qk_nope + v_head)
+    w_uk, w_uv = w_kv_b[..., :qk_nope], w_kv_b[..., qk_nope:]
+
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # absorb W_uk
+    s_lat = jnp.einsum("bthr,bsr->bhts", q_lat, c_kv_all)
+    s_pe = jnp.einsum("bthp,bsp->bhts", q_pe, k_pe_all)
+    scale = 1.0 / ((qk_nope + qk_rope) ** 0.5)
+    logits = (s_lat + s_pe).astype(jnp.float32) * scale
+    kv_pos = jnp.arange(c_kv_all.shape[1])
+    q_pos = cache.length + jnp.arange(t)
+    mask = kv_pos[None, :] <= q_pos[:, None]  # (t, S)
+    logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", probs, c_kv_all)
+    out = jnp.einsum("bthr,rhv->bthv", ctx, w_uv)  # absorb W_uv
+    out = out.reshape(b, t, n_heads * v_head)
+    return out @ params["wo"].astype(x.dtype), new_cache
+
+
+def mla_apply(params, x, positions, *, n_heads, q_lora, kv_lora, qk_nope,
+              qk_rope, v_head, rope_theta=1e4, cache: Optional[MLACache] = None,
+              absorbed_decode: bool = False):
+    if cache is not None and absorbed_decode:
+        return mla_absorbed_decode(
+            params, x, positions, cache, n_heads=n_heads, q_lora=q_lora,
+            kv_lora=kv_lora, qk_nope=qk_nope, qk_rope=qk_rope, v_head=v_head,
+            rope_theta=rope_theta,
+        )
+    b, t, _ = x.shape
+    # Q path
+    q_a = L.rmsnorm(x @ params["wq_a"].astype(x.dtype), params["q_a_norm"])
+    q = (q_a @ params["wq_b"].astype(x.dtype)).reshape(
+        b, t, n_heads, qk_nope + qk_rope
+    )
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    q_pe = L.apply_rope(q_pe, positions, rope_theta)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # KV path: compress, cache the latent + rope key
+    kv_a = x @ params["wkv_a"].astype(x.dtype)  # (B,T,kv_lora+qk_rope)
+    c_kv = L.rmsnorm(kv_a[..., :kv_lora], params["kv_a_norm"])
+    k_pe = L.apply_rope(kv_a[..., kv_lora:][:, :, None, :], positions,
+                        rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        c_kv_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0)
+        )
+        k_pe_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_pe.astype(cache.k_rope.dtype), (0, cache.length, 0)
+        )
+        s = c_kv_all.shape[1]
+        kv_pos = jnp.arange(s)
+        q_pos = cache.length + jnp.arange(t)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        new_cache = MLACache(c_kv_all, k_pe_all, cache.length + t)
+    else:
+        c_kv_all, k_pe_all = c_kv, k_pe
+        mask = _causal_mask(t, t, 0)
+        new_cache = None
+
+    s = c_kv_all.shape[1]
+    kv = (c_kv_all @ params["wkv_b"].astype(x.dtype)).reshape(
+        b, s, n_heads, qk_nope + v_head
+    )
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+    k_pe_b = jnp.broadcast_to(k_pe_all[:, :, None, :], (b, s, n_heads, qk_rope))
+    k_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+
+    scale = 1.0 / ((qk_nope + qk_rope) ** 0.5)
+    out = _attend(q_full, k_full, v, mask, None, scale)
+    out = out.reshape(b, t, n_heads * v_head)
+    return out @ params["wo"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_defs(d_model: int, n_heads: int, head_dim: int):
+    return {
+        "wq": ParamDef((d_model, n_heads * head_dim), "fan_in", ("embed", "heads")),
+        "wk": ParamDef((d_model, n_heads * head_dim), "fan_in", ("embed", "heads")),
+        "wv": ParamDef((d_model, n_heads * head_dim), "fan_in", ("embed", "heads")),
+        "wo": ParamDef((n_heads * head_dim, d_model), "fan_in", ("heads", "embed")),
+    }
+
+
+def cross_apply(params, x, enc_out, *, n_heads, head_dim):
+    b, t, _ = x.shape
+    s = enc_out.shape[1]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, t, n_heads, head_dim)
+    k = (enc_out @ params["wk"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    v = (enc_out @ params["wv"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    mask = jnp.ones((t, s), bool)
+    out = _attend(q, k, v, mask, None, 1.0 / (head_dim**0.5))
+    return out.reshape(b, t, n_heads * head_dim) @ params["wo"].astype(x.dtype)

@@ -1,0 +1,228 @@
+"""Parameter definitions, norms, embeddings, RoPE/M-RoPE, and MLPs.
+
+Parameters are declared as ``ParamDef`` trees (shape + initializer + logical
+axes). ``materialize`` turns a def-tree into arrays; ``spec_tree`` turns it
+into ``PartitionSpec``s via the mesh rules in ``repro.distributed.sharding``.
+All weight matrices are stored 2-D (optionally with leading stack axes) so
+the COAP projector sees exactly the per-layer matrices the paper projects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    init: str  # 'normal:<std>' | 'zeros' | 'ones' | 'fan_in' | 'ssm_a' | 'ssm_dt'
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    dtype: Any = jnp.float32
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_array(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init.startswith("normal:"):
+        std = float(d.init.split(":")[1])
+        return (std * jax.random.normal(key, d.shape)).astype(d.dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = 1.0 / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, d.shape)).astype(d.dtype)
+    if d.init == "ssm_a":  # mamba2: A_log = log(uniform[1,16])
+        u = jax.random.uniform(key, d.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(d.dtype)
+    if d.init == "ssm_dt":  # mamba2: dt_bias = inv_softplus(uniform[1e-3,1e-1])
+        u = jax.random.uniform(key, d.shape, minval=math.log(1e-3), maxval=math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def materialize(defs, key):
+    """Def-tree -> param-tree with per-leaf folded keys (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_param_def)
+    arrays = [
+        _init_array(jax.random.fold_in(key, i), d) for i, d in enumerate(leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def abstract_params(defs):
+    """Def-tree -> ShapeDtypeStruct tree (no allocation; dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_param_def
+    )
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layer axis to every ParamDef in the tree."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, d.init, (axis_name,) + d.axes, d.dtype),
+        defs,
+        is_leaf=is_param_def,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+# Elementwise-precision switch (§Perf iteration "bf16 elementwise"): the
+# baseline upcasts every norm/activation to fp32, which doubles the HBM
+# traffic of the backward elementwise chains — the dominant memory-term
+# contributor measured on glm4-9b train_4k. With the pure-bf16 path only the
+# variance reduction stays fp32 (numerics validated in
+# tests/test_models_layers.py::test_bf16_elementwise_close). Set per-model
+# from ArchConfig.bf16_elementwise at trace time (single-threaded tracing).
+_PURE_BF16 = {"enabled": False}
+
+
+def set_pure_bf16(flag: bool):
+    _PURE_BF16["enabled"] = bool(flag)
+
+
+def rmsnorm_def(dim: int) -> ParamDef:
+    return ParamDef((dim,), "ones", (None,))
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    if _PURE_BF16["enabled"] and x.dtype != jnp.float32:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * scale.astype(x.dtype)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    if _PURE_BF16["enabled"] and gate.dtype != jnp.float32:
+        return jax.nn.silu(gate) * up
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x):
+    if _PURE_BF16["enabled"] and x.dtype != jnp.float32:
+        return jax.nn.gelu(x)
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+def embed_defs(vocab: int, dim: int, std=0.02):
+    return {"embedding": ParamDef((vocab, dim), f"normal:{std}", ("vocab", "embed"))}
+
+
+def embed_apply(params, tokens, dtype):
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed_apply(params, x):
+    """Tied readout: x @ Eᵀ."""
+    e = params["embedding"].astype(x.dtype)
+    return jnp.einsum("btd,vd->btv", x, e)
+
+
+# ---------------------------------------------------------------------------
+# Dense (2-D weight; reshape head structure in the caller)
+# ---------------------------------------------------------------------------
+def linear_defs(d_in: int, d_out: int, in_axis="embed", out_axis="ffn",
+                name: str = "w", bias: bool = False):
+    defs = {name: ParamDef((d_in, d_out), "fan_in", (in_axis, out_axis))}
+    if bias:
+        defs[name + "_bias"] = ParamDef((d_out,), "zeros", (out_axis,))
+    return defs
+
+
+def linear_apply(params, x, name: str = "w"):
+    w = params[name].astype(x.dtype)
+    y = x @ w
+    b = params.get(name + "_bias")
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, T, H, hd); positions: (B, T) int32. Angles always fp32; the
+    rotation itself runs in x.dtype under the pure-bf16 mode so no h-sized
+    fp32 tensor exists in the forward (they were being saved as fp32 scan
+    residuals — measured §Perf)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,T,hd/2)
+    mul_dtype = x.dtype if (_PURE_BF16["enabled"] and
+                            x.dtype != jnp.float32) else jnp.float32
+    cos = jnp.cos(angles)[:, :, None, :].astype(mul_dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(mul_dtype)
+    x1, x2 = jnp.split(x.astype(mul_dtype), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Sequence[int]):
+    """Qwen2-VL multimodal RoPE. positions3: (3, B, T) — (temporal, h, w)
+    position ids; ``sections`` splits the hd/2 frequency bands between the
+    three position streams (e.g. (16, 24, 24) for hd=128)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)  # (half,)
+    angle_parts = []
+    start = 0
+    for s_idx, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        pos = positions3[s_idx].astype(jnp.float32)  # (B, T)
+        angle_parts.append(pos[..., None] * f)
+        start += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)  # (B,T,half)
+    mul_dtype = x.dtype if (_PURE_BF16["enabled"] and
+                            x.dtype != jnp.float32) else jnp.float32
+    cos = jnp.cos(angles)[:, :, None, :].astype(mul_dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(mul_dtype)
+    x1, x2 = jnp.split(x.astype(mul_dtype), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU / GELU MLP
+# ---------------------------------------------------------------------------
+def mlp_defs(d_model: int, d_ff: int, gated: bool = True):
+    defs = {
+        "up": ParamDef((d_model, d_ff), "fan_in", ("embed", "ffn")),
+        "down": ParamDef((d_ff, d_model), "fan_in", ("ffn", "embed")),
+    }
+    if gated:
+        defs["gate"] = ParamDef((d_model, d_ff), "fan_in", ("embed", "ffn"))
+    return defs
+
+
+def mlp_apply(params, x, gated: bool = True):
+    up = x @ params["up"].astype(x.dtype)
+    if gated:
+        gate = x @ params["gate"].astype(x.dtype)
+        h = swiglu(gate, up)
+    else:
+        h = gelu(up)
+    return h @ params["down"].astype(x.dtype)

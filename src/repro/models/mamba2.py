@@ -1,0 +1,246 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train scan + O(1) decode.
+
+Follows the SSD formulation (Dao & Gu 2024, arXiv:2405.21060): per head h
+with scalar decay ``a_t = exp(-softplus(dt_t)·exp(A_log_h))``... concretely
+
+    S_t = a_t · S_{t-1} + dt_t · B_t ⊗ x_t          S ∈ R^{P×N}
+    y_t = C_tᵀ S_t + D_h · x_t
+
+Training uses the chunked algorithm: within a chunk the quadratic
+"attention-like" form (C B^T ⊙ decay) runs on the MXU; across chunks a
+lax.scan carries the (H, P, N) state — O(T·L²) intra + O(T/L) sequential
+steps, the TPU-native layout of the paper's kernel (DESIGN.md §3).
+
+Decode is the recurrence verbatim: state (B, H, P, N) + a rolling conv
+window — this is what makes ``long_500k`` O(1)-per-token for mamba2/zamba2.
+
+Weights are 2-D projections (in/out/B/C/dt) — all COAP-projected; the
+per-channel A_log, D, dt_bias and the depthwise conv are dense-Adam leaves
+(DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, rmsnorm, rmsnorm_def
+
+
+def mamba2_dims(d_model: int, expand: int, head_dim: int, d_state: int,
+                n_groups: int = 1):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    # in_proj packs [z, x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return d_inner, n_heads, d_in_proj
+
+
+def mamba2_defs(d_model: int, expand: int = 2, head_dim: int = 64,
+                d_state: int = 128, n_groups: int = 1, conv_kernel: int = 4):
+    d_inner, n_heads, d_in_proj = mamba2_dims(d_model, expand, head_dim,
+                                              d_state, n_groups)
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": ParamDef((d_model, d_in_proj), "fan_in", ("embed", "ffn")),
+        "conv_w": ParamDef((conv_kernel, conv_dim), "fan_in", (None, "ffn")),
+        "conv_b": ParamDef((conv_dim,), "zeros", ("ffn",)),
+        "a_log": ParamDef((n_heads,), "ssm_a", (None,)),
+        "d_skip": ParamDef((n_heads,), "ones", (None,)),
+        "dt_bias": ParamDef((n_heads,), "ssm_dt", (None,)),
+        "out_norm": rmsnorm_def(d_inner),
+        "out_proj": ParamDef((d_inner, d_model), "fan_in", ("ffn", "embed")),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: Any  # (B, K-1, conv_dim) rolling conv inputs
+    state: Any  # (B, H, P, N) SSM state
+
+
+def mamba2_init_cache(batch, d_model, *, expand=2, head_dim=64, d_state=128,
+                      n_groups=1, conv_kernel=4, dtype=jnp.float32):
+    d_inner, n_heads, _ = mamba2_dims(d_model, expand, head_dim, d_state, n_groups)
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, conv_kernel - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+    )
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner : 2 * d_inner + n_groups * d_state]
+    c = zxbcdt[..., 2 * d_inner + n_groups * d_state : 2 * d_inner + 2 * n_groups * d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, x, b, c, dt
+
+
+def _causal_conv_train(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xbc: (B, T, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, T+K-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(k)
+    )
+    out = out + conv_b[None, None, :]
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,T,H,P) dt: (B,T,H) b,c: (B,T,G,N). Returns y (B,T,H,P).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    heads_per_group = h // g
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,T,H)
+    decay = dt * -jnp.exp(a_log.astype(jnp.float32))[None, None, :]  # log a_t
+    xdt = x.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+
+    def to_chunks(v):
+        return v.reshape(bsz, nc, chunk, *v.shape[2:])
+
+    xc, dc = to_chunks(xdt), to_chunks(decay)
+    bc_, cc = to_chunks(b.astype(jnp.float32)), to_chunks(c.astype(jnp.float32))
+    # broadcast groups to heads
+    bc_h = jnp.repeat(bc_, heads_per_group, axis=3)  # (B,NC,L,H,N)
+    cc_h = jnp.repeat(cc, heads_per_group, axis=3)
+
+    cum = jnp.cumsum(dc, axis=2)  # (B,NC,L,H) cumulative log-decay
+    # Intra-chunk (quadratic, MXU): decay from j to i = exp(cum_i - cum_j)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,L_i,L_j,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gamma = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bklhn,bkjhn->bkljh", cc_h, bc_h)  # (B,NC,L_i,L_j,H)
+    y_intra = jnp.einsum("bkljh,bkljh,bkjhp->bklhp", scores, gamma, xc)
+
+    # Chunk-final states: S_k = Σ_j exp(cum_L - cum_j) B_j x_jᵀ
+    tail = cum[:, :, -1:, :] - cum  # (B,NC,L,H)
+    s_chunk = jnp.einsum("bkjh,bkjhn,bkjhp->bkhpn", jnp.exp(tail), bc_h, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    # Inter-chunk: scan carrying (B,H,P,N)
+    def scan_body(s_prev, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        y_prev_state = s_prev  # state entering this chunk
+        s_new = dec[:, :, None, None] * s_prev + s_c
+        return s_new, y_prev_state
+
+    s_init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, s_before = jax.lax.scan(
+        scan_body,
+        s_init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )  # (NC,B,H,P,N): state at the START of each chunk
+    s_before = jnp.moveaxis(s_before, 0, 1)  # (B,NC,H,P,N)
+
+    # Inter-chunk output: y_i += C_i · exp(cum_i) · S_start
+    y_inter = jnp.einsum("bklh,bklhn,bkhpn->bklhp", jnp.exp(cum), cc_h, s_before)
+
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y
+
+
+def mamba2_apply(params, x, *, expand=2, head_dim=64, d_state=128, n_groups=1,
+                 conv_kernel=4, chunk=256,
+                 cache: Optional[SSMCache] = None) -> Tuple[Any, Optional[SSMCache]]:
+    """x: (B, T, D). cache=None ⇒ training (chunked); else single/few-step
+    decode via the recurrence."""
+    bsz, t, d_model = x.shape
+    d_inner, n_heads, _ = mamba2_dims(d_model, expand, head_dim, d_state, n_groups)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xin, b, c, dt = _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+
+    if cache is None:
+        pad = (-t) % chunk
+        xbc_conv, _ = _causal_conv_train(xbc, params["conv_w"], params["conv_b"])
+        xin_c = xbc_conv[..., :d_inner].reshape(bsz, t, n_heads, head_dim)
+        b_c = xbc_conv[..., d_inner : d_inner + n_groups * d_state].reshape(
+            bsz, t, n_groups, d_state
+        )
+        c_c = xbc_conv[..., d_inner + n_groups * d_state :].reshape(
+            bsz, t, n_groups, d_state
+        )
+        if pad:
+            def padt(v):
+                return jnp.pad(v, [(0, 0), (0, pad)] + [(0, 0)] * (v.ndim - 2))
+            xin_c, b_c, c_c, dt_p = padt(xin_c), padt(b_c), padt(c_c), padt(dt)
+        else:
+            dt_p = dt
+        dt_full = dt_p + params["dt_bias"].astype(dt_p.dtype)[None, None, :]
+        y = _ssd_chunked(xin_c, dt_full, params["a_log"], b_c, c_c,
+                         params["d_skip"], chunk)
+        y = y[:, :t]
+        new_cache = None
+    else:
+        # Recurrent decode (t small, usually 1): roll conv window + state.
+        k = conv_kernel
+        conv_in = jnp.concatenate([cache.conv.astype(xbc.dtype), xbc], axis=1)
+        # conv_in length = t + k - 1; out[j] = Σ_i w[i]·conv_in[j+i]
+        conv_out = sum(
+            conv_in[:, i : i + t, :]
+            * params["conv_w"][i][None, None, :].astype(xbc.dtype)
+            for i in range(k)
+        )
+        conv_out = conv_out + params["conv_b"][None, None, :].astype(xbc.dtype)
+        xbc_conv = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xbc.dtype)
+        new_conv = conv_in[:, -(k - 1) :, :]
+
+        xin_c = xbc_conv[..., :d_inner].reshape(bsz, t, n_heads, head_dim)
+        b_c = xbc_conv[..., d_inner : d_inner + n_groups * d_state].reshape(
+            bsz, t, n_groups, d_state
+        )
+        c_c = xbc_conv[..., d_inner + n_groups * d_state :].reshape(
+            bsz, t, n_groups, d_state
+        )
+        dt_full = jax.nn.softplus(
+            (dt + params["dt_bias"][None, None, :]).astype(jnp.float32)
+        )
+        a = jnp.exp(
+            dt_full * -jnp.exp(params["a_log"].astype(jnp.float32))[None, None, :]
+        )  # (B,T,H)
+        hpg = n_heads // n_groups
+        b_h = jnp.repeat(b_c, hpg, axis=2).astype(jnp.float32)
+        c_h = jnp.repeat(c_c, hpg, axis=2).astype(jnp.float32)
+
+        def step(s, inp):
+            a_t, bx_t, c_t, x_t, dt_t = inp
+            s_new = a_t[:, :, None, None] * s + (
+                dt_t[:, :, None, None]
+                * jnp.einsum("bhp,bhn->bhpn", x_t.astype(jnp.float32), bx_t)
+            )
+            y_t = jnp.einsum("bhpn,bhn->bhp", s_new, c_t)
+            return s_new, y_t
+
+        seq = (
+            jnp.moveaxis(a, 1, 0),
+            jnp.moveaxis(b_h, 1, 0),
+            jnp.moveaxis(c_h, 1, 0),
+            jnp.moveaxis(xin_c, 1, 0),
+            jnp.moveaxis(dt_full, 1, 0),
+        )
+        s_final, ys = jax.lax.scan(step, cache.state, seq)
+        y = jnp.moveaxis(ys, 0, 1)  # (B,T,H,P)
+        y = y + xin_c.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[
+            None, None, :, None
+        ]
+        new_cache = SSMCache(conv=new_conv, state=s_final)
+
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                params["out_norm"])
+    return y @ params["out_proj"].astype(x.dtype), new_cache

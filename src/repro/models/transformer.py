@@ -1,0 +1,338 @@
+"""Decoder stacks: scan-over-layers blocks for every assigned family.
+
+One compiled layer body per architecture (lax.scan over stacked params, with
+jax.checkpoint remat inside the scan) — this keeps dry-run compile time and
+HLO size independent of depth (80-layer qwen2-vl compiles the same graph
+size as 22-layer tinyllama).
+
+Families:
+  * dense / moe / vlm:  [RMSNorm → GQA|MLA → +res → RMSNorm → MLP|MoE → +res]
+  * ssm (mamba2):       [RMSNorm → Mamba2 → +res]
+  * hybrid (zamba2):    mamba2 layers with ONE shared transformer block
+                        applied every ``attn_every`` layers (flag-driven
+                        lax.cond inside the scan; the shared block's KV cache
+                        is a (n_apps, ...) buffer indexed by a scan-carried
+                        counter). Shared weights ⇒ one COAP projector.
+  * audio (whisper):    bidirectional encoder over precomputed mel-frame
+                        embeddings (stub frontend) + causal decoder with
+                        cross-attention (enc K/V recomputed from enc_out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as S
+from repro.models import moe as E
+
+
+# ---------------------------------------------------------------------------
+# Per-layer defs
+# ---------------------------------------------------------------------------
+def attn_block_defs(cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    defs = {"ln1": L.rmsnorm_def(cfg.d_model), "ln2": L.rmsnorm_def(cfg.d_model)}
+    if cfg.mla:
+        defs["attn"] = A.mla_defs(cfg.d_model, cfg.n_heads, cfg.q_lora_rank,
+                                  cfg.kv_lora_rank, cfg.qk_nope_dim,
+                                  cfg.qk_rope_dim, cfg.v_head_dim)
+    else:
+        defs["attn"] = A.gqa_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  qkv_bias=cfg.qkv_bias)
+    if cfg.n_experts:
+        defs["moe"] = E.moe_defs(cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        defs["mlp"] = L.mlp_defs(cfg.d_model, cfg.d_ff)
+    return defs
+
+
+def ssm_block_defs(cfg: ArchConfig):
+    return {
+        "ln": L.rmsnorm_def(cfg.d_model),
+        "ssm": S.mamba2_defs(cfg.d_model, expand=cfg.ssm_expand,
+                             head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                             n_groups=cfg.ssm_groups, conv_kernel=cfg.ssm_conv),
+    }
+
+
+def _attn_apply(cfg: ArchConfig, params, h, positions, cache):
+    if cfg.mla:
+        return A.mla_apply(
+            params, h, positions, n_heads=cfg.n_heads, q_lora=cfg.q_lora_rank,
+            kv_lora=cfg.kv_lora_rank, qk_nope=cfg.qk_nope_dim,
+            qk_rope=cfg.qk_rope_dim, v_head=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta, cache=cache,
+            absorbed_decode=cfg.mla_absorbed_decode,
+        )
+    return A.gqa_apply(
+        params, h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window, softcap=cfg.logit_softcap,
+        mrope_sections=cfg.mrope_sections, cache=cache, qkv_bias=cfg.qkv_bias,
+        attn_impl=cfg.attn_impl,
+    )
+
+
+def attn_block_apply(cfg: ArchConfig, params, h, positions, cache=None):
+    """Returns (h, new_cache, aux_loss)."""
+    a_out, new_cache = _attn_apply(
+        cfg, params["attn"], L.rmsnorm(h, params["ln1"], cfg.norm_eps),
+        positions, cache,
+    )
+    h = h + a_out
+    hn = L.rmsnorm(h, params["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        moe_fn = (E.moe_apply_local_ep if cfg.moe_impl == "local_ep"
+                  else E.moe_apply)
+        m_out, aux = moe_fn(params["moe"], hn, n_experts=cfg.n_experts,
+                            top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    else:
+        m_out, aux = L.mlp_apply(params["mlp"], hn), jnp.zeros([], jnp.float32)
+    return h + m_out, new_cache, aux
+
+
+def ssm_block_apply(cfg: ArchConfig, params, h, cache=None):
+    out, new_cache = S.mamba2_apply(
+        params["ssm"], L.rmsnorm(h, params["ln"], cfg.norm_eps),
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+        n_groups=cfg.ssm_groups, conv_kernel=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+        cache=cache,
+    )
+    return h + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+_REMAT_POLICIES = {
+    # save weight-matmul outputs (no batch dims), recompute attention scores
+    # and elementwise — the memory/compute sweet spot for long sequences
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+    "dots": "dots_saveable",         # saves attention scores too (fast bwd)
+    "nothing": "nothing_saveable",   # minimal memory, max recompute
+}
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat:
+        policy = getattr(jax.checkpoint_policies,
+                         _REMAT_POLICIES.get(cfg.remat_policy, "dots_with_no_batch_dims_saveable"))
+        return jax.checkpoint(fn, policy=policy)
+    return fn
+
+
+def uniform_stack_defs(cfg: ArchConfig):
+    block = ssm_block_defs(cfg) if cfg.family == "ssm" else attn_block_defs(cfg)
+    return L.stack_defs(block, cfg.n_layers)
+
+
+def uniform_stack_apply(cfg: ArchConfig, stacked, h, positions, caches=None):
+    """caches: pytree stacked on axis 0 (or None). Returns (h, caches, aux)."""
+    decode = caches is not None
+
+    if cfg.family == "ssm":
+
+        def body(carry, xs):
+            hh = carry
+            if decode:
+                p, c = xs
+                hh, new_c = ssm_block_apply(cfg, p, hh, c)
+            else:
+                p, new_c = xs, 0.0
+                hh, _ = ssm_block_apply(cfg, p, hh, None)
+            return hh, new_c
+
+        body = _maybe_remat(body, cfg) if not decode else body
+        h, new_caches = jax.lax.scan(
+            body, h, (stacked, caches) if decode else stacked
+        )
+        return h, (new_caches if decode else None), jnp.zeros([], jnp.float32)
+
+    def body(carry, xs):
+        hh, aux = carry
+        if decode:
+            p, c = xs
+            hh, new_c, a = attn_block_apply(cfg, p, hh, positions, c)
+        else:
+            p = xs
+            hh, new_c, a = attn_block_apply(cfg, p, hh, positions, None)
+            new_c = 0.0
+        return (hh, aux + a), new_c
+
+    wrapped = _maybe_remat(body, cfg) if not decode else body
+    (h, aux), new_caches = jax.lax.scan(
+        wrapped, (h, jnp.zeros([], jnp.float32)),
+        (stacked, caches) if decode else stacked,
+    )
+    return h, (new_caches if decode else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): mamba backbone + one shared attention block
+# ---------------------------------------------------------------------------
+def hybrid_defs(cfg: ArchConfig):
+    return {
+        "ssm_layers": L.stack_defs(ssm_block_defs(cfg), cfg.n_layers),
+        "shared_attn": attn_block_defs(cfg),
+    }
+
+
+def hybrid_flags(cfg: ArchConfig) -> jnp.ndarray:
+    """True after layers attn_every-1, 2·attn_every-1, ... (static pattern)."""
+    idx = jnp.arange(cfg.n_layers)
+    return (idx % cfg.attn_every) == (cfg.attn_every - 1)
+
+
+def hybrid_n_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def hybrid_apply(cfg: ArchConfig, params, h, positions, caches=None):
+    """caches = {'ssm': stacked(L), 'kv': stacked(n_apps)} or None."""
+    flags = hybrid_flags(cfg)
+    decode = caches is not None
+    shared = params["shared_attn"]
+
+    def apply_shared(operand):
+        hh, kv_all, app_idx = operand
+        if decode:
+            cache_i = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, app_idx, 0, False),
+                kv_all,
+            )
+        else:
+            cache_i = None
+        hh2, new_ci, _ = attn_block_apply(cfg, shared, hh, positions, cache_i)
+        if decode:
+            kv_all = jax.tree_util.tree_map(
+                lambda c, ci: jax.lax.dynamic_update_index_in_dim(c, ci, app_idx, 0),
+                kv_all, new_ci,
+            )
+        return hh2, kv_all, app_idx + 1
+
+    def body(carry, xs):
+        hh, kv_all, app_idx = carry
+        if decode:
+            (p, ssm_c), flag = xs
+            hh, new_ssm_c = ssm_block_apply(cfg, p, hh, ssm_c)
+        else:
+            p, flag = xs
+            hh, new_ssm_c = ssm_block_apply(cfg, p, hh, None)
+            new_ssm_c = 0.0
+        hh, kv_all, app_idx = jax.lax.cond(
+            flag, apply_shared, lambda o: o, (hh, kv_all, app_idx)
+        )
+        return (hh, kv_all, app_idx), new_ssm_c
+
+    if decode:
+        kv0 = caches["kv"]
+        xs = ((params["ssm_layers"], caches["ssm"]), flags)
+    else:
+        # dummy zero-length KV for structure parity in train mode
+        kv0 = A.gqa_init_cache(h.shape[0], 0, cfg.n_kv_heads,
+                               cfg.resolved_head_dim, cfg.dtype)
+        kv0 = jax.tree_util.tree_map(lambda c: c[None], kv0)
+        xs = (params["ssm_layers"], flags)
+
+    wrapped = _maybe_remat(body, cfg) if not decode else body
+    (h, kv_final, _), new_ssm = jax.lax.scan(
+        wrapped, (h, kv0, jnp.zeros([], jnp.int32)), xs
+    )
+    new_caches = {"ssm": new_ssm, "kv": kv_final} if decode else None
+    return h, new_caches, jnp.zeros([], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+def encoder_block_defs(cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": L.rmsnorm_def(cfg.d_model),
+        "attn": A.gqa_defs(cfg.d_model, cfg.n_heads, cfg.n_heads, hd),
+        "ln2": L.rmsnorm_def(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def decoder_block_defs(cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": L.rmsnorm_def(cfg.d_model),
+        "attn": A.gqa_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln_x": L.rmsnorm_def(cfg.d_model),
+        "cross": A.cross_defs(cfg.d_model, cfg.n_heads, hd),
+        "ln2": L.rmsnorm_def(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def encdec_defs(cfg: ArchConfig):
+    return {
+        "encoder": L.stack_defs(encoder_block_defs(cfg), cfg.encoder_layers),
+        "decoder": L.stack_defs(decoder_block_defs(cfg), cfg.n_layers),
+        "enc_ln": L.rmsnorm_def(cfg.d_model),
+    }
+
+
+def encoder_apply(cfg: ArchConfig, params, enc_embeds):
+    """Bidirectional self-attention over (stub) frame embeddings."""
+    hd = cfg.resolved_head_dim
+    b, t, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(hh, p):
+        x = L.rmsnorm(hh, p["ln1"], cfg.norm_eps)
+        q = (x @ p["attn"]["wq"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+        k = (x @ p["attn"]["wk"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+        v = (x @ p["attn"]["wv"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        mask = jnp.ones((t, t), bool)  # bidirectional
+        o = A._attend(q, k, v, mask, None, 1.0 / hd**0.5)
+        hh = hh + o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
+        hh = hh + L.mlp_apply(p["mlp"], L.rmsnorm(hh, p["ln2"], cfg.norm_eps),
+                              gated=False)
+        return hh, None
+
+    body_fn = _maybe_remat(lambda c, x: body(c, x), cfg)
+    h, _ = jax.lax.scan(body_fn, enc_embeds, params["encoder"])
+    return L.rmsnorm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def decoder_apply(cfg: ArchConfig, params, h, positions, enc_out, caches=None):
+    decode = caches is not None
+    hd = cfg.resolved_head_dim
+
+    def body(carry, xs):
+        hh = carry
+        if decode:
+            p, c = xs
+        else:
+            p, c = xs, None
+        a_out, new_c = A.gqa_apply(
+            p["attn"], L.rmsnorm(hh, p["ln1"], cfg.norm_eps), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta, cache=c,
+        )
+        hh = hh + a_out
+        hh = hh + A.cross_apply(
+            p["cross"], L.rmsnorm(hh, p["ln_x"], cfg.norm_eps), enc_out,
+            n_heads=cfg.n_heads, head_dim=hd,
+        )
+        hh = hh + L.mlp_apply(p["mlp"], L.rmsnorm(hh, p["ln2"], cfg.norm_eps),
+                              gated=False)
+        return hh, (new_c if decode else 0.0)
+
+    wrapped = _maybe_remat(body, cfg) if not decode else body
+    h, new_caches = jax.lax.scan(
+        wrapped, h, (params["decoder"], caches) if decode else params["decoder"]
+    )
+    return h, (new_caches if decode else None), jnp.zeros([], jnp.float32)

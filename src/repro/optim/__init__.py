@@ -1,0 +1,52 @@
+"""Optimizer substrate: an optax-like GradientTransformation library.
+
+Built in-repo (no optax dependency) so the COAP projection machinery in
+``repro.core`` can integrate with Adam/AdamW/Adafactor as first-class
+transformations, and so optimizer state pytrees are fully visible to the
+checkpointing / sharding / memory-accounting layers.
+"""
+from repro.optim.transform import (
+    GradientTransformation,
+    OptState,
+    chain,
+    identity,
+    apply_updates,
+    clip_by_global_norm,
+    add_decayed_weights,
+    scale,
+    scale_by_schedule,
+    tree_zeros_like,
+)
+from repro.optim.adamw import adam, adamw, scale_by_adam
+from repro.optim.adafactor import adafactor, scale_by_adafactor
+from repro.optim.sgd import sgd, momentum
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_decay_schedule,
+    warmup_cosine_schedule,
+    linear_schedule,
+)
+
+__all__ = [
+    "GradientTransformation",
+    "OptState",
+    "chain",
+    "identity",
+    "apply_updates",
+    "clip_by_global_norm",
+    "add_decayed_weights",
+    "scale",
+    "scale_by_schedule",
+    "tree_zeros_like",
+    "adam",
+    "adamw",
+    "scale_by_adam",
+    "adafactor",
+    "scale_by_adafactor",
+    "sgd",
+    "momentum",
+    "constant_schedule",
+    "cosine_decay_schedule",
+    "warmup_cosine_schedule",
+    "linear_schedule",
+]

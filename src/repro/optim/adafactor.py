@@ -1,0 +1,146 @@
+"""Adafactor (Shazeer & Stern 2018) as a GradientTransformation.
+
+Implements the factored second moment of paper Eqn 3: for a 2-D weight the
+``mn`` second-moment matrix is replaced by row/col accumulators ``R (m,1)``
+and ``C (1,n)`` with ``V_hat = (R C) / mean(R)``. 1-D (and scalar) params fall
+back to an unfactored second moment. Matches the paper's Adafactor baseline
+(β2 schedule ``1 - t^{-decay}``; no first moment by default).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    scale_by_learning_rate,
+)
+
+
+class FactoredState(NamedTuple):
+    count: jnp.ndarray
+    row: Any  # pytree: (m,) per 2-D leaf, None-sentinel zeros for 1-D
+    col: Any
+    nu: Any  # unfactored fallback for <2-D leaves
+    mu: Any  # optional first moment (zeros-pytree if disabled)
+
+
+def _decay_rate(count, decay: float):
+    t = count.astype(jnp.float32) + 1.0
+    return 1.0 - t ** (-decay)
+
+
+def scale_by_adafactor(
+    b2_decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    b1: Optional[float] = None,
+    factored_dims: int = 2,
+) -> GradientTransformation:
+    """RMS-normalized factored second-moment scaling.
+
+    Args:
+      b2_decay: exponent of the ``1 - t^-decay`` beta2 schedule (paper's γ).
+      b1: first-moment coefficient; ``None`` disables the first moment
+        (classic Adafactor).
+    """
+
+    def _is_factored(p):
+        return p.ndim >= factored_dims
+
+    def init_fn(params):
+        def row_init(p):
+            if _is_factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        def col_init(p):
+            if _is_factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        def nu_init(p):
+            if _is_factored(p):
+                return jnp.zeros((1,), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def mu_init(p):
+            if b1 is None:
+                return jnp.zeros((1,), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return FactoredState(
+            count=jnp.zeros([], jnp.int32),
+            row=jax.tree_util.tree_map(row_init, params),
+            col=jax.tree_util.tree_map(col_init, params),
+            nu=jax.tree_util.tree_map(nu_init, params),
+            mu=jax.tree_util.tree_map(mu_init, params),
+        )
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        b2 = _decay_rate(state.count, b2_decay)
+
+        def upd(g, r, c, v, m):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _is_factored(g):
+                new_r = b2 * r + (1.0 - b2) * jnp.sum(g2, axis=-1)
+                new_c = b2 * c + (1.0 - b2) * jnp.sum(g2, axis=-2)
+                # V_hat = RC / mean(R)   (paper Eqn 3 rearranged)
+                mean_r = jnp.mean(new_r, axis=-1, keepdims=True)
+                vhat = (
+                    new_r[..., :, None] * new_c[..., None, :] / (mean_r[..., None] + eps)
+                )
+                new_v = v
+            else:
+                new_v = b2 * v + (1.0 - b2) * g2
+                vhat = new_v
+                new_r, new_c = r, c
+            u = g32 / jnp.sqrt(vhat + eps)
+            # Update clipping (Adafactor sec. 6): divide by max(1, RMS(u)/d).
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if b1 is not None:
+                new_m = b1 * m + (1.0 - b1) * u
+                u = new_m
+            else:
+                new_m = m
+            return u.astype(g.dtype), new_r, new_c, new_v, new_m
+
+        flat_u, treedef = jax.tree_util.tree_flatten(updates)
+        flat_r = treedef.flatten_up_to(state.row)
+        flat_c = treedef.flatten_up_to(state.col)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_m = treedef.flatten_up_to(state.mu)
+        outs = [upd(*args) for args in zip(flat_u, flat_r, flat_c, flat_v, flat_m)]
+        new_updates = treedef.unflatten([o[0] for o in outs])
+        new_state = FactoredState(
+            count=count,
+            row=treedef.unflatten([o[1] for o in outs]),
+            col=treedef.unflatten([o[2] for o in outs]),
+            nu=treedef.unflatten([o[3] for o in outs]),
+            mu=treedef.unflatten([o[4] for o in outs]),
+        )
+        return new_updates, new_state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def adafactor(
+    learning_rate,
+    b2_decay: float = 0.8,
+    b1: Optional[float] = None,
+    weight_decay: float = 0.0,
+    clip_threshold: float = 1.0,
+) -> GradientTransformation:
+    txs = [scale_by_adafactor(b2_decay=b2_decay, b1=b1, clip_threshold=clip_threshold)]
+    if weight_decay:
+        txs.append(add_decayed_weights(weight_decay))
+    txs.append(scale_by_learning_rate(learning_rate))
+    return chain(*txs)

@@ -1,0 +1,84 @@
+"""Adam / AdamW as GradientTransformations (Eqn 2 of the paper)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    scale_by_learning_rate,
+    tree_zeros_like,
+)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def scale_by_adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    mu_dtype=None,
+) -> GradientTransformation:
+    """Standard bias-corrected Adam moment scaling (paper Eqn 2)."""
+
+    def init_fn(params):
+        mu = tree_zeros_like(params, dtype=mu_dtype)
+        nu = tree_zeros_like(params, dtype=mu_dtype)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1.0 - b1) * g.astype(m.dtype), state.mu, updates
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g.astype(v.dtype)),
+            state.nu,
+            updates,
+        )
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        new_updates = jax.tree_util.tree_map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu
+        )
+        return new_updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def adam(
+    learning_rate,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    mu_dtype=None,
+) -> GradientTransformation:
+    return chain(
+        scale_by_adam(b1=b1, b2=b2, eps=eps, mu_dtype=mu_dtype),
+        scale_by_learning_rate(learning_rate),
+    )
+
+
+def adamw(
+    learning_rate,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    mask=None,
+    mu_dtype=None,
+) -> GradientTransformation:
+    return chain(
+        scale_by_adam(b1=b1, b2=b2, eps=eps, mu_dtype=mu_dtype),
+        add_decayed_weights(weight_decay, mask=mask),
+        scale_by_learning_rate(learning_rate),
+    )

@@ -1,0 +1,49 @@
+"""Learning-rate schedules (jnp-traceable: step index -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def linear_schedule(init_value: float, end_value: float, transition_steps: int):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(1, transition_steps), 0.0, 1.0)
+        return init_value + frac * (end_value - init_value)
+
+    return schedule
+
+
+def cosine_decay_schedule(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(1, decay_steps), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1.0 - alpha) * cosine + alpha)
+
+    return schedule
+
+
+def warmup_cosine_schedule(
+    peak_value: float,
+    warmup_steps: int,
+    decay_steps: int,
+    end_value: float = 0.0,
+    init_value: float = 0.0,
+):
+    """Linear warmup then cosine decay — the LLaMA-pretraining default."""
+
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = init_value + (peak_value - init_value) * count / max(1, warmup_steps)
+        frac = jnp.clip(
+            (count - warmup_steps) / max(1, decay_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = end_value + 0.5 * (peak_value - end_value) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(count < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,46 @@
+"""SGD / momentum as GradientTransformations."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import (
+    GradientTransformation,
+    chain,
+    scale_by_learning_rate,
+    tree_zeros_like,
+)
+
+
+class MomentumState(NamedTuple):
+    trace: Any
+
+
+def momentum(decay: float = 0.9, nesterov: bool = False) -> GradientTransformation:
+    def init_fn(params):
+        return MomentumState(trace=tree_zeros_like(params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        trace = jax.tree_util.tree_map(
+            lambda t, g: decay * t + g.astype(t.dtype), state.trace, updates
+        )
+        if nesterov:
+            updates = jax.tree_util.tree_map(
+                lambda t, g: decay * t + g.astype(t.dtype), trace, updates
+            )
+        else:
+            updates = trace
+        return updates, MomentumState(trace=trace)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def sgd(learning_rate, momentum_decay: float = 0.0, nesterov: bool = False):
+    if momentum_decay:
+        return chain(
+            momentum(momentum_decay, nesterov), scale_by_learning_rate(learning_rate)
+        )
+    return scale_by_learning_rate(learning_rate)

@@ -1,0 +1,184 @@
+"""GradientTransformation protocol and generic combinators.
+
+Mirrors the optax design: a transformation is an (init, update) pair over
+pytrees. ``update(grads, state, params) -> (updates, new_state)``; the caller
+applies ``params + updates``. All state is an explicit pytree so it can be
+sharded with pjit, checkpointed, and byte-accounted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Params = Any
+Updates = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    """An (init, update) pair, optax-style."""
+
+    init: Callable[[Params], OptState]
+    update: Callable[[Updates, OptState, Optional[Params]], tuple]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ChainState(NamedTuple):
+    states: tuple
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (optax.chain semantics)."""
+
+    def init_fn(params):
+        return ChainState(tuple(t.init(params) for t in transforms))
+
+    def update_fn(updates, state, params=None):
+        new_states = []
+        for t, s in zip(transforms, state.states):
+            updates, new_s = t.update(updates, s, params)
+            new_states.append(new_s)
+        return updates, ChainState(tuple(new_states))
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    """``params + updates`` leafwise, preserving param dtypes."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def tree_zeros_like(params: Params, dtype=None) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params
+    )
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.asarray(0.0)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ClipState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        g_norm = global_norm(updates)
+        scale_factor = jnp.minimum(1.0, max_norm / (g_norm + 1e-16))
+        updates = jax.tree_util.tree_map(
+            lambda u: (u.astype(jnp.float32) * scale_factor).astype(u.dtype), updates
+        )
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class AddWeightDecayState(NamedTuple):
+    pass
+
+
+def add_decayed_weights(
+    weight_decay: float, mask: Optional[Callable[[Params], Any]] = None
+) -> GradientTransformation:
+    """Adds ``weight_decay * param`` to updates (decoupled weight decay)."""
+
+    def init_fn(params):
+        del params
+        return AddWeightDecayState()
+
+    def update_fn(updates, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        if mask is not None:
+            m = mask(params)
+            updates = jax.tree_util.tree_map(
+                lambda u, p, mi: u + weight_decay * p.astype(u.dtype) if mi else u,
+                updates,
+                params,
+                m,
+            )
+        else:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params
+            )
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleState(NamedTuple):
+    pass
+
+
+def scale(step_size: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        updates = jax.tree_util.tree_map(lambda u: u * step_size, updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None):
+        del params
+        step_size = schedule(state.count)
+        updates = jax.tree_util.tree_map(lambda u: u * step_size, updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale_by_learning_rate(
+    learning_rate: ScalarOrSchedule, *, flip_sign: bool = True
+) -> GradientTransformation:
+    sign = -1.0 if flip_sign else 1.0
+    if callable(learning_rate):
+        return scale_by_schedule(lambda c: sign * learning_rate(c))
+    return scale(sign * learning_rate)

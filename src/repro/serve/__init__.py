@@ -1,0 +1,4 @@
+"""Serving: batched prefill + decode engine over the model zoo's caches."""
+from repro.serve.engine import ServeEngine, ServeConfig
+
+__all__ = ["ServeEngine", "ServeConfig"]

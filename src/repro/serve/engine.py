@@ -1,0 +1,90 @@
+"""Batched serving engine: chunked prefill + jitted greedy/temperature decode.
+
+The engine drives the model-zoo cache machinery (dense KV, rolling SWA ring,
+MLA latents, SSM state): prompts are prefilled in ≤window chunks (exactness
+for rolling caches — see models/attention.py), then tokens decode one step
+at a time with a single compiled ``decode_step`` for the whole batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LMModel
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_prompt_len: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0  # 0 = greedy
+    prefill_chunk: int = 0  # 0 = auto (window size or full prompt)
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: LMModel, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b, c: model.logits(p, b, c)[:2],
+        )
+
+    def _pad_prompts(self, prompts: List[List[int]]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        max_len = max(len(p) for p in prompts)
+        b = len(prompts)
+        toks = jnp.zeros((b, max_len), jnp.int32)
+        lens = jnp.asarray([len(p) for p in prompts], jnp.int32)
+        for i, p in enumerate(prompts):
+            toks = toks.at[i, : len(p)].set(jnp.asarray(p, jnp.int32))
+        return toks, lens
+
+    def generate(self, prompts: List[List[int]]) -> List[List[int]]:
+        """Greedy/temperature generation for a batch of token prompts."""
+        cfg = self.cfg
+        model = self.model
+        toks, lens = self._pad_prompts(prompts)
+        b, t = toks.shape
+        max_len = t + cfg.max_new_tokens
+        caches = model.init_cache(b, max_len)
+
+        window = model.cfg.sliding_window
+        chunk = cfg.prefill_chunk or (min(window, t) if window else t)
+        # chunked prefill (ring-exact for SWA)
+        pos0 = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        logits = None
+        for s in range(0, t, chunk):
+            e = min(s + chunk, t)
+            batch = {"tokens": toks[:, s:e], "positions": pos0[:, s:e]}
+            logits, caches = self._prefill(self.params, batch, caches)
+
+        out = [list(p) for p in prompts]
+        cur = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+        key = jax.random.key(cfg.seed)
+        done = [False] * b
+        for step in range(cfg.max_new_tokens):
+            for i in range(b):
+                if not done[i]:
+                    tok = int(cur[i])
+                    out[i].append(tok)
+                    if cfg.eos_id is not None and tok == cfg.eos_id:
+                        done[i] = True
+            if all(done):
+                break
+            pos = jnp.full((b, 1), t + step, jnp.int32)
+            batch = {"tokens": cur[:, None], "positions": pos}
+            logits, caches = self._decode(self.params, caches, batch)
+            last = logits[:, -1, :].astype(jnp.float32)
+            if cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(sub, last / cfg.temperature, -1)
+            else:
+                cur = jnp.argmax(last, -1)
+            cur = cur.astype(jnp.int32)
+        return out

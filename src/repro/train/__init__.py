@@ -1,0 +1,8 @@
+"""Training substrate: step factory, fault-tolerant loop, checkpointing."""
+from repro.train.train_state import TrainState
+from repro.train.step import make_train_step
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train import checkpoint, metrics
+
+__all__ = ["TrainState", "make_train_step", "TrainLoop", "TrainLoopConfig",
+           "checkpoint", "metrics"]

@@ -1,0 +1,140 @@
+"""Checkpointing: atomic, step-numbered, elastic reshard-on-restore.
+
+Layout:  <dir>/ckpt_<step>/   manifest.json + <leaf_index>.npy per leaf
+Writes go to ``ckpt_<step>.tmp`` and are renamed only after every file is
+flushed — a crash mid-write can never corrupt the newest valid checkpoint.
+bfloat16 leaves are stored as uint16 views (numpy has no native bf16) with
+the logical dtype recorded in the manifest.
+
+Restore takes a *template* pytree (abstract TrainState) and, optionally, a
+mesh + sharding tree: leaves are device_put directly to their shards, so a
+checkpoint written on one mesh restores onto any other (elastic scaling —
+tested 4→8 devices in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    from repro.core.projector import path_str
+
+    return [(path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+def save(directory: str, step: int, state: Any, keep: int = 3,
+         async_: bool = False) -> str:
+    """Write ckpt_<step>; returns its final path."""
+    host_state = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
+                                        state)
+
+    def _write():
+        final = os.path.join(directory, f"ckpt_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        flat, _ = _leaf_paths(host_state)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(flat):
+            arr = np.asarray(leaf)
+            logical_dtype = str(arr.dtype)
+            if arr.dtype == jnp.bfloat16:
+                arr = arr.view(np.uint16)
+            fname = f"{i:06d}.npy"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "dtype": logical_dtype,
+                 "shape": list(arr.shape)}
+            )
+        mpath = os.path.join(tmp, _MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+        return final
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return os.path.join(directory, f"ckpt_{step:08d}")
+    return _write()
+
+
+def _gc(directory: str, keep: int):
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("ckpt_") and not d.endswith(".tmp")
+    )
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in os.listdir(directory):
+        if d.startswith("ckpt_") and not d.endswith(".tmp"):
+            p = os.path.join(directory, d, _MANIFEST)
+            if os.path.exists(p):
+                best = max(best or -1, int(d.split("_")[1]))
+    return best
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None,
+            mesh=None, spec_tree: Any = None) -> Any:
+    """Load into the structure of ``template``. With mesh+spec_tree, every
+    leaf is placed sharded (elastic: any mesh works)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    cdir = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(os.path.join(cdir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat, treedef = _leaf_paths(template)
+    spec_flat = None
+    if spec_tree is not None:
+        spec_list, _ = jax.tree_util.tree_flatten(
+            spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        spec_flat = spec_list
+
+    leaves = []
+    for i, (path, tmpl_leaf) in enumerate(flat):
+        if path not in by_path:
+            raise ValueError(
+                f"checkpoint {cdir} has no leaf {path!r} — the run "
+                "configuration (optimizer/model structure) differs from the "
+                "one that wrote this checkpoint; use a fresh --ckpt-dir or "
+                "restore with the original config"
+            )
+        entry = by_path[path]
+        arr = np.load(os.path.join(cdir, entry["file"]))
+        if entry["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if mesh is not None and spec_flat is not None:
+            sharding = jax.sharding.NamedSharding(mesh, spec_flat[i])
+            leaves.append(jax.device_put(arr, sharding))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

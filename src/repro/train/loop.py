@@ -1,0 +1,102 @@
+"""The fault-tolerant training loop (used by examples/ and launch/train.py).
+
+Features: checkpoint/resume (atomic, elastic), heartbeat files, straggler
+detection, CEU/PPL metrics, restart-exact data replay. Single-host here;
+on a pod each host runs the same loop (SPMD) with its data shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import Heartbeat, StragglerDetector
+from repro.train.metrics import MetricsLogger
+from repro.train.step import make_train_step
+from repro.train.train_state import TrainState
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    metrics_path: Optional[str] = None
+    heartbeat_path: Optional[str] = None
+    grad_accum: int = 1
+    crash_at_step: Optional[int] = None  # fault-injection for tests
+
+
+class TrainLoop:
+    def __init__(self, model, tx, batch_fn: Callable[[int, int], Dict],
+                 cfg: TrainLoopConfig, init_key=None):
+        self.model = model
+        self.tx = tx
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.logger = MetricsLogger(cfg.metrics_path)
+        self.straggler = StragglerDetector()
+        self.heartbeat = (
+            Heartbeat(cfg.heartbeat_path) if cfg.heartbeat_path else None
+        )
+        self._step_fn = jax.jit(make_train_step(model, tx,
+                                                grad_accum=cfg.grad_accum))
+        self._init_key = init_key if init_key is not None else jax.random.key(0)
+
+    # -- state ---------------------------------------------------------------
+    def init_or_restore(self) -> TrainState:
+        cfg = self.cfg
+        if cfg.ckpt_dir and ckpt.latest_step(cfg.ckpt_dir) is not None:
+            template = jax.eval_shape(
+                lambda: TrainState.create(
+                    self.model.init(self._init_key), self.tx
+                )
+            )
+            state = ckpt.restore(cfg.ckpt_dir, template)
+            return state
+        params = self.model.init(self._init_key)
+        return TrainState.create(params, self.tx)
+
+    # -- main ----------------------------------------------------------------
+    def run(self) -> TrainState:
+        cfg = self.cfg
+        state = self.init_or_restore()
+        start = int(state.step)
+        ceu_total = 0.0
+        for step in range(start, cfg.total_steps):
+            if cfg.crash_at_step is not None and step == cfg.crash_at_step:
+                raise RuntimeError(f"induced crash at step {step}")
+            batch = self.batch_fn(step, 0)
+            t0 = time.time()
+            state, metrics = self._step_fn(state, batch)
+            jax.block_until_ready(state.params)
+            dt = time.time() - t0
+            slow = self.straggler.observe(dt)
+            ceu_total += float(metrics["ceu"])
+            if self.heartbeat:
+                self.heartbeat.beat(step)
+            if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                row = dict(metrics)
+                row["ceu_total"] = ceu_total
+                row["straggler"] = int(slow)
+                ntok = 0
+                b = batch.get("tokens", batch.get("embeds"))
+                if b is not None:
+                    ntok = b.shape[0] * b.shape[1]
+                self.logger.log(step, row, tokens=ntok)
+            if (
+                cfg.ckpt_dir
+                and cfg.ckpt_every
+                and (step + 1) % cfg.ckpt_every == 0
+            ):
+                ckpt.save(cfg.ckpt_dir, step + 1, state, keep=cfg.ckpt_keep)
+        if cfg.ckpt_dir:
+            ckpt.save(cfg.ckpt_dir, int(state.step), state, keep=cfg.ckpt_keep)
+        return state

@@ -1,0 +1,59 @@
+"""Training metrics: CEU (paper Fig 3), PPL, throughput, jsonl logging."""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cumulative_effective_update(updates) -> jnp.ndarray:
+    """CEU increment (paper Fig 3): Σ‖ΔW‖₁ over the applied update tree."""
+    return sum(
+        jnp.sum(jnp.abs(u.astype(jnp.float32)))
+        for u in jax.tree_util.tree_leaves(updates)
+    )
+
+
+class MetricsLogger:
+    """Append-only jsonl metrics with wall-clock + tokens/s derivation."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a") if path else None
+        self.history = []
+        self._last_time = None
+        self._last_step = None
+
+    def log(self, step: int, metrics: Dict[str, Any], tokens: int = 0):
+        now = time.time()
+        row = {"step": step}
+        for k, v in metrics.items():
+            try:
+                row[k] = float(v)
+            except (TypeError, ValueError):
+                row[k] = str(v)
+        if self._last_time is not None and tokens and step > self._last_step:
+            dt = now - self._last_time
+            row["tokens_per_s"] = tokens * (step - self._last_step) / max(dt, 1e-9)
+            row["step_time_s"] = dt / (step - self._last_step)
+        self._last_time, self._last_step = now, step
+        self.history.append(row)
+        if self._f:
+            self._f.write(json.dumps(row) + "\n")
+            self._f.flush()
+        return row
+
+    def close(self):
+        if self._f:
+            self._f.close()
+
+
+def ppl(ce: float) -> float:
+    return float(math.exp(min(ce, 30.0)))

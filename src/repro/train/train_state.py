@@ -1,0 +1,31 @@
+"""TrainState pytree + constructors."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    params: Any
+    opt_state: Any
+
+    @classmethod
+    def create(cls, params, tx):
+        return cls(
+            step=jnp.zeros([], jnp.int32),
+            params=params,
+            opt_state=tx.init(params),
+        )
+
+
+def abstract_train_state(model, tx):
+    """ShapeDtypeStruct TrainState — the dry-run's zero-allocation stand-in."""
+    params = model.abstract_params()
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params,
+        opt_state=jax.eval_shape(tx.init, params),
+    )

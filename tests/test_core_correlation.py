@@ -1,0 +1,87 @@
+"""Eqn 6 (correlation-aware P update): closed-form grads vs autodiff, descent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import correlation
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(m, n, r, seed=0):
+    key = jax.random.key(seed)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    p = jax.random.normal(jax.random.fold_in(key, 2), (n, r)) / np.sqrt(r)
+    mp = 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (m, r))
+    return g, p, mp
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(8, 64),
+    n=st.integers(8, 48),
+    r=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_closed_form_grad_matches_autodiff(m, n, r, seed):
+    r = min(r, n - 1, m - 1)
+    g, p, mp = _rand(m, n, max(r, 1), seed)
+    val, grad = correlation.loss_and_grad(p, g, mp)
+    auto_val = correlation.objective(p, g, mp)
+    auto_grad = jax.grad(lambda q: correlation.objective(q, g, mp).sum())(p)
+    np.testing.assert_allclose(val, auto_val, rtol=1e-5)
+    np.testing.assert_allclose(grad, auto_grad, rtol=5e-4, atol=5e-5)
+
+
+def test_batched_matches_loop():
+    gs, ps, mps = [], [], []
+    for s in range(3):
+        g, p, mp = _rand(32, 24, 6, seed=s)
+        gs.append(g), ps.append(p), mps.append(mp)
+    gb, pb, mb = jnp.stack(gs), jnp.stack(ps), jnp.stack(mps)
+    vb, gradb = correlation.loss_and_grad(pb, gb, mb)
+    for i in range(3):
+        v, gr = correlation.loss_and_grad(ps[i], gs[i], mps[i])
+        np.testing.assert_allclose(vb[i], v, rtol=1e-6)
+        np.testing.assert_allclose(gradb[i], gr, rtol=1e-5, atol=1e-7)
+
+
+def test_sgd_update_descends_objective():
+    g, p, mp = _rand(64, 48, 8, seed=7)
+    before = correlation.objective(p, g, mp)
+    p1 = correlation.sgd_update(p, g, mp, lr=0.05, steps=1)
+    after1 = correlation.objective(p1, g, mp)
+    p5 = correlation.sgd_update(p, g, mp, lr=0.05, steps=5)
+    after5 = correlation.objective(p5, g, mp)
+    assert float(after1) < float(before)
+    assert float(after5) <= float(after1) + 1e-6
+
+
+def test_direction_term_increases_cosine():
+    """Descent on Eqn 6 must INCREASE CosSim(M̂, G) when MSE is held roughly
+    constant — this is the sign the paper's appendix Eqn 3 typo would get
+    wrong (see module docstring in core/correlation.py)."""
+    g, p, mp = _rand(64, 48, 8, seed=11)
+    # Make the moment correlated with g so the cosine term is informative.
+    mp = jnp.einsum("mn,nr->mr", g, p) + 0.05 * mp
+    m_hat = jnp.einsum("mr,nr->mn", mp, p)
+    cos_before = correlation.cos_sim_rows(m_hat, g)
+    p2 = correlation.sgd_update(p, g, mp, lr=0.1, steps=10)
+    m_hat2 = jnp.einsum("mr,nr->mn", mp, p2)
+    cos_after = correlation.cos_sim_rows(m_hat2, g)
+    obj_after = correlation.objective(p2, g, mp)
+    obj_before = correlation.objective(p, g, mp)
+    assert float(obj_after) < float(obj_before)
+    assert float(cos_after) > float(cos_before) - 1e-3
+
+
+def test_objective_zero_when_p_orthonormal_full_rank():
+    """With r == n and orthonormal P, reconstruction is exact ⇒ MSE term 0."""
+    n = 16
+    g = jax.random.normal(jax.random.key(0), (32, n))
+    p = jnp.eye(n)
+    mp = jnp.einsum("mn,nr->mr", g, p)
+    obj = correlation.objective(p, g, mp)
+    np.testing.assert_allclose(obj, 0.0, atol=1e-9)

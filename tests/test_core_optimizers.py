@@ -1,0 +1,189 @@
+"""Algorithm 1/2 integration: schedules, memory ordering, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accounting import optimizer_state_bytes, abstract_state_bytes
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.core.coap_adam import ProjLeaf
+from repro.optim import apply_updates
+
+
+def _params():
+    return {
+        "blk": {"w": jnp.zeros((4, 192, 256)), "norm_scale": jnp.ones((4, 192))},
+        "embed": {"embedding": 0.02 * jnp.ones((512, 192))},
+    }
+
+
+def _tx(name, **kw):
+    kw.setdefault("rank", 32)
+    kw.setdefault("t_update", 4)
+    kw.setdefault("lam", 2)
+    kw.setdefault("learning_rate", 1e-3)
+    return make_optimizer(OptimizerConfig(name=name, **kw))
+
+
+ALL_NAMES = [
+    "adamw",
+    "adafactor",
+    "coap-adamw",
+    "galore-adamw",
+    "flora-adamw",
+    "coap-adafactor",
+    "galore-adafactor",
+    "8bit-coap-adamw",
+    "8bit-adamw",
+]
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_optimizer_runs_and_is_finite(name):
+    params = _params()
+    tx = _tx(name)
+    state = tx.init(params)
+    step = jax.jit(lambda g, s: tx.update(g, s, params))
+    g = jax.tree_util.tree_map(lambda p: 0.1 * jnp.ones_like(p), params)
+    for _ in range(5):
+        upd, state = step(g, state)
+    for leaf in jax.tree_util.tree_leaves(upd):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_memory_ordering_matches_paper():
+    """COAP < Adam; 8-bit COAP < COAP; COAP == GaLore state size (Table 5)."""
+    params = _params()
+    sizes = {}
+    for name in ["adamw", "coap-adamw", "galore-adamw", "8bit-coap-adamw"]:
+        tx = _tx(name)
+        sizes[name] = optimizer_state_bytes(tx.init(params)).total_bytes
+    assert sizes["coap-adamw"] < 0.75 * sizes["adamw"]
+    assert sizes["8bit-coap-adamw"] < 0.45 * sizes["coap-adamw"]
+    assert sizes["coap-adamw"] == sizes["galore-adamw"]
+
+
+def test_abstract_accounting_no_allocation():
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), _params()
+    )
+    tx = _tx("coap-adamw")
+    rep = abstract_state_bytes(tx, shapes)
+    concrete = optimizer_state_bytes(tx.init(_params()))
+    assert rep.total_bytes == concrete.total_bytes
+
+
+def _find_proj_leaves(state):
+    out = []
+
+    def walk(node):
+        if isinstance(node, ProjLeaf):
+            out.append(node)
+            return
+        if isinstance(node, (list, tuple)):
+            for c in node:
+                walk(c)
+        elif isinstance(node, dict):
+            for c in node.values():
+                walk(c)
+        elif hasattr(node, "_fields"):
+            for f in node._fields:
+                walk(getattr(node, f))
+
+    walk(state)
+    return out
+
+
+def test_p_refresh_follows_t_u_schedule():
+    """P must change exactly at steps ≡ 0 (mod T_u) — Algorithm 1 lines 3-8.
+
+    NOTE: uses unclipped gradients — Eqn 6's gradient scales with ‖G‖², so a
+    global-norm-clipped gradient makes the SGD refresh numerically invisible
+    (that scale-sensitivity is a property of the paper's objective; see the
+    ``eqn6_normalize`` beyond-paper option).
+    """
+    params = _params()
+    tx = _tx("coap-adamw", t_update=3, lam=2, grad_clip=None)
+    state = tx.init(params)
+    key = jax.random.key(0)
+    step = jax.jit(lambda g, s: tx.update(g, s, params))
+    prev_p = None
+    for i in range(8):
+        g = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(jax.random.fold_in(key, i), p.shape), params
+        )
+        _, state = step(g, state)
+        p_now = _find_proj_leaves(state)[0].p
+        if prev_p is not None:
+            changed = bool(jnp.max(jnp.abs(p_now - prev_p)) > 1e-7)
+            should_change = (i % 3) == 0  # count was i when this step ran
+            assert changed == should_change, (i, changed, should_change)
+        prev_p = p_now
+
+
+def test_coap_converges_on_quadratic():
+    """COAP must track Adam on a simple least-squares problem (paper: same
+    PPL as AdamW at −61% memory). Flora at the same rank should be worse."""
+    key = jax.random.key(0)
+    m, n = 96, 64
+    w_star = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+
+    def loss(params):
+        return jnp.mean((params["blk"]["w"] - w_star) ** 2)
+
+    results = {}
+    for name in ["coap-adamw", "flora-adamw", "galore-adamw"]:
+        params = {"blk": {"w": jnp.zeros((m, n))}}
+        tx = _tx(name, learning_rate=3e-2, rank=16, t_update=10, lam=5,
+                 grad_clip=None, min_dim=8)
+        state = tx.init(params)
+
+        @jax.jit
+        def step(params, state):
+            g = jax.grad(loss)(params)
+            upd, state = tx.update(g, state, params)
+            return apply_updates(params, upd), state
+
+        for _ in range(300):
+            params, state = step(params, state)
+        results[name] = float(loss(params))
+    init_loss = float(jnp.mean(w_star**2))
+    # COAP reduces the loss >20x from init and beats both baselines at the
+    # same rank/interval (the paper's Fig 3 / Table 7 ordering).
+    assert results["coap-adamw"] < 0.05 * init_loss, results
+    assert results["coap-adamw"] < results["flora-adamw"], results
+    assert results["coap-adamw"] < results["galore-adamw"], results
+
+
+def test_quantized_states_track_fp32():
+    """8-bit COAP update directions must stay close to fp32 COAP."""
+    params = {"blk": {"w": jnp.zeros((128, 96))}}
+    g = 0.1 * jax.random.normal(jax.random.key(3), (128, 96))
+    grads = {"blk": {"w": g}}
+    outs = {}
+    for name in ["coap-adamw", "8bit-coap-adamw"]:
+        tx = _tx(name, rank=16, grad_clip=None)
+        state = tx.init(params)
+        step = jax.jit(lambda gg, s: tx.update(gg, s, params))
+        upd = None
+        for _ in range(3):
+            upd, state = step(grads, state)
+        outs[name] = upd["blk"]["w"]
+    a, b = outs["coap-adamw"], outs["8bit-coap-adamw"]
+    cos = jnp.sum(a * b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b))
+    assert float(cos) > 0.95, float(cos)
+
+
+def test_galore_update_scale_default():
+    """GaLore wrapper defaults to its repo's α=0.25 update scaling."""
+    params = {"blk": {"w": jnp.zeros((96, 64))}}
+    g = {"blk": {"w": 0.1 * jax.random.normal(jax.random.key(0), (96, 64))}}
+    u = {}
+    for name in ["coap-adamw", "galore-adamw"]:
+        tx = _tx(name, rank=16, grad_clip=None, learning_rate=1.0, t_update=1000,
+                 min_dim=8)
+        state = tx.init(params)
+        upd, _ = jax.jit(lambda gg, s: tx.update(gg, s, params))(g, state)
+        u[name] = upd["blk"]["w"]
+    ratio = float(jnp.linalg.norm(u["galore-adamw"]) / jnp.linalg.norm(u["coap-adamw"]))
+    assert 0.15 < ratio < 0.35, ratio

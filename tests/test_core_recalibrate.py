@@ -1,0 +1,71 @@
+"""Eqn 7 (low-cost SVD) vs full SVD: subspace recovery on low-rank gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import recalibrate
+
+
+def _lowrank_gradient(m, n, true_rank, seed=0, noise=1e-3):
+    """Gradients during training are approximately low-rank (paper §3.1)."""
+    key = jax.random.key(seed)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (m, true_rank))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (true_rank, n))
+    eps = noise * jax.random.normal(jax.random.fold_in(key, 3), (m, n))
+    return a @ b + eps
+
+
+def test_lowcost_svd_recovers_true_subspace():
+    m, n, r = 128, 96, 8
+    g = _lowrank_gradient(m, n, r)
+    p_prev = jax.random.normal(jax.random.key(9), (n, r)) / np.sqrt(r)
+    p = recalibrate.lowcost_svd(g, p_prev)
+    p_full = recalibrate.galore_svd(g, r)
+    # Both should span the same top-r right-singular subspace.
+    overlap = recalibrate.subspace_overlap(p, p_full)
+    assert float(overlap) > 0.99, float(overlap)
+
+
+def test_lowcost_svd_orthonormal_columns():
+    g = _lowrank_gradient(64, 48, 6, seed=3)
+    p_prev = jax.random.normal(jax.random.key(1), (48, 6))
+    p = recalibrate.lowcost_svd(g, p_prev)
+    ptp = p.T @ p
+    np.testing.assert_allclose(ptp, jnp.eye(6), atol=1e-5)
+
+
+def test_lowcost_svd_reconstruction_beats_random():
+    g = _lowrank_gradient(96, 64, 8, seed=5, noise=0.05)
+    p_prev = jax.random.normal(jax.random.key(2), (64, 8)) / np.sqrt(8)
+    p = recalibrate.lowcost_svd(g, p_prev)
+    def recon_err(pp):
+        g_hat = g @ pp @ pp.T
+        return float(jnp.linalg.norm(g_hat - g) / jnp.linalg.norm(g))
+    assert recon_err(p) < recon_err(p_prev) * 0.5
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(16, 96),
+    n=st.integers(16, 80),
+    r=st.integers(2, 8),
+    seed=st.integers(0, 100),
+)
+def test_lowcost_svd_batched_and_shapes(m, n, r, seed):
+    r = min(r, min(m, n) - 1)
+    g = jnp.stack([_lowrank_gradient(m, n, r, seed=seed + i) for i in range(2)])
+    p_prev = jax.random.normal(jax.random.key(seed), (2, n, r))
+    p = recalibrate.lowcost_svd(g, p_prev)
+    assert p.shape == (2, n, r)
+    assert bool(jnp.all(jnp.isfinite(p)))
+
+
+def test_galore_svd_is_top_right_singular_vectors():
+    g = _lowrank_gradient(64, 32, 4, seed=8, noise=0.0)
+    p = recalibrate.galore_svd(g, 4)
+    # Projection onto P must preserve essentially all of G's energy.
+    g_hat = g @ p @ p.T
+    rel = jnp.linalg.norm(g - g_hat) / jnp.linalg.norm(g)
+    assert float(rel) < 1e-4

@@ -1,0 +1,81 @@
+"""Data substrate + HLO-analysis units: tokenizer roundtrip, Markov stream
+statistics, collective factor arithmetic, replica-group parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import SyntheticLM, synthetic_batch
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch import hlo_analysis as H
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.text(max_size=200))
+def test_tokenizer_roundtrip(text):
+    tok = ByteTokenizer()
+    ids = tok.encode(text)
+    assert ids[0] == tok.bos
+    assert tok.decode(ids) == text.encode("utf-8", errors="replace").decode(
+        "utf-8", errors="replace"
+    )
+
+
+def test_synthetic_batch_deterministic_and_shifted():
+    a = synthetic_batch(3, 4, 16, 256, seed=1)
+    b = synthetic_batch(3, 4, 16, 256, seed=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    full_a = synthetic_batch(3, 4, 16, 256, seed=1)
+    np.testing.assert_array_equal(np.asarray(a["labels"][:, :-1]),
+                                  np.asarray(a["tokens"][:, 1:]))
+    c = synthetic_batch(4, 4, 16, 256, seed=1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_markov_stream_follows_table():
+    data = SyntheticLM(vocab=64, order=1, noise=0.0, seed=3)
+    b = data.batch(0, batch=4, seq=32)
+    toks = np.asarray(b["tokens"])
+    labels = np.asarray(b["labels"])
+    # with zero noise every next token is table[0][prev]
+    pred = data.table[0][toks]
+    np.testing.assert_array_equal(labels, pred)
+
+
+def test_markov_ce_floor_monotone_in_noise():
+    floors = [SyntheticLM(vocab=64, order=1, noise=n).ce_floor()
+              for n in (0.01, 0.1, 0.3)]
+    assert floors[0] < floors[1] < floors[2]
+
+
+@pytest.mark.parametrize("op,k,expect", [
+    ("all-reduce", 4, 2 * 3 / 4),
+    ("all-gather", 4, 3 / 4),
+    ("reduce-scatter", 4, 3.0),
+    ("all-to-all", 8, 7 / 8),
+    ("collective-permute", 16, 1.0),
+])
+def test_collective_ring_factors(op, k, expect):
+    assert H._COLL_FACTORS[op](k) == pytest.approx(expect)
+
+
+def test_replica_group_parsing():
+    assert H._group_size("replica_groups=[32,16]<=[512]", 0) == 16
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 0) == 4
+    assert H._group_size("no groups here", 7) == 7
+
+
+def test_shape_bytes_parsing():
+    assert H._type_bytes("f32[4,8]{1,0}") == 128
+    assert H._type_bytes("bf16[10]") == 20
+    assert H._type_bytes("(f32[2,2], s8[4])") == 20
+    assert H._type_bytes("pred[]") == 1  # scalar: one element
+
+
+def test_analyze_counts_dot_flops_exactly():
+    co = jax.jit(lambda a, b: a @ b).lower(
+        jnp.zeros((64, 128)), jnp.zeros((128, 32))).compile()
+    a = H.analyze(co.as_text())
+    assert a["flops"] == pytest.approx(2 * 64 * 128 * 32)

@@ -1,0 +1,137 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the ref.py jnp oracles.
+
+Sweeps shapes/dtypes with hypothesis per the assignment; every kernel must
+match its oracle to fp32 tolerance, including ragged (non-multiple) shapes
+and stacked leading axes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.coap_update import coap_fused_update_pallas
+from repro.kernels.quant8 import (
+    dequantize_blockwise_pallas,
+    quantize_blockwise_pallas,
+    quantized_adam_update_pallas,
+)
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(seed), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# coap_update kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(16, 520),
+    n=st.integers(128, 700),
+    r=st.sampled_from([16, 64, 128]),
+    count=st.integers(1, 1000),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_coap_fused_update_matches_ref(m, n, r, count, dtype):
+    g = _rand((m, n), 0, dtype)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    mm = 0.1 * _rand((m, r), 2)
+    vv = jnp.abs(0.01 * _rand((m, r), 3))
+    cnt = jnp.asarray(count, jnp.int32)
+    got = coap_fused_update_pallas(g, p, mm, vv, cnt, interpret=True, bm=128, bn=256)
+    want = ref.coap_fused_update(g, p, mm, vv, cnt)
+    for a, b, name in zip(got, want, ["m", "v", "delta"]):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5, err_msg=name)
+
+
+def test_coap_fused_update_stacked_axes():
+    g = _rand((2, 3, 130, 260), 0)
+    p = _rand((2, 3, 260, 32), 1) / np.sqrt(32)
+    mm = jnp.zeros((2, 3, 130, 32))
+    vv = jnp.zeros((2, 3, 130, 32))
+    cnt = jnp.asarray(7, jnp.int32)
+    got = coap_fused_update_pallas(g, p, mm, vv, cnt, interpret=True, bm=64, bn=128)
+    want = ref.coap_fused_update(g, p, mm, vv, cnt)
+    np.testing.assert_allclose(got[2], want[2], rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# quant8 kernels
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    numel=st.integers(1, 5000),
+    scale_pow=st.integers(-6, 3),
+    seed=st.integers(0, 100),
+)
+def test_quantize_roundtrip_matches_ref(numel, scale_pow, seed):
+    x = (10.0**scale_pow) * _rand((numel,), seed)
+    q_k, s_k = quantize_blockwise_pallas(x, interpret=True)
+    q_r, s_r = ref.quantize_blockwise(x)
+    np.testing.assert_array_equal(q_k, q_r)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-6)
+    x_k = dequantize_blockwise_pallas(q_k, s_k, (numel,), interpret=True)
+    x_r = ref.dequantize_blockwise(q_r, s_r, (numel,))
+    np.testing.assert_allclose(x_k, x_r, rtol=1e-6)
+    # quantization error bound: |x - dq| <= scale/2 per block element
+    err = np.abs(np.asarray(x) - np.asarray(x_k))
+    per_block_bound = np.repeat(np.asarray(s_r), ref.QUANT_BLOCK)[:numel] * 0.5 + 1e-12
+    assert (err <= per_block_bound + 1e-9).all()
+
+
+def test_quantize_zero_block_safe():
+    x = jnp.zeros((512,))
+    q, s = quantize_blockwise_pallas(x, interpret=True)
+    assert bool(jnp.all(q == 0)) and bool(jnp.all(s == 0))
+    back = dequantize_blockwise_pallas(q, s, (512,), interpret=True)
+    assert bool(jnp.all(back == 0))
+
+
+@settings(max_examples=5, deadline=None)
+@given(m=st.integers(8, 200), r=st.sampled_from([16, 64]), seed=st.integers(0, 50))
+def test_quantized_adam_update_matches_ref(m, r, seed):
+    g = 0.1 * _rand((m, r), seed)
+    m0 = 0.05 * _rand((m, r), seed + 1)
+    v0 = jnp.abs(0.01 * _rand((m, r), seed + 2))
+    mq, ms = ref.quantize_blockwise(m0)
+    vq, vs = ref.quantize_blockwise(v0)
+    cnt = jnp.asarray(3, jnp.int32)
+    got = quantized_adam_update_pallas(g, mq, ms, vq, vs, cnt, interpret=True)
+    want = ref.quantized_adam_update(g, mq, ms, vq, vs, cnt)
+    for a, b, name in zip(got, want, ["mq", "ms", "vq", "vs", "delta"]):
+        if a.dtype == jnp.int8:
+            # rounding at the exact .5 boundary may differ by 1 code
+            assert int(jnp.max(jnp.abs(a.astype(jnp.int32) - b.astype(jnp.int32)))) <= 1
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([128, 256, 1024]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 20),
+)
+def test_rmsnorm_matches_ref(rows, d, dtype, seed):
+    x = _rand((rows, d), seed, dtype)
+    scale = 1.0 + 0.1 * _rand((d,), seed + 1)
+    got = rmsnorm_pallas(x, scale, interpret=True, bm=64)
+    want = ref.rmsnorm(x, scale)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_rmsnorm_3d_shape():
+    x = _rand((4, 7, 256), 0)
+    scale = jnp.ones((256,))
+    got = rmsnorm_pallas(x, scale, interpret=True, bm=8)
+    want = ref.rmsnorm(x, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

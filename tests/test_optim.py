@@ -1,0 +1,97 @@
+"""Optimizer substrate: Adam closed form, Adafactor factoring, schedules,
+clipping, chaining — plus hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+
+def test_adam_single_step_closed_form():
+    params = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5, 0.0])}
+    tx = optim.adam(learning_rate=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    state = tx.init(params)
+    upd, _ = tx.update(g, state, params)
+    # step 1: m̂ = g, v̂ = g², update = -lr·g/(|g|+eps)
+    expected = -0.1 * np.sign([1.0, -2.0, 0.5, 0.0]) * (
+        np.abs([1.0, -2.0, 0.5, 0.0]) > 0
+    )
+    got = np.asarray(upd["w"])
+    np.testing.assert_allclose(got[:3], expected[:3], rtol=1e-4)
+    assert got[3] == 0.0
+
+
+def test_adamw_decoupled_weight_decay():
+    params = {"w": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2,))}
+    tx = optim.adamw(learning_rate=0.1, weight_decay=0.5)
+    upd, _ = tx.update(g, tx.init(params), params)
+    # zero grad ⇒ update = -lr·wd·w = -0.05
+    np.testing.assert_allclose(np.asarray(upd["w"]), -0.05, rtol=1e-5)
+
+
+def test_adafactor_factored_state_small():
+    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((64,))}
+    tx = optim.adafactor(learning_rate=0.01)
+    state = tx.init(params)
+    leaves = jax.tree_util.tree_leaves(state)
+    total = sum(x.size for x in leaves)
+    # factored: 64+32 for w, 64 unfactored for b, + scalars/placeholders
+    assert total < 64 * 32 / 4, total
+    g = jax.tree_util.tree_map(lambda p: 0.1 * jnp.ones_like(p), params)
+    upd, state = tx.update(g, state, params)
+    for u in jax.tree_util.tree_leaves(upd):
+        assert bool(jnp.all(jnp.isfinite(u)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(norm=st.floats(0.1, 100.0), max_norm=st.floats(0.5, 5.0))
+def test_clip_by_global_norm_invariant(norm, max_norm):
+    g = {"a": jnp.asarray([norm, 0.0]), "b": jnp.zeros((3,))}
+    tx = optim.clip_by_global_norm(max_norm)
+    upd, _ = tx.update(g, tx.init(g), None)
+    out_norm = float(jnp.sqrt(sum(jnp.sum(x**2)
+                                  for x in jax.tree_util.tree_leaves(upd))))
+    assert out_norm <= max_norm * 1.001
+    if norm <= max_norm:
+        np.testing.assert_allclose(out_norm, norm, rtol=1e-5)
+
+
+def test_warmup_cosine_schedule_shape():
+    s = optim.warmup_cosine_schedule(1.0, warmup_steps=10, decay_steps=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.asarray(55))) < 1.0
+    np.testing.assert_allclose(float(s(jnp.asarray(100))), 0.0, atol=1e-6)
+
+
+def test_chain_order_matters():
+    params = {"w": jnp.ones((2,))}
+    g = {"w": jnp.asarray([10.0, 0.0])}
+    # clip-then-scale != scale-then-clip
+    a = optim.chain(optim.clip_by_global_norm(1.0), optim.scale(2.0))
+    b = optim.chain(optim.scale(2.0), optim.clip_by_global_norm(1.0))
+    ua, _ = a.update(g, a.init(params), params)
+    ub, _ = b.update(g, b.init(params), params)
+    assert float(jnp.linalg.norm(ua["w"])) == pytest.approx(2.0, rel=1e-4)
+    assert float(jnp.linalg.norm(ub["w"])) == pytest.approx(1.0, rel=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), steps=st.integers(2, 10))
+def test_adam_is_scale_free_in_gradient(seed, steps):
+    """Adam invariant: scaling all gradients by c>0 leaves updates unchanged
+    (after enough steps for eps to be negligible)."""
+    key = jax.random.key(seed)
+    params = {"w": jnp.zeros((8, 8))}
+    tx = optim.adam(learning_rate=0.1, eps=1e-12)
+    s1, s2 = tx.init(params), tx.init(params)
+    u1 = u2 = None
+    for i in range(steps):
+        g = jax.random.normal(jax.random.fold_in(key, i), (8, 8))
+        u1, s1 = tx.update({"w": g}, s1, params)
+        u2, s2 = tx.update({"w": 100.0 * g}, s2, params)
+    np.testing.assert_allclose(u1["w"], u2["w"], rtol=1e-3, atol=1e-6)

@@ -1,0 +1,127 @@
+"""§Perf model variants must be numerically faithful to the baselines:
+chunked/flash(tagged) attention, absorbed MLA decode, local-EP MoE,
+bf16-elementwise mode, and the HLO cost model itself."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import attention as A
+from repro.models.layers import materialize, set_pure_bf16
+from repro.models.model import build_model
+
+
+def test_mla_absorbed_matches_naive():
+    d, H = 64, 4
+    kw = dict(n_heads=H, q_lora=32, kv_lora=16, qk_nope=8, qk_rope=8, v_head=8)
+    params = materialize(A.mla_defs(d, H, 32, 16, 8, 8, 8), jax.random.key(0))
+    B, T = 2, 9
+    x = 0.3 * jax.random.normal(jax.random.key(1), (B, T, d))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    c1 = A.mla_init_cache(B, T + 2, 16, 8, jnp.float32)
+    c2 = A.mla_init_cache(B, T + 2, 16, 8, jnp.float32)
+    _, c1 = A.mla_apply(params, x[:, :-1], pos[:, :-1], cache=c1, **kw)
+    _, c2 = A.mla_apply(params, x[:, :-1], pos[:, :-1], cache=c2, **kw)
+    a, _ = A.mla_apply(params, x[:, -1:], pos[:, -1:], cache=c1, **kw)
+    b, _ = A.mla_apply(params, x[:, -1:], pos[:, -1:], cache=c2,
+                       absorbed_decode=True, **kw)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_chunked_attention_matches_naive_with_grads():
+    d, H, K, hd = 64, 8, 2, 16
+    params = materialize(A.gqa_defs(d, H, K, hd), jax.random.key(0))
+    B, T = 2, 600
+    x = 0.3 * jax.random.normal(jax.random.key(1), (B, T, d))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    kw = dict(n_heads=H, n_kv=K, head_dim=hd, window=77)
+
+    def loss(p, impl):
+        o, _ = A.gqa_apply(p, x, pos, attn_impl=impl, **kw)
+        return jnp.sum(o**2)
+
+    np.testing.assert_allclose(loss(params, "chunked"), loss(params, "naive"),
+                               rtol=1e-5)
+    ga = jax.grad(loss)(params, "naive")
+    gb = jax.grad(loss)(params, "chunked")
+    for k in ga:
+        np.testing.assert_allclose(gb[k], ga[k], atol=5e-4, rtol=2e-3)
+
+
+def test_bf16_elementwise_close_to_fp32_path():
+    """Pure-bf16 norms/activations stay within bf16 tolerance of the
+    fp32-upcast baseline on a full model forward."""
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    base, _, _ = model.logits(params, batch)
+    cfg2 = dataclasses.replace(cfg, bf16_elementwise=True)
+    model2 = build_model(cfg2)
+    opt, _, _ = model2.logits(params, batch)
+    set_pure_bf16(False)
+    a = base.astype(jnp.float32)
+    b = opt.astype(jnp.float32)
+    assert jnp.argmax(a[:, -1], -1).tolist() == jnp.argmax(b[:, -1], -1).tolist()
+    corr = jnp.mean(jnp.sum(a * b, -1) / (jnp.linalg.norm(a, axis=-1)
+                                          * jnp.linalg.norm(b, axis=-1)))
+    assert float(corr) > 0.995, float(corr)
+
+
+def test_local_ep_moe_fallback_single_device():
+    """Without a mesh, local_ep must equal the plain dispatch exactly."""
+    from repro.models import moe as E
+
+    params = materialize(E.moe_defs(32, 64, 4), jax.random.key(0))
+    x = 0.3 * jax.random.normal(jax.random.key(1), (2, 8, 32))
+    a, aux_a = E.moe_apply(params, x, n_experts=4, top_k=2,
+                           capacity_factor=4.0)
+    b, aux_b = E.moe_apply_local_ep(params, x, n_experts=4, top_k=2,
+                                    capacity_factor=4.0)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+    np.testing.assert_allclose(aux_a, aux_b, atol=1e-6)
+
+
+def test_hlo_cost_model_scan_and_cond():
+    """The roofline's cost model must multiply scan bodies by trip count and
+    split conditional branches (COAP refresh amortization)."""
+    from repro.launch import hlo_analysis as H
+
+    def f(w, x, flag):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+
+        h, _ = jax.lax.scan(body, x, w, length=8)
+        extra = jax.lax.cond(flag, lambda: (h @ h.T).sum(), lambda: h.sum())
+        return h.sum() + extra
+
+    co = jax.jit(f).lower(jnp.zeros((8, 128, 128)), jnp.zeros((4, 128)),
+                          True).compile()
+    a = H.analyze(co.as_text())
+    np.testing.assert_allclose(a["flops"], 8 * 2 * 4 * 128 * 128, rtol=1e-6)
+    np.testing.assert_allclose(a["flops_cond"], 2 * 4 * 4 * 128, rtol=1e-6)
+
+
+def test_hlo_cost_model_region_boundary():
+    """Kernel-region accounting: in-region intermediates don't count."""
+    from repro.launch import hlo_analysis as H
+
+    def f(q, k):
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            s = q @ k.T
+            p = jax.nn.softmax(s, axis=-1)
+            o = p @ k
+        return o.sum()
+
+    co = jax.jit(f).lower(jnp.zeros((256, 64)), jnp.zeros((256, 64))).compile()
+    a = H.analyze(co.as_text())
+    co2 = jax.jit(lambda q, k: (jax.nn.softmax(q @ k.T, -1) @ k).sum()).lower(
+        jnp.zeros((256, 64)), jnp.zeros((256, 64))).compile()
+    b = H.analyze(co2.as_text())
+    # same flops, strictly fewer counted bytes inside the region
+    np.testing.assert_allclose(a["flops"], b["flops"], rtol=1e-6)
+    assert a["hbm_bytes"] < 0.7 * b["hbm_bytes"], (a["hbm_bytes"], b["hbm_bytes"])

@@ -1,0 +1,60 @@
+"""Serving engine: batched generation over dense/SWA/MLA/SSM caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.model import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b",       # dense KV
+    "mixtral-8x22b",        # rolling SWA ring
+    "minicpm3-4b",          # MLA latent cache
+    "mamba2-2.7b",          # SSM state
+    "zamba2-1.2b",          # hybrid
+])
+def test_generate_batched(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, ServeConfig(max_new_tokens=5))
+    prompts = [[1, 2, 3, 4], [7, 8, 9, 10, 11, 12]]
+    outs = engine.generate(prompts)
+    assert len(outs) == 2
+    for p, o in zip(prompts, outs):
+        assert o[: len(p)] == p
+        assert len(o) == len(p) + 5
+        assert all(0 <= t < cfg.vocab_size for t in o)
+
+
+def test_generate_deterministic_greedy():
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, ServeConfig(max_new_tokens=6))
+    a = engine.generate([[5, 6, 7]])
+    b = engine.generate([[5, 6, 7]])
+    assert a == b
+
+
+def test_generate_matches_uncached_forward():
+    """Greedy continuation via the engine == greedy argmax over repeated
+    full forwards (the gold-standard correctness check for the cache path)."""
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    prompt = [3, 1, 4, 1, 5]
+    steps = 4
+    engine = ServeEngine(model, params, ServeConfig(max_new_tokens=steps))
+    got = engine.generate([prompt])[0]
+
+    seq = list(prompt)
+    for _ in range(steps):
+        batch = {"tokens": jnp.asarray([seq], jnp.int32)}
+        logits, _, _ = model.logits(params, batch)
+        seq.append(int(jnp.argmax(logits[0, -1])))
+    assert got == seq, (got, seq)
