@@ -1,0 +1,13 @@
+# Convenience entry points (see scripts/ci.sh for the definitions).
+.PHONY: test smoke bench-overhead
+
+test:
+	./scripts/ci.sh
+
+smoke:
+	./scripts/ci.sh smoke
+
+# Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
+# counts on LLaMA-1B shapes) alongside the overhead CSV rows.
+bench-overhead:
+	PYTHONPATH=src:. python benchmarks/run.py --only overhead

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 gate + interpret-mode kernel smoke.
+#
+#   ./scripts/ci.sh          full tier-1 suite, then the Pallas smoke subset
+#   ./scripts/ci.sh smoke    smoke subset only (fast signal on kernel edits)
+#
+# The smoke subset re-runs the fused-kernel correctness tests with the
+# actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
+# every kernels/ops dispatch through pl.pallas_call(interpret=True) instead
+# of the jnp ref oracle), plus an end-to-end quantized optimizer step.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+smoke() {
+  echo "== interpret-mode kernel smoke =="
+  REPRO_PALLAS=interpret python -m pytest -q \
+    tests/test_kernels.py \
+    tests/test_bucketing.py::test_mixed_tree_full_optimizer_runs \
+    tests/test_bucketing.py::test_q8_state_holds_no_fp32_moments
+}
+
+if [[ "${1:-}" == "smoke" ]]; then
+  smoke
+  exit 0
+fi
+
+echo "== tier-1 suite =="
+python -m pytest -x -q
+smoke

@@ -1,0 +1,88 @@
+"""Version-compat shims for jax API drift.
+
+``jax.shard_map`` only exists from jax 0.6; on 0.4.x the equivalent lives at
+``jax.experimental.shard_map.shard_map`` with a slightly different keyword
+surface (``check_rep`` instead of ``check_vma``; the manual axis set is
+expressed through its complement ``auto`` instead of ``axis_names``). All
+shard_map call sites in this repo go through :func:`shard_map` below, which
+accepts the modern keyword form and translates as needed.
+"""
+from __future__ import annotations
+
+from typing import Any, FrozenSet, List, Optional, Set
+
+import jax
+
+# Stack of manual-axis sets for shard_map bodies currently being traced.
+# jax<=0.4 has no public way to ask "which mesh axes are Manual here?" (the
+# abstract-mesh axis_types API landed later), so the shim records it at trace
+# time; ``manual_axes_in_scope`` is consulted by sharding constraints to drop
+# manual axes. Trace-time only — single-threaded per trace, plain list is fine.
+_MANUAL_STACK: List[FrozenSet[str]] = []
+
+
+def manual_axes_in_scope() -> FrozenSet[str]:
+    """Mesh axes that are shard_map-manual at the current trace point."""
+    out: Set[str] = set()
+    for axes in _MANUAL_STACK:
+        out |= axes
+    return frozenset(out)
+
+
+def shard_map(
+    f,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+    axis_names: Optional[Set[str]] = None,
+):
+    """``jax.shard_map`` with fallback to the jax<=0.4 experimental API.
+
+    ``axis_names`` — the mesh axes the body is *manual* over (all axes when
+    None), matching the modern API; translated to the experimental API's
+    ``auto`` complement set.
+    """
+    manual = frozenset(axis_names) if axis_names is not None else frozenset(
+        mesh.axis_names
+    )
+
+    if hasattr(jax, "shard_map"):
+        def body(*args, **kw):
+            _MANUAL_STACK.append(manual)
+            try:
+                return f(*args, **kw)
+            finally:
+                _MANUAL_STACK.pop()
+
+        kwargs = dict(
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(body, **kwargs)
+
+    # jax<=0.4 fallback. The experimental ``auto=`` partial-manual mode
+    # aborts XLA's SPMD partitioner (IsManualSubgroup check) on these
+    # replicated-in/replicated-out bodies, so go FULL manual instead: axes
+    # that would have been auto carry only replicated operands here, so the
+    # body computes the same values on every shard along them — identical
+    # numerics, just without XLA re-partitioning the interior. All mesh axes
+    # are recorded as manual so inner sharding constraints are dropped.
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    full_manual = frozenset(mesh.axis_names)
+
+    def body04(*args, **kw):
+        _MANUAL_STACK.append(full_manual)
+        try:
+            return f(*args, **kw)
+        finally:
+            _MANUAL_STACK.pop()
+
+    return _shard_map(
+        body04, mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -122,7 +122,13 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
     def _update_proj(leaf: ProjFactorLeaf, g, spec, count, t, idx, b2):
         gc = projector.to_canonical(g, spec).astype(jnp.float32)
         p_old = leaf.p
-        new_p, refreshed = _refresh_p(cfg, spec, p_old, gc, leaf.m, count, idx)
+        # _refresh_p operates on stacked buckets — lift to a B=1 stack (the
+        # original flat idx keeps flora's per-leaf RNG stream unchanged).
+        new_p, refreshed = _refresh_p(
+            cfg, spec, p_old[None], gc[None], lambda: leaf.m[None], count,
+            jnp.asarray([idx], jnp.int32),
+        )
+        new_p = new_p[0]
         m = _maybe_transplant(cfg, leaf.m, p_old, new_p, refreshed)
         g_proj = projector.project(gc, new_p)
         g2 = jnp.square(g_proj)

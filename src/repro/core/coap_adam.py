@@ -21,6 +21,28 @@ the jitted step under ``lax.cond`` — no host round-trips (DESIGN.md §3).
 
 Optimizer states are fp32 by default or block-wise int8 when
 ``quantize=True`` (8-bit COAP / 8-bit Adam baselines, via kernels/quant8).
+Projected int8 moments use the ROW-BLOCK codec (shape-preserving int8 +
+per-row-block scales; kernels/ref.py) so the whole quantized step — project,
+dequant, moment EMA, requant, back-project — runs as ONE fused kernel with
+no fp32 M/V or Δ_proj ever materialized in HBM. Dense and conv int8 states
+keep the flat (nblocks, 256) codec.
+
+``update_fn`` batches congruent leaves: all projected (or dense) leaves
+sharing a ``(shape, spec, dtype)`` signature are stacked along a new leading
+axis and updated by a single (vmapped) kernel launch — a transformer's
+dozens of per-layer matrices become a handful of dispatches per step instead
+of one per leaf. Bucketing is numerics-neutral: every code path broadcasts
+over leading axes, and flora's per-leaf RNG keys fold in the ORIGINAL flat
+leaf index, so bucketed and per-leaf execution produce identical bits
+(``bucket_leaves=False`` keeps the per-leaf loop for A/B checks).
+
+Known trade-off: the stack/scatter round-trip at the bucket boundary is
+real copy traffic (XLA fuses some of it into kernel operands, but not the
+int8 state round-trip). It buys one launch + one trace per bucket instead
+of per leaf; storing congruent leaves pre-stacked in the optimizer state
+would remove the copies entirely but breaks the state-tree/param-tree
+congruence that checkpointing, accounting and the cross-pod compression
+path rely on — revisit if dispatch count stops being the bottleneck.
 """
 from __future__ import annotations
 
@@ -54,12 +76,16 @@ STRATEGIES = ("coap", "galore", "flora")
 
 
 class ProjLeaf(NamedTuple):
-    """Low-rank leaf state: P (…,n,r); moments on the large side (…,m,r)."""
+    """Low-rank leaf state: P (…,n,r); moments on the large side (…,m,r).
+
+    Quantized moments are shape-preserving int8 under the row-block codec:
+    ``m``/``v`` stay (…,m,r) int8 and ``*_scale`` are (…,m,ceil(r/block))
+    fp32 — the layout the fused q8 kernel consumes tile-locally."""
 
     p: Any
     m: Any
     v: Any
-    m_scale: Any  # int8-codec scales; zeros((1,)) placeholders when fp32
+    m_scale: Any  # codec scales; zeros((1,)) placeholders when fp32
     v_scale: Any
 
 
@@ -105,6 +131,7 @@ class ProjectedAdamConfig:
     update_scale: float = 1.0  # GaLore's α (their repo default 0.25)
     moment_transplant: bool = False  # carry M into the new subspace at refresh
     use_fused_kernel: bool = True  # route through kernels/ops (Pallas on TPU)
+    bucket_leaves: bool = True  # batch congruent leaves into stacked launches
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -143,6 +170,17 @@ def _init_stored(shape, cfg: ProjectedAdamConfig):
     )
 
 
+def _init_stored_proj(shape, cfg: ProjectedAdamConfig):
+    """Projected-moment storage: row-block int8 when quantized, else dense."""
+    if not cfg.quantize:
+        return jnp.zeros(shape, cfg.state_dtype), jnp.zeros((1,), jnp.float32)
+    nblk = kref.rowblock_nblocks(int(shape[-1]), cfg.quant_block)
+    return (
+        jnp.zeros(shape, jnp.int8),
+        jnp.zeros(tuple(shape[:-1]) + (nblk,), jnp.float32),
+    )
+
+
 def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
     return cfg.rules.spec_for(path, shape)
 
@@ -152,11 +190,18 @@ def _refresh_p(
     spec: ProjSpec,
     p: jnp.ndarray,
     gc: jnp.ndarray,
-    m_full: jnp.ndarray,
+    m_loader,
     count: jnp.ndarray,
-    leaf_idx: int,
+    idx_arr: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Strategy-specific P refresh. Returns (new_p, refreshed?bool)."""
+    """Strategy-specific P refresh on a stacked leaf bucket.
+
+    ``p``/``gc`` carry a leading (B,) bucket axis; ``idx_arr`` (B,) holds the
+    ORIGINAL flat leaf indices (flora folds them into its per-leaf RNG keys,
+    so bucketing never changes the random stream). ``m_loader`` is invoked
+    lazily inside the refresh branch — quantized M is only dequantized on the
+    (rare) refresh steps, never in the per-step hot loop.
+    Returns (new_p, refreshed?bool)."""
     if cfg.strategy == "coap":
         t_u = cfg.t_update
         do_ref = (count % t_u) == 0
@@ -167,7 +212,7 @@ def _refresh_p(
                 do_recal,
                 lambda: recalibrate.lowcost_svd(gc, p),
                 lambda: correlation.sgd_update(
-                    p, gc, m_full, lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
+                    p, gc, m_loader(), lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
                     normalize=cfg.eqn6_normalize,
                 ),
             )
@@ -183,13 +228,26 @@ def _refresh_p(
         return new_p, do_ref
     # flora
     do_ref = (count % cfg.t_update) == 0
-    key = jax.random.fold_in(jax.random.fold_in(jax.random.key(cfg.seed), leaf_idx), count)
-    new_p = lax.cond(
-        do_ref,
-        lambda: recalibrate.random_projection(key, gc.shape, spec.rank, p.dtype),
-        lambda: p,
-    )
+    elem_shape = gc.shape[1:]
+
+    def resample():
+        def one(i):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(cfg.seed), i), count
+            )
+            return recalibrate.random_projection(
+                key, elem_shape, spec.rank, p.dtype
+            )
+
+        return jax.vmap(one)(idx_arr)
+
+    new_p = lax.cond(do_ref, resample, lambda: p)
     return new_p, do_ref
+
+
+def _wants_transplant(cfg: ProjectedAdamConfig) -> bool:
+    """Flora always transplants; COAP/GaLore only when opted in."""
+    return cfg.strategy == "flora" or cfg.moment_transplant
 
 
 def _maybe_transplant(
@@ -198,9 +256,7 @@ def _maybe_transplant(
     """M_new = (M P_oldᵀ) P_new — keeps momentum direction across subspace
     switches. Flora's mechanism; optional (off = Algorithm 1 verbatim) for
     COAP/GaLore."""
-    transplant = cfg.strategy == "flora" or cfg.moment_transplant
-
-    if not transplant:
+    if not _wants_transplant(cfg):
         return m
 
     def do():
@@ -229,8 +285,8 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                     cfg.state_dtype,
                 )
                 msh = projector.moment_shape(leaf.shape, spec)
-                m0, ms0 = _init_stored(msh, cfg)
-                v0, vs0 = _init_stored(msh, cfg)
+                m0, ms0 = _init_stored_proj(msh, cfg)
+                v0, vs0 = _init_stored_proj(msh, cfg)
                 leaves.append(ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0))
             elif spec.kind == KIND_CONV:
                 po, pi = conv_mod.init_factors(
@@ -251,36 +307,85 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
             leaves=jax.tree_util.tree_unflatten(treedef, leaves),
         )
 
-    def _update_proj_leaf(leaf: ProjLeaf, g, spec: ProjSpec, count, t, leaf_idx):
+    def _update_proj_bucket(leaf: ProjLeaf, g, spec: ProjSpec, count, t,
+                            idx_arr):
+        """One step for a stacked bucket of congruent projected leaves (all
+        arrays carry a leading (B,) axis; B == 1 for singleton buckets)."""
         gc = projector.to_canonical(g, spec).astype(jnp.float32)
-        msh = projector.moment_shape(g.shape, spec)
-        m = _load(leaf.m, leaf.m_scale, msh, cfg)
-        v = _load(leaf.v, leaf.v_scale, msh, cfg)
         p_old = leaf.p
-        new_p, refreshed = _refresh_p(cfg, spec, p_old, gc, m, count, leaf_idx)
-        m = _maybe_transplant(cfg, m, p_old, new_p, refreshed)
-        if cfg.use_fused_kernel and not cfg.quantize:
-            new_m, new_v, delta_proj = kops.coap_fused_update(
-                gc, new_p, m, v, t, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps
-            )
+
+        if cfg.quantize:
+            def m_loader():
+                return kops.dequantize_rowblock(
+                    leaf.m, leaf.m_scale, block=cfg.quant_block
+                )
         else:
-            g_proj = projector.project(gc, new_p)
-            new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
-            new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_proj)
-            tf = t.astype(jnp.float32)
-            delta_proj = (new_m / (1.0 - cfg.b1**tf)) / (
-                jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
-            )
-            if cfg.quantize:  # int8-v underflow guard (see kernels/ref.py)
-                delta_proj = jnp.clip(delta_proj, -kref.QUANT_DELTA_CLIP,
-                                      kref.QUANT_DELTA_CLIP)
-        update_c = projector.backproject(delta_proj, new_p)
-        update = projector.from_canonical(update_c, spec) * cfg.update_scale
-        sm, sms = _store(new_m, cfg)
-        sv, svs = _store(new_v, cfg)
-        return update.astype(g.dtype), ProjLeaf(
-            p=new_p, m=sm, v=sv, m_scale=sms, v_scale=svs
+            def m_loader():
+                return leaf.m.astype(jnp.float32)
+
+        new_p, refreshed = _refresh_p(
+            cfg, spec, p_old, gc, m_loader, count, idx_arr
         )
+
+        if cfg.quantize:
+            m_q, m_s = leaf.m, leaf.m_scale
+            if _wants_transplant(cfg):
+                # On refresh steps the transplanted M takes one extra int8
+                # requant->dequant round-trip (requantized here, dequantized
+                # again inside the fused kernel) vs a hypothetical
+                # dequant->transplant->EMA->requant schedule: one added
+                # block-absmax rounding per refresh, accepted so the hot
+                # per-step path stays a single kernel with int8-only state.
+                def transplanted():
+                    carried = projector.project(
+                        projector.backproject(m_loader(), p_old), new_p
+                    )
+                    return kops.quantize_rowblock(carried, block=cfg.quant_block)
+
+                m_q, m_s = lax.cond(
+                    refreshed, transplanted, lambda: (m_q, m_s)
+                )
+            if cfg.use_fused_kernel:
+                # Single-pass fused int8 step: no fp32 M/V, no Δ_proj in HBM.
+                nmq, nms, nvq, nvs, update_c = kops.coap_fused_update_q8(
+                    gc, new_p, m_q, m_s, leaf.v, leaf.v_scale, t,
+                    b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, block=cfg.quant_block,
+                )
+            else:
+                # Unfused 8-bit schedule — every intermediate round-trips
+                # HBM; kept as the benchmark baseline (benchmarks/overhead).
+                # The oracle IS that schedule expressed as jnp ops.
+                nmq, nms, nvq, nvs, update_c = kref.coap_fused_update_q8(
+                    gc, new_p, m_q, m_s, leaf.v, leaf.v_scale, t,
+                    b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, block=cfg.quant_block,
+                )
+            new_leaf = ProjLeaf(p=new_p, m=nmq, v=nvq, m_scale=nms, v_scale=nvs)
+        else:
+            m = m_loader()
+            v = leaf.v.astype(jnp.float32)
+            m = _maybe_transplant(cfg, m, p_old, new_p, refreshed)
+            if cfg.use_fused_kernel:
+                new_m, new_v, update_c = kops.coap_fused_update_bp(
+                    gc, new_p, m, v, t, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps
+                )
+            else:
+                g_proj = projector.project(gc, new_p)
+                new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
+                new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_proj)
+                tf = t.astype(jnp.float32)
+                delta_proj = (new_m / (1.0 - cfg.b1**tf)) / (
+                    jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+                )
+                update_c = projector.backproject(delta_proj, new_p)
+            new_leaf = ProjLeaf(
+                p=new_p,
+                m=new_m.astype(cfg.state_dtype),
+                v=new_v.astype(cfg.state_dtype),
+                m_scale=leaf.m_scale,  # fp32 placeholders pass through
+                v_scale=leaf.v_scale,
+            )
+        update = projector.from_canonical(update_c, spec) * cfg.update_scale
+        return update.astype(g.dtype), new_leaf
 
     def _update_dense_leaf(leaf: DenseLeaf, g, count, t):
         g32 = g.astype(jnp.float32)
@@ -306,18 +411,62 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         t = count + 1  # 1-based for bias correction (Algorithm 1)
         flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
         flat_s = treedef.flatten_up_to(state.leaves)
-        new_updates, new_leaves = [], []
+        n_leaves = len(flat_u)
+        new_updates = [None] * n_leaves
+        new_leaves = [None] * n_leaves
+
+        # Bucket congruent leaves: one (vmapped) kernel launch per
+        # (shape, spec, dtype) group instead of one per leaf. Conv leaves
+        # keep the per-leaf Tucker-2 path (Algorithm 3).
+        specs = []
+        proj_buckets, dense_buckets = {}, {}
         for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
-            path = path_str(kp)
-            spec = _leaf_spec(cfg, path, g.shape)
-            if spec.kind == KIND_PROJECT:
-                u, nl = _update_proj_leaf(leaf, g, spec, count, t, idx)
-            elif spec.kind == KIND_CONV:
-                u, nl = conv_mod.update_conv_leaf(cfg, leaf, g, spec, count, t, idx)
+            spec = _leaf_spec(cfg, path_str(kp), g.shape)
+            specs.append(spec)
+            if spec.kind == KIND_CONV:
+                u, nl = conv_mod.update_conv_leaf(
+                    cfg, leaf, g, spec, count, t, idx
+                )
+                new_updates[idx], new_leaves[idx] = u, nl
+            elif spec.kind == KIND_PROJECT:
+                key = (spec, tuple(g.shape), jnp.dtype(g.dtype).name)
+                proj_buckets.setdefault(key, []).append(idx)
             else:
-                u, nl = _update_dense_leaf(leaf, g, count, t)
-            new_updates.append(u)
-            new_leaves.append(nl)
+                key = (tuple(g.shape), jnp.dtype(g.dtype).name)
+                dense_buckets.setdefault(key, []).append(idx)
+
+        def groups(buckets):
+            if cfg.bucket_leaves:
+                return list(buckets.values())
+            return [[i] for idxs in buckets.values() for i in idxs]
+
+        def stack_states(idxs):
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[flat_s[i] for i in idxs]
+            )
+
+        def scatter(idxs, u_stack, nl_stack):
+            for b, i in enumerate(idxs):
+                new_updates[i] = u_stack[b]
+                new_leaves[i] = jax.tree_util.tree_map(
+                    lambda x: x[b], nl_stack
+                )
+
+        for idxs in groups(proj_buckets):
+            g_stack = jnp.stack([flat_u[i][1] for i in idxs])
+            u_stack, nl_stack = _update_proj_bucket(
+                stack_states(idxs), g_stack, specs[idxs[0]], count, t,
+                jnp.asarray(idxs, jnp.int32),
+            )
+            scatter(idxs, u_stack, nl_stack)
+
+        for idxs in groups(dense_buckets):
+            g_stack = jnp.stack([flat_u[i][1] for i in idxs])
+            u_stack, nl_stack = jax.vmap(
+                lambda lf, gg: _update_dense_leaf(lf, gg, count, t)
+            )(stack_states(idxs), g_stack)
+            scatter(idxs, u_stack, nl_stack)
+
         return (
             jax.tree_util.tree_unflatten(treedef, new_updates),
             ProjectedAdamState(

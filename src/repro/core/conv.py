@@ -55,13 +55,21 @@ def mode2_canonical(g: jnp.ndarray) -> jnp.ndarray:
 
 
 def project_core(g: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
-    """G ×₁ P_Oᵀ ×₂ P_Iᵀ."""
-    return jnp.einsum("oikl,oa,ib->abkl", g, p_o, p_i)
+    """G ×₁ P_Oᵀ ×₂ P_Iᵀ.
+
+    Contracted mode-2 first, then mode-1, as two pinned einsums: n-mode
+    products commute exactly but not in float32, and the unfolding identities
+    (tests/test_core_conv.py) assume this order. A single three-operand
+    einsum lets the contraction path vary by backend.
+    """
+    half = jnp.einsum("oikl,ib->obkl", g, p_i)
+    return jnp.einsum("obkl,oa->abkl", half, p_o)
 
 
 def restore_core(core: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
-    """ΔW = core ×₁ P_O ×₂ P_I."""
-    return jnp.einsum("abkl,oa,ib->oikl", core, p_o, p_i)
+    """ΔW = core ×₁ P_O ×₂ P_I (mode-1 first; adjoint of ``project_core``)."""
+    half = jnp.einsum("abkl,oa->obkl", core, p_o)
+    return jnp.einsum("obkl,ib->oikl", half, p_i)
 
 
 def _half_restored_m(m_core, p_o, p_i, mode: int):

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import correlation, projector, recalibrate
 from repro.core.coap_adam import (
     DenseLeaf,
@@ -50,6 +51,16 @@ def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState
 
     Semantics == all-reduce(grads) then core update (linearity; the full-G
     all-reduce still happens on refresh steps, under the same lax.cond)."""
+    if cfg.quantize:
+        # This path does fp32 moment arithmetic directly on leaf.m/leaf.v.
+        # Under the shape-preserving row-block int8 codec those arrays are
+        # quantization CODES — using them here would corrupt silently (the
+        # old flat codec at least failed shape checks). Compressed sync for
+        # quantized states needs a dequant->reduce->requant schedule; not
+        # implemented.
+        raise NotImplementedError(
+            "compressed_update does not support quantize=True states"
+        )
     count = state.count
     t = count + 1
     flat_u, treedef = jax.tree_util.tree_flatten_with_path(grads)
@@ -138,7 +149,7 @@ def make_compressed_train_step(model, cfg: ProjectedAdamConfig, mesh,
     pspec = P()  # replicated over pod (manual axis)
     in_specs = (pspec, pspec, pspec, P(axis))
     out_specs = (pspec, pspec, pspec)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False, axis_names={axis},
     )

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def split_stage_params(stacked_params: Any, n_stages: int):
     """(L, ...) stacked layer params -> (n_stages, L/n_stages, ...)."""
@@ -97,7 +99,7 @@ def pipeline_apply(
     # same schedule.
     in_specs = (P(axis), P())
     out_specs = P()
-    return jax.shard_map(
+    return compat.shard_map(
         per_stage, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(stage_params, x)

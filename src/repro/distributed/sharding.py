@@ -123,6 +123,15 @@ def batch_axes(mesh) -> Tuple[str, ...]:
 
 def _nonmanual_axes(mesh) -> set:
     """Axes usable in sharding constraints (drops shard_map-manual axes)."""
+    from repro import compat
+
+    manual = compat.manual_axes_in_scope()
+    if manual:
+        if not hasattr(jax, "shard_map"):
+            # jax<=0.4: XLA's partitioner aborts on constraints inside a
+            # partially-manual region (IsManualSubgroup check) — emit none.
+            return set()
+        return set(mesh.axis_names) - set(manual)
     try:
         abstract = jax.sharding.get_abstract_mesh()
         if abstract is not None and not abstract.empty:
@@ -169,6 +178,14 @@ def constrain(x, logical: Sequence[Optional[str]]):
                 axes.append(None)
         else:
             axes.append(None)
+    if not used and not hasattr(jax, "shard_map"):
+        from repro import compat
+
+        if compat.manual_axes_in_scope():
+            # jax<=0.4 inside a shard_map body: even a fully-replicated
+            # constraint aborts XLA's partitioner (IsManualSubgroup check).
+            # Elsewhere the replicated constraint is kept — it pins layout.
+            return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*axes))
     )

@@ -19,6 +19,17 @@ blocks bm=512, bn=512 keep the working set
 (G 1MB + P 1MB + acc bm·r ≤ 2MB + M/V/out tiles 3·bm·r) under 16MB VMEM for
 r ≤ 1024, with all MXU dims 128-aligned. The wrapper pads ragged shapes and
 vmaps over leading (layer/expert) stack axes.
+
+``coap_fused_update_bp_pallas`` additionally fuses the back-projection
+``ΔW = Δ_proj Pᵀ`` as a second MXU stage in the SAME kernel: the inner grid
+dimension runs 2·(n/bn) steps — phase 1 (k < kn) accumulates G@P exactly as
+above; the epilogue at k = kn−1 computes Δ_proj into the accumulator
+scratch; phase 2 (k ≥ kn) re-streams P per n-block and writes the (bm, bn)
+tiles of Δ_proj·Pᵀ. Δ_proj never exists in HBM, and the index maps pin G to
+its last block through phase 2 so G is fetched exactly once. Extra traffic
+vs the non-BP kernel is one more P sweep per m-row plus the mn output —
+strictly less than the unfused schedule's write+read of Δ_proj (2mr) plus
+its separate backproject pass (mn + (m/bm)·nr + mn).
 """
 from __future__ import annotations
 
@@ -70,6 +81,50 @@ def _kernel(corr_ref, g_ref, p_ref, m_ref, v_ref,
         delta_ref[...] = delta
 
 
+def _kernel_bp(corr_ref, g_ref, p_ref, m_ref, v_ref,
+               new_m_ref, new_v_ref, dw_ref, acc_ref,
+               *, b1: float, b2: float, eps: float, kn: int):
+    """Two-phase body: phase 1 accumulates G@P; the k==kn-1 epilogue runs the
+    Adam update and parks Δ_proj in the accumulator scratch; phase 2 emits
+    the back-projected (bm, bn) tiles of ΔW = Δ_proj Pᵀ."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < kn)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            g_ref[...].astype(jnp.float32),
+            p_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == kn - 1)
+    def _epilogue():
+        g_proj = acc_ref[...]
+        m = m_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        new_m = b1 * m + (1.0 - b1) * g_proj
+        new_v = b2 * v + (1.0 - b2) * g_proj * g_proj
+        c1 = corr_ref[0]
+        c2 = corr_ref[1]
+        delta = (new_m / c1) / (jnp.sqrt(new_v / c2) + eps)
+        new_m_ref[...] = new_m
+        new_v_ref[...] = new_v
+        acc_ref[...] = delta  # scratch reuse: phase 2 consumes Δ_proj
+
+    @pl.when(k >= kn)
+    def _backproject():
+        # (bm, r) @ (bn, r)ᵀ on the MXU, contracting r.
+        dw_ref[...] = jax.lax.dot_general(
+            acc_ref[...], p_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
 def _pad_to(x, mult, axis):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -77,6 +132,33 @@ def _pad_to(x, mult, axis):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+# Shared two-phase grid pieces (also used by quant8's fused int8 kernel so
+# the two fused variants stay in lockstep):
+def pin_g_index(kn):
+    """G streams through phase 1, then stays pinned on its last block
+    (index unchanged -> no phase-2 refetch)."""
+    return lambda i, k: (i, jnp.where(k < kn, k, kn - 1))
+
+
+def park_out_index(kn):
+    """ΔW tiles park on block 0 through phase 1 (no copy-out until the
+    index advances), then advance one tile per phase-2 step."""
+    return lambda i, k: (i, jnp.maximum(k - kn, 0))
+
+
+def two_phase_compiler_params():
+    """dimension_semantics for (parallel rows, arbitrary two-phase inner
+    dim), tolerant of the CompilerParams/TPUCompilerParams rename."""
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    except Exception:  # older naming
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
 
 
 @functools.partial(
@@ -155,3 +237,74 @@ def coap_fused_update_pallas(
         corr, g_p, p_p, m_p, v_p
     )
     return new_m[:m_dim], new_v[:m_dim], delta[:m_dim]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b1", "b2", "eps", "interpret", "bm", "bn")
+)
+def coap_fused_update_bp_pallas(
+    g, p, m, v, count, b1=0.9, b2=0.999, eps=1e-8,
+    interpret: bool = False, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+):
+    """Back-projection-fused variant: g (...,m,n), p (...,n,r), m/v (...,m,r)
+    -> (m', v', ΔW (...,m,n)). Δ_proj stays in VMEM scratch."""
+    if g.ndim > 2:  # stacked weights: vmap over the leading axes
+        fn = functools.partial(
+            coap_fused_update_bp_pallas, b1=b1, b2=b2, eps=eps,
+            interpret=interpret, bm=bm, bn=bn,
+        )
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, None))
+        return fn(g, p, m, v, count)
+
+    m_dim, n_dim = g.shape
+    r = p.shape[-1]
+    t = count.astype(jnp.float32)
+    corr = jnp.stack([1.0 - b1**t, 1.0 - b2**t])
+
+    bm_eff = min(bm, max(8, m_dim))
+    bn_eff = min(bn, max(128, n_dim))
+    g_p = _pad_to(_pad_to(g, bm_eff, 0), bn_eff, 1)
+    p_p = _pad_to(p, bn_eff, 0)
+    m_p = _pad_to(m.astype(jnp.float32), bm_eff, 0)
+    v_p = _pad_to(v.astype(jnp.float32), bm_eff, 0)
+    mp, np_ = g_p.shape
+    kn = np_ // bn_eff
+    grid = (mp // bm_eff, 2 * kn)
+
+    kernel = functools.partial(_kernel_bp, b1=b1, b2=b2, eps=eps, kn=kn)
+    out_shape = [
+        jax.ShapeDtypeStruct((mp, r), jnp.float32),
+        jax.ShapeDtypeStruct((mp, r), jnp.float32),
+        jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+    ]
+    in_specs = [
+        pl.BlockSpec((2,), lambda i, k: (0,)),  # corr coefficients
+        pl.BlockSpec((bm_eff, bn_eff), pin_g_index(kn)),  # G
+        pl.BlockSpec((bn_eff, r), lambda i, k: (k % kn, 0)),  # P (both phases)
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),  # M
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),  # V
+    ]
+    out_specs = [
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),
+        pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0)),
+        pl.BlockSpec((bm_eff, bn_eff), park_out_index(kn)),  # ΔW
+    ]
+    kwargs = dict(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    if _HAS_PLTPU:
+        kwargs["scratch_shapes"] = [pltpu.VMEM((bm_eff, r), jnp.float32)]
+        if not interpret:
+            kwargs["compiler_params"] = two_phase_compiler_params()
+    else:  # pragma: no cover
+        raise RuntimeError("Pallas TPU backend unavailable; use ops ref path")
+
+    new_m, new_v, dw = pl.pallas_call(kernel, **kwargs)(
+        corr, g_p, p_p, m_p, v_p
+    )
+    return new_m[:m_dim], new_v[:m_dim], dw[:m_dim, :n_dim]

@@ -42,6 +42,54 @@ def coap_fused_update(g, p, m, v, count, b1=0.9, b2=0.999, eps=1e-8):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps"))
+def coap_fused_update_bp(g, p, m, v, count, b1=0.9, b2=0.999, eps=1e-8):
+    """Back-projection-fused step: returns (m', v', ΔW) with ΔW = Δ_proj Pᵀ
+    produced as a second MXU stage of the same kernel — Δ_proj never hits
+    HBM. See ``coap_update.coap_fused_update_bp_pallas``."""
+    if _mode() == "ref":
+        return ref.coap_fused_update_bp(g, p, m, v, count, b1=b1, b2=b2, eps=eps)
+    from repro.kernels import coap_update
+
+    return coap_update.coap_fused_update_bp_pallas(
+        g, p, m, v, count, b1=b1, b2=b2, eps=eps, interpret=_interpret_flag()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "block"))
+def coap_fused_update_q8(
+    g, p, m_q, m_scale, v_q, v_scale, count,
+    b1=0.9, b2=0.999, eps=1e-8, block=ref.QUANT_BLOCK,
+):
+    """Single-pass 8-bit COAP step (project + dequant + Adam + requant +
+    back-project in one kernel; row-block codec). See ``quant8``."""
+    if _mode() == "ref":
+        return ref.coap_fused_update_q8(
+            g, p, m_q, m_scale, v_q, v_scale, count,
+            b1=b1, b2=b2, eps=eps, block=block,
+        )
+    from repro.kernels import quant8
+
+    return quant8.coap_fused_update_q8_pallas(
+        g, p, m_q, m_scale, v_q, v_scale, count,
+        b1=b1, b2=b2, eps=eps, block=block, interpret=_interpret_flag(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_rowblock(x, block=ref.QUANT_BLOCK):
+    """Row-block int8 codec (projected-state layout). jnp-implemented in all
+    modes: it runs only at init / refresh-transplant time, never in the
+    per-step hot loop (the fused q8 kernel requantizes in-VMEM)."""
+    return ref.quantize_rowblock(x, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dtype"))
+def dequantize_rowblock(q, scale, block=ref.QUANT_BLOCK, dtype=jnp.float32):
+    """Inverse of :func:`quantize_rowblock` (refresh-path only; see above)."""
+    return ref.dequantize_rowblock(q, scale, block, dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
 def quantize_blockwise(x, block=ref.QUANT_BLOCK):
     if _mode() == "ref":

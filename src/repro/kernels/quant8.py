@@ -1,17 +1,40 @@
 """Block-wise absmax int8 quantization kernels (8-bit COAP states).
 
-Layout: optimizer tensors are viewed as (nblocks, 256) — 256 = 2×VPU lane
-width — with one fp32 scale per block. Three kernels:
+Two codecs, two families of kernels:
+
+FLAT codec (dense Adam states): tensors are viewed as (nblocks, 256) after
+ravel — 256 = 2×VPU lane width — with one fp32 scale per block:
 
   * quantize:   x -> (q, scale)         scale = absmax/127, q = round(x/scale)
   * dequantize: (q, scale) -> x
   * fused 8-bit Adam step: dequant M,V -> moment EMA + ΔW -> requant, one
-    VMEM round trip (the 8-bit COAP optimizer step; avoids materializing
-    fp32 M/V in HBM, which would forfeit the memory savings).
+    VMEM round trip.
+
+ROW-BLOCK codec (projected COAP states, see kernels/ref.py): an (..., m, r)
+moment keeps its shape in int8 with ceil(r/256) scales per row, so a
+row-tile (bm, r) dequantizes in VMEM from its own scales alone. On top of it
+``coap_fused_update_q8_pallas`` runs the ENTIRE 8-bit COAP step as one
+kernel — a single HBM pass per tensor:
+
+    phase 1 (k < kn):    acc += G(i,k) @ P(k)          (MXU)
+    epilogue (k = kn-1): dequant int8 M/V tiles in VMEM; moment EMA;
+                         bias-corrected Δ with the QUANT_DELTA_CLIP
+                         underflow guard; requant M'/V' -> int8 outputs;
+                         park Δ in the accumulator scratch          (VPU)
+    phase 2 (k >= kn):   ΔW(i,k-kn) = Δ @ P(k-kn)ᵀ                 (MXU)
+
+Neither fp32 M/V nor Δ_proj ever exist in HBM — the memory AND traffic wins
+of the paper's 8-bit path hold at peak, instead of only for the at-rest
+state. The unfused schedule (dequant + project + Adam + requant +
+backproject as separate dispatches) reads/writes every intermediate through
+HBM and is kept only as the benchmark baseline (benchmarks/overhead.py).
 
 Hardware adaptation note (DESIGN.md §3): Dettmers' dynamic-tree codebook is
 a CUDA-LUT trick; linear absmax maps onto the TPU VPU (mul + round + clip)
-with no gather. Same state size, slightly coarser tails.
+with no gather. Same state size, slightly coarser tails. TPU tiling note:
+int8 tiles are (32, 128); the fused kernel's row tiles (bm, r) satisfy this
+for bm ≥ 32 and r a lane multiple — the wrapper pads rows, and ragged r is
+exercised under interpret mode (tests) where tiling is unconstrained.
 """
 from __future__ import annotations
 
@@ -28,9 +51,13 @@ try:
 except Exception:  # pragma: no cover
     _HAS_PLTPU = False
 
-from repro.kernels.ref import QUANT_BLOCK, QUANT_DELTA_CLIP
+from repro.kernels import ref as _ref
+from repro.kernels.ref import QUANT_BLOCK, QUANT_DELTA_CLIP, rowblock_nblocks
 
 ROWS_PER_PROGRAM = 64  # (64, 256) int8 tiles: fits the int8 (32,128) layout
+DEFAULT_BM = 512  # fused-q8 row tile: fewer P sweeps (2·ceil(m/bm)·nr words
+# of internal re-stream); working set ~7MB at r=1024 stays under 16MB VMEM.
+DEFAULT_BN = 512  # fused-q8 G column block
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -82,6 +109,16 @@ def _row_pad(x, rows):
     if pad:
         x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
     return x
+
+
+# shared two-phase grid pieces (same tiling semantics as the fp32 fused
+# kernel — see coap_update.py)
+from repro.kernels.coap_update import (  # noqa: E402
+    _pad_to as _pad_to_axis,
+    park_out_index,
+    pin_g_index,
+    two_phase_compiler_params,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -175,3 +212,151 @@ def quantized_adam_update_pallas(
         size *= s_
     delta_full = delta.reshape(-1)[:size].reshape(shape)
     return nmq[:nblocks], nms[:nblocks, 0], nvq[:nblocks], nvs[:nblocks, 0], delta_full
+
+
+# ---------------------------------------------------------------------------
+# Single-pass fused 8-bit COAP step (row-block codec; see module docstring)
+# ---------------------------------------------------------------------------
+def _dequant_rowblock_tile(q, s, block):
+    """(bm, r) int8 tile + (bm, nblk) scales -> fp32, in VMEM. The codec is
+    defined ONCE in kernels/ref.py — this just traces those jnp ops inside
+    the kernel body (with a cheap broadcast shortcut for the 1-block case).
+    """
+    if s.shape[-1] == 1:
+        return q.astype(jnp.float32) * s
+    return _ref.dequantize_rowblock(q, s, block)
+
+
+def _requant_rowblock_tile(x, q_ref, s_ref, block):
+    """fp32 (bm, r) tile -> int8 codes + per-row-block scales, in VMEM.
+    Bit-for-bit the ref codec, by construction: it IS ref.quantize_rowblock
+    traced into the kernel."""
+    q, s = _ref.quantize_rowblock(x, block)
+    q_ref[...] = q
+    s_ref[...] = s
+
+
+def _fused8_proj_kernel(corr_ref, g_ref, p_ref, mq_ref, ms_ref, vq_ref, vs_ref,
+                        nmq_ref, nms_ref, nvq_ref, nvs_ref, dw_ref, acc_ref,
+                        *, b1, b2, eps, kn, block):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < kn)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            g_ref[...].astype(jnp.float32),
+            p_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == kn - 1)
+    def _epilogue():
+        g_proj = acc_ref[...]
+        m = _dequant_rowblock_tile(mq_ref[...], ms_ref[...], block)
+        v = _dequant_rowblock_tile(vq_ref[...], vs_ref[...], block)
+        new_m = b1 * m + (1.0 - b1) * g_proj
+        new_v = b2 * v + (1.0 - b2) * jnp.square(g_proj)
+        delta = (new_m / corr_ref[0]) / (jnp.sqrt(new_v / corr_ref[1]) + eps)
+        delta = jnp.clip(delta, -QUANT_DELTA_CLIP, QUANT_DELTA_CLIP)
+        _requant_rowblock_tile(new_m, nmq_ref, nms_ref, block)
+        _requant_rowblock_tile(new_v, nvq_ref, nvs_ref, block)
+        acc_ref[...] = delta  # scratch reuse: phase 2 consumes Δ_proj
+
+    @pl.when(k >= kn)
+    def _backproject():
+        dw_ref[...] = jax.lax.dot_general(
+            acc_ref[...], p_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "block", "interpret", "bm", "bn"),
+)
+def coap_fused_update_q8_pallas(
+    g, p, m_q, m_scale, v_q, v_scale, count,
+    b1=0.9, b2=0.999, eps=1e-8, block=QUANT_BLOCK,
+    interpret: bool = False, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+):
+    """One-kernel 8-bit COAP step. g (...,m,n), p (...,n,r), int8 moments
+    (...,m,r) with (...,m,nblk) scales -> (m_q', m_s', v_q', v_s', ΔW).
+    Broadcasts over leading (layer/expert) stack axes via vmap."""
+    if g.ndim > 2:
+        fn = functools.partial(
+            coap_fused_update_q8_pallas, b1=b1, b2=b2, eps=eps, block=block,
+            interpret=interpret, bm=bm, bn=bn,
+        )
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+        return fn(g, p, m_q, m_scale, v_q, v_scale, count)
+
+    m_dim, n_dim = g.shape
+    r = p.shape[-1]
+    nblk = rowblock_nblocks(r, block)
+    assert m_scale.shape[-1] == nblk, (m_scale.shape, nblk)
+    t = count.astype(jnp.float32)
+    corr = jnp.stack([1.0 - b1**t, 1.0 - b2**t])
+
+    bm_eff = min(bm, max(8, m_dim))
+    bn_eff = min(bn, max(128, n_dim))
+    g_p = _pad_to_axis(_pad_to_axis(g, bm_eff, 0), bn_eff, 1)
+    p_p = _pad_to_axis(p, bn_eff, 0)
+    mq_p = _pad_to_axis(m_q, bm_eff, 0)
+    vq_p = _pad_to_axis(v_q, bm_eff, 0)
+    ms_p = _pad_to_axis(m_scale, bm_eff, 0)
+    vs_p = _pad_to_axis(v_scale, bm_eff, 0)
+    mp, np_ = g_p.shape
+    kn = np_ // bn_eff
+    grid = (mp // bm_eff, 2 * kn)
+
+    kernel = functools.partial(
+        _fused8_proj_kernel, b1=b1, b2=b2, eps=eps, kn=kn, block=block
+    )
+    row_q = pl.BlockSpec((bm_eff, r), lambda i, k: (i, 0))
+    row_s = pl.BlockSpec((bm_eff, nblk), lambda i, k: (i, 0))
+    in_specs = [
+        pl.BlockSpec((2,), lambda i, k: (0,)),  # corr coefficients
+        pl.BlockSpec((bm_eff, bn_eff), pin_g_index(kn)),  # G
+        pl.BlockSpec((bn_eff, r), lambda i, k: (k % kn, 0)),  # P (both phases)
+        row_q, row_s, row_q, row_s,  # int8 M/V + scales
+    ]
+    out_specs = [
+        row_q, row_s, row_q, row_s,
+        pl.BlockSpec((bm_eff, bn_eff), park_out_index(kn)),  # ΔW (phase 2)
+    ]
+    kwargs = dict(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, r), jnp.int8),
+            jax.ShapeDtypeStruct((mp, nblk), jnp.float32),
+            jax.ShapeDtypeStruct((mp, r), jnp.int8),
+            jax.ShapeDtypeStruct((mp, nblk), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    if _HAS_PLTPU:
+        kwargs["scratch_shapes"] = [pltpu.VMEM((bm_eff, r), jnp.float32)]
+        if not interpret:
+            kwargs["compiler_params"] = two_phase_compiler_params()
+    else:  # pragma: no cover
+        raise RuntimeError("Pallas TPU backend unavailable; use ops ref path")
+
+    nmq, nms, nvq, nvs, dw = pl.pallas_call(kernel, **kwargs)(
+        corr, g_p, p_p, mq_p, ms_p, vq_p, vs_p
+    )
+    return (
+        nmq[:m_dim],
+        nms[:m_dim],
+        nvq[:m_dim],
+        nvs[:m_dim],
+        dw[:m_dim, :n_dim],
+    )

@@ -50,6 +50,25 @@ def coap_fused_update(
     return new_m, new_v, delta
 
 
+def coap_fused_update_bp(
+    g: jnp.ndarray,
+    p: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    count: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``coap_fused_update`` with the back-projection fused in: returns
+    (new_m, new_v, ΔW) where ``ΔW = Δ_proj Pᵀ`` is the full (m, n) canonical
+    update — Δ_proj is never a caller-visible (HBM) tensor.
+    """
+    new_m, new_v, delta = coap_fused_update(g, p, m, v, count, b1, b2, eps)
+    dw = jnp.einsum("...mr,...nr->...mn", delta, p.astype(jnp.float32))
+    return new_m, new_v, dw
+
+
 # ---------------------------------------------------------------------------
 # Block-wise absmax int8 quantization (kernel: quant8.py)
 # ---------------------------------------------------------------------------
@@ -113,6 +132,96 @@ def quantized_adam_update(
     nmq, nms = quantize_blockwise(new_m, block)
     nvq, nvs = quantize_blockwise(new_v, block)
     return nmq, nms, nvq, nvs, delta
+
+
+# ---------------------------------------------------------------------------
+# Row-block int8 codec + single-pass fused 8-bit COAP step (kernel: quant8.py)
+# ---------------------------------------------------------------------------
+# The flat codec above views a tensor as (nblocks, 256) after ravel — fine
+# for dense Adam states, but its blocks straddle row boundaries of an
+# (..., m, r) moment, so a kernel tiled over rows cannot dequantize a tile
+# without neighbouring rows' scales. The ROW-BLOCK codec quantizes along the
+# LAST axis only: each row carries ceil(r/block) scales for its own
+# ``block``-wide segments (ragged tail allowed). Row tiles are then
+# self-contained: (bm, r) int8 + (bm, nblk) scales dequantize in VMEM with
+# no cross-tile traffic, which is what lets the 8-bit optimizer step run as
+# ONE kernel. For r a multiple of ``block`` the codes are identical to the
+# flat codec's; only the scale layout differs.
+
+
+def rowblock_nblocks(r: int, block: int = QUANT_BLOCK) -> int:
+    return -(-int(r) // int(block))
+
+
+def quantize_rowblock(
+    x: jnp.ndarray, block: int = QUANT_BLOCK
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., r) -> (q int8 (..., r), scale f32 (..., nblk))."""
+    r = x.shape[-1]
+    nblk = rowblock_nblocks(r, block)
+    pad = nblk * block - r
+    x32 = x.astype(jnp.float32)
+    if pad:
+        x32 = jnp.pad(x32, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    b = x32.reshape(x.shape[:-1] + (nblk, block))
+    absmax = jnp.max(jnp.abs(b), axis=-1)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(b * inv[..., None]), -127, 127)
+    q = q.reshape(x.shape[:-1] + (nblk * block,))[..., :r]
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rowblock(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    block: int = QUANT_BLOCK,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """(q (..., r), scale (..., nblk)) -> fp tensor of q's shape."""
+    r = q.shape[-1]
+    nblk = scale.shape[-1]
+    pad = nblk * block - r
+    q32 = q.astype(jnp.float32)
+    if pad:
+        q32 = jnp.pad(q32, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    b = q32.reshape(q.shape[:-1] + (nblk, block)) * scale[..., None]
+    return b.reshape(q.shape[:-1] + (nblk * block,))[..., :r].astype(dtype)
+
+
+def coap_fused_update_q8(
+    g: jnp.ndarray,  # (..., m, n) canonical gradient
+    p: jnp.ndarray,  # (..., n, r) projection
+    m_q: jnp.ndarray,  # (..., m, r) int8 first moment (row-block codec)
+    m_scale: jnp.ndarray,  # (..., m, nblk) f32
+    v_q: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    count: jnp.ndarray,  # scalar int32, 1-based step
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block: int = QUANT_BLOCK,
+):
+    """One 8-bit COAP step in a single logical pass (the paper's quantized
+    hot loop): project ``G P``, dequantize the int8 moments, moment EMA +
+    bias-corrected Δ with the underflow clip, requantize M'/V', and
+    back-project ``Δ Pᵀ``. Neither fp32 moments nor Δ_proj are caller-visible
+    tensors. Returns (new_m_q, new_m_scale, new_v_q, new_v_scale, ΔW).
+    """
+    m = dequantize_rowblock(m_q, m_scale, block)
+    v = dequantize_rowblock(v_q, v_scale, block)
+    g_proj = jnp.einsum(
+        "...mn,...nr->...mr", g.astype(jnp.float32), p.astype(jnp.float32)
+    )
+    new_m = b1 * m + (1.0 - b1) * g_proj
+    new_v = b2 * v + (1.0 - b2) * jnp.square(g_proj)
+    t = count.astype(jnp.float32)
+    delta = (new_m / (1.0 - b1**t)) / (jnp.sqrt(new_v / (1.0 - b2**t)) + eps)
+    delta = jnp.clip(delta, -QUANT_DELTA_CLIP, QUANT_DELTA_CLIP)
+    dw = jnp.einsum("...mr,...nr->...mn", delta, p.astype(jnp.float32))
+    nmq, nms = quantize_rowblock(new_m, block)
+    nvq, nvs = quantize_rowblock(new_v, block)
+    return nmq, nms, nvq, nvs, dw
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,126 @@
+"""Shared test config: a minimal ``hypothesis`` fallback shim.
+
+Several test modules import ``hypothesis`` for property sweeps. The target
+container does not ship it (and nothing may be pip-installed), so when the
+real package is absent we register a tiny deterministic stand-in in
+``sys.modules`` *before* collection. The shim reproduces the small API
+surface these tests use — ``given``, ``settings`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``text`` / ``booleans`` strategies — and
+runs each property a bounded number of deterministic examples (seeded by
+the test name, edge cases first). With the real hypothesis installed the
+shim is inert.
+"""
+from __future__ import annotations
+
+import random
+import string
+import sys
+import types
+
+
+def _install_hypothesis_shim() -> None:
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, edge_examples, draw):
+            self._edges = list(edge_examples)
+            self._draw = draw
+
+        def example(self, rng: random.Random, i: int):
+            if i < len(self._edges):
+                return self._edges[i]
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: rng.randint(min_value, max_value),
+        )
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: rng.uniform(min_value, max_value),
+        )
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            elements, lambda rng: elements[rng.randrange(len(elements))]
+        )
+
+    def booleans():
+        return _Strategy([False, True], lambda rng: bool(rng.getrandbits(1)))
+
+    def text(alphabet=None, min_size=0, max_size=20):
+        chars = (
+            list(alphabet)
+            if alphabet is not None
+            else list(string.ascii_letters + string.digits + " .,!?-_\n")
+        )
+        max_size = 20 if max_size is None else max_size
+
+        def draw(rng: random.Random):
+            k = rng.randint(min_size, max_size)
+            return "".join(rng.choice(chars) for _ in range(k))
+
+        edges = []
+        if min_size == 0:
+            edges.append("")
+        return _Strategy(edges, draw)
+
+    _MAX_EXAMPLES_CAP = 6  # keep the deterministic sweep fast in CI
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            def wrapper():
+                n = min(
+                    getattr(wrapper, "_shim_max_examples", _MAX_EXAMPLES_CAP),
+                    _MAX_EXAMPLES_CAP,
+                )
+                rng = random.Random(fn.__qualname__)
+                for i in range(n):
+                    args = [s.example(rng, i) for s in arg_strategies]
+                    kwargs = {
+                        k: s.example(rng, i) for k, s in kw_strategies.items()
+                    }
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._shim_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    st.text = text
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_shim()

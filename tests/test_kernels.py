@@ -11,8 +11,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.coap_update import coap_fused_update_pallas
+from repro.kernels.coap_update import (
+    coap_fused_update_bp_pallas,
+    coap_fused_update_pallas,
+)
 from repro.kernels.quant8 import (
+    coap_fused_update_q8_pallas,
     dequantize_blockwise_pallas,
     quantize_blockwise_pallas,
     quantized_adam_update_pallas,
@@ -56,6 +60,62 @@ def test_coap_fused_update_stacked_axes():
     got = coap_fused_update_pallas(g, p, mm, vv, cnt, interpret=True, bm=64, bn=128)
     want = ref.coap_fused_update(g, p, mm, vv, cnt)
     np.testing.assert_allclose(got[2], want[2], rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# coap_update back-projection-fused kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(16, 520),
+    n=st.integers(128, 700),
+    r=st.sampled_from([16, 64, 128]),
+    count=st.integers(1, 1000),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_coap_fused_update_bp_matches_ref(m, n, r, count, dtype):
+    g = _rand((m, n), 0, dtype)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    mm = 0.1 * _rand((m, r), 2)
+    vv = jnp.abs(0.01 * _rand((m, r), 3))
+    cnt = jnp.asarray(count, jnp.int32)
+    got = coap_fused_update_bp_pallas(
+        g, p, mm, vv, cnt, interpret=True, bm=128, bn=256
+    )
+    want = ref.coap_fused_update_bp(g, p, mm, vv, cnt)
+    for a, b, name in zip(got, want, ["m", "v", "dw"]):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5, err_msg=name)
+
+
+def test_coap_fused_update_bp_stacked_axes():
+    g = _rand((2, 3, 130, 260), 0)
+    p = _rand((2, 3, 260, 32), 1) / np.sqrt(32)
+    mm = jnp.zeros((2, 3, 130, 32))
+    vv = jnp.zeros((2, 3, 130, 32))
+    cnt = jnp.asarray(7, jnp.int32)
+    got = coap_fused_update_bp_pallas(g, p, mm, vv, cnt, interpret=True,
+                                      bm=64, bn=128)
+    want = ref.coap_fused_update_bp(g, p, mm, vv, cnt)
+    np.testing.assert_allclose(got[2], want[2], rtol=3e-5, atol=3e-5)
+
+
+def test_coap_fused_update_bp_consistent_with_nonbp():
+    """ΔW from the fused kernel == Δ_proj Pᵀ of the non-BP kernel."""
+    m, n, r = 300, 520, 48
+    g = _rand((m, n), 0)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    mm = 0.1 * _rand((m, r), 2)
+    vv = jnp.abs(0.01 * _rand((m, r), 3))
+    cnt = jnp.asarray(5, jnp.int32)
+    nm1, nv1, delta = coap_fused_update_pallas(
+        g, p, mm, vv, cnt, interpret=True, bm=128, bn=256
+    )
+    nm2, nv2, dw = coap_fused_update_bp_pallas(
+        g, p, mm, vv, cnt, interpret=True, bm=128, bn=256
+    )
+    np.testing.assert_array_equal(np.asarray(nm1), np.asarray(nm2))
+    np.testing.assert_array_equal(np.asarray(nv1), np.asarray(nv2))
+    np.testing.assert_allclose(dw, delta @ p.T, rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +167,141 @@ def test_quantized_adam_update_matches_ref(m, r, seed):
             assert int(jnp.max(jnp.abs(a.astype(jnp.int32) - b.astype(jnp.int32)))) <= 1
         else:
             np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# row-block codec + single-pass fused 8-bit COAP kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    r=st.sampled_from([8, 100, 256, 300, 512]),
+    scale_pow=st.integers(-6, 3),
+    seed=st.integers(0, 100),
+)
+def test_rowblock_roundtrip(m, r, scale_pow, seed):
+    """Codec invariants incl. ragged r (tail block shorter than 256)."""
+    x = (10.0**scale_pow) * _rand((m, r), seed)
+    q, s = ref.quantize_rowblock(x)
+    assert q.shape == (m, r) and q.dtype == jnp.int8
+    assert s.shape == (m, ref.rowblock_nblocks(r))
+    back = ref.dequantize_rowblock(q, s)
+    # absmax codec: error <= scale/2 per element, scales per row-block
+    err = np.abs(np.asarray(x) - np.asarray(back))
+    bound = np.repeat(np.asarray(s), ref.QUANT_BLOCK, axis=-1)[:, :r]
+    assert (err <= 0.5 * bound + 1e-12).all()
+
+
+def test_rowblock_matches_flat_codec_when_aligned():
+    """For r a multiple of 256 the two codecs must emit identical codes."""
+    x = _rand((64, 512), 0)
+    q_row, s_row = ref.quantize_rowblock(x)
+    q_flat, s_flat = ref.quantize_blockwise(x)
+    np.testing.assert_array_equal(
+        np.asarray(q_row).reshape(-1, ref.QUANT_BLOCK), np.asarray(q_flat)
+    )
+    np.testing.assert_array_equal(np.asarray(s_row).reshape(-1),
+                                  np.asarray(s_flat))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(16, 300),
+    n=st.sampled_from([128, 256, 520]),
+    r=st.sampled_from([32, 48, 300]),
+    count=st.integers(1, 500),
+)
+def test_coap_fused_update_q8_exact_codes(m, n, r, count):
+    """With a single n-block the kernel's G@P is the oracle's dot — the
+    requantized int8 states must be BIT-EXACT, scales/ΔW to fp32 ulp."""
+    g = 0.1 * _rand((m, n), 0)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    m0 = 0.05 * _rand((m, r), 2)
+    v0 = jnp.abs(0.01 * _rand((m, r), 3))
+    mq, ms = ref.quantize_rowblock(m0)
+    vq, vs = ref.quantize_rowblock(v0)
+    cnt = jnp.asarray(count, jnp.int32)
+    got = coap_fused_update_q8_pallas(
+        g, p, mq, ms, vq, vs, cnt, interpret=True, bm=64, bn=1024
+    )
+    want = ref.coap_fused_update_q8(g, p, mq, ms, vq, vs, cnt)
+    for a, b, name in zip(got[:4:2], want[:4:2], ["mq", "vq"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    for i, name in [(1, "ms"), (3, "vs"), (4, "dw")]:
+        np.testing.assert_allclose(got[i], want[i], rtol=1e-5, atol=1e-5,
+                                   err_msg=name)
+
+
+def test_coap_fused_update_q8_ragged_multiblock():
+    """Ragged m/n with n split across blocks: accumulation order differs
+    from the oracle, so codes may differ by the .5-rounding code at most."""
+    m, n, r = 300, 700, 48
+    g = 0.1 * _rand((m, n), 0)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    m0 = 0.05 * _rand((m, r), 2)
+    v0 = jnp.abs(0.01 * _rand((m, r), 3))
+    mq, ms = ref.quantize_rowblock(m0)
+    vq, vs = ref.quantize_rowblock(v0)
+    cnt = jnp.asarray(9, jnp.int32)
+    got = coap_fused_update_q8_pallas(
+        g, p, mq, ms, vq, vs, cnt, interpret=True, bm=128, bn=256
+    )
+    want = ref.coap_fused_update_q8(g, p, mq, ms, vq, vs, cnt)
+    for a, b, name in zip(got, want, ["mq", "ms", "vq", "vs", "dw"]):
+        if a.dtype == jnp.int8:
+            diff = np.abs(np.asarray(a, np.int32) - np.asarray(b, np.int32))
+            assert diff.max() <= 1, name
+        else:
+            np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5,
+                                       err_msg=name)
+
+
+def test_coap_fused_update_q8_stacked_leaves():
+    """Stacked (L, m, n) leaves — the shape the bucketed optimizer emits."""
+    g = 0.1 * _rand((4, 130, 260), 0)
+    p = _rand((4, 260, 32), 1) / np.sqrt(32)
+    m0 = 0.05 * _rand((4, 130, 32), 2)
+    v0 = jnp.abs(0.01 * _rand((4, 130, 32), 3))
+    mq, ms = ref.quantize_rowblock(m0)
+    vq, vs = ref.quantize_rowblock(v0)
+    cnt = jnp.asarray(7, jnp.int32)
+    got = coap_fused_update_q8_pallas(
+        g, p, mq, ms, vq, vs, cnt, interpret=True, bm=64, bn=512
+    )
+    want = ref.coap_fused_update_q8(g, p, mq, ms, vq, vs, cnt)
+    for a, b, name in zip(got, want, ["mq", "ms", "vq", "vs", "dw"]):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=3e-5, atol=3e-5, err_msg=name,
+        )
+
+
+def test_coap_fused_update_q8_underflow_clip_guard():
+    """The int8-v underflow guard: when V quantizes to all-zero codes while
+    M does not, the raw bias-corrected Δ is ~1/eps; the kernel must emit the
+    clipped value (and match the oracle bit-for-bit on codes)."""
+    m, n, r = 32, 128, 16
+    g = jnp.zeros((m, n))  # no gradient: moments keep their stored values
+    p = _rand((n, r), 1) / np.sqrt(r)
+    m0 = 1e-3 * jnp.ones((m, r))
+    mq, ms = ref.quantize_rowblock(m0)
+    vq = jnp.zeros((m, r), jnp.int8)  # V underflowed to zero codes
+    vs = jnp.zeros((m, ref.rowblock_nblocks(r)))
+    cnt = jnp.asarray(100, jnp.int32)
+    got = coap_fused_update_q8_pallas(
+        g, p, mq, ms, vq, vs, cnt, interpret=True, bm=32, bn=256
+    )
+    want = ref.coap_fused_update_q8(g, p, mq, ms, vq, vs, cnt)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(got[4], want[4], rtol=1e-5, atol=1e-6)
+    # the guard really engaged: unclipped Δ would be ~m/eps >> clip
+    raw = float(
+        (0.9 * 1e-3 / (1 - 0.9**100)) / (0.0 + 1e-8)
+    )
+    assert raw > ref.QUANT_DELTA_CLIP * 100
+    # and ΔW stays bounded by clip * ||P||_1 per row
+    assert np.isfinite(np.asarray(got[4])).all()
 
 
 # ---------------------------------------------------------------------------
