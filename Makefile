@@ -1,5 +1,5 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke bench-overhead
+.PHONY: test smoke bench-overhead bench-refresh
 
 test:
 	./scripts/ci.sh
@@ -11,3 +11,8 @@ smoke:
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
 bench-overhead:
 	PYTHONPATH=src:. python benchmarks/run.py --only overhead
+
+# Regenerates BENCH_refresh.json (staggered vs synchronized worst-step
+# refresh cost + fused vs unfused Eqn-6 bytes on LLaMA-1B shapes).
+bench-refresh:
+	PYTHONPATH=src:. python benchmarks/run.py --only refresh

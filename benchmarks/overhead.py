@@ -180,6 +180,297 @@ def quantized_fused_vs_unfused(mats, rank, block=kref.QUANT_BLOCK,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Refresh-cost section (BENCH_refresh.json)
+# ---------------------------------------------------------------------------
+# LLaMA-1B projected buckets exactly as scale_by_projected_adam forms them
+# over a non-stacked 24-layer tree: (canonical m, n, leaf count). q/k/v/o are
+# one congruent (2048, 2048) bucket; gate/up transpose into canonical
+# (5461, 2048) but keep their own bucket key (original shape differs from
+# down's), so the tree has three staggerable buckets.
+LLAMA1B_REFRESH_BUCKETS = [
+    ("attn_qkvo", (2048, 2048), 96),
+    ("mlp_gate_up", (5461, 2048), 48),
+    ("mlp_down", (5461, 2048), 24),
+]
+
+
+def refresh_stagger_report(t_u=40, lam=5, rank=512, stagger_groups=8,
+                           measure=True):
+    """Worst-step refresh cost, synchronized vs staggered schedule.
+
+    Accounting: per-leaf refresh cost is (a) bytes — the gradient words the
+    refresh must stream (fused Eqn-6: one m·n·4 G sweep; Eqn-7 recal: two,
+    for G P and Qᵀ G) — and (b) optionally measured wall seconds per leaf at
+    the true shapes. A schedule's step cost is the sum over leaves refreshing
+    at that step; the worst step is taken over the steady-state window
+    ``[1, λ·T_u]`` (step 0 is the one-time Eqn-7 initialization and is
+    identical under both schedules by design). Phases come from the real
+    ``stagger_phases`` allocator, so this measures the shipped schedule.
+    """
+    from repro.core.coap_adam import _phase_groups, stagger_phases
+
+    sizes = [cnt for _, _, cnt in LLAMA1B_REFRESH_BUCKETS]
+    staggered = stagger_phases(sizes, t_u, stagger_groups)
+    synchronized = [(0,) * cnt for cnt in sizes]
+
+    # Per-leaf cost per unique canonical shape.
+    shape_cost = {}
+    for _, (m, n), _cnt in LLAMA1B_REFRESH_BUCKETS:
+        if (m, n) in shape_cost:
+            continue
+        r = min(rank, n)
+        row = {
+            "eqn6_bytes": float(m * n * 4),
+            "recal_bytes": float(2 * m * n * 4),
+            "eqn6_s": 0.0,
+            "recal_s": 0.0,
+        }
+        if measure:
+            g = jax.random.normal(jax.random.key(0), (m, n))
+            p = jax.random.normal(jax.random.key(1), (n, r)) / np.sqrt(r)
+            mp = 0.1 * jax.random.normal(jax.random.key(2), (m, r))
+            row["eqn6_s"] = time_fn(
+                jax.jit(lambda pp, gg, m2: correlation.sgd_update(
+                    pp, gg, m2, use_fused=True)),
+                p, g, mp, iters=1,
+            )
+            row["recal_s"] = time_fn(
+                jax.jit(recalibrate.lowcost_svd), g, p, iters=1
+            )
+        shape_cost[(m, n)] = row
+
+    def step_cost(count, phase_lists):
+        bytes_, secs = 0.0, 0.0
+        for (_, shape, _cnt), phases in zip(
+            LLAMA1B_REFRESH_BUCKETS, phase_lists
+        ):
+            for _s0, sz, ph in _phase_groups(phases):
+                if (count + ph) % t_u == 0:
+                    kind = (
+                        "recal" if (count + ph) % (lam * t_u) == 0 else "eqn6"
+                    )
+                    bytes_ += sz * shape_cost[shape][f"{kind}_bytes"]
+                    secs += sz * shape_cost[shape][f"{kind}_s"]
+        return bytes_, secs
+
+    def schedule_stats(phase_lists):
+        per_step = [step_cost(c, phase_lists) for c in range(1, lam * t_u + 1)]
+        worst_b = max(b for b, _ in per_step)
+        worst_s = max(s for _, s in per_step)
+        total_b = sum(b for b, _ in per_step)
+        return {
+            "worst_step_bytes": worst_b,
+            "worst_step_seconds": worst_s,
+            "total_bytes_per_period": total_b,
+            "refresh_steps": sum(1 for b, _ in per_step if b > 0),
+        }
+
+    sync = schedule_stats(synchronized)
+    stag = schedule_stats(staggered)
+    assert sync["total_bytes_per_period"] == stag["total_bytes_per_period"], (
+        "stagger must not change the total refresh work per period"
+    )
+    report = {
+        "t_update": t_u,
+        "lam": lam,
+        "rank": rank,
+        "stagger_groups": stagger_groups,
+        "buckets": [
+            {"label": lbl, "canonical_shape": list(shape), "leaves": cnt,
+             "phases": list(ph)}
+            for (lbl, shape, cnt), ph in zip(
+                LLAMA1B_REFRESH_BUCKETS, staggered
+            )
+        ],
+        "synchronized": sync,
+        "staggered": stag,
+        "worst_step_bytes_ratio": (
+            sync["worst_step_bytes"] / stag["worst_step_bytes"]
+        ),
+        # None (not 0.0) when timing was skipped — 0.0 would read as a
+        # wall-time degradation instead of an absent measurement.
+        "worst_step_seconds_ratio": (
+            sync["worst_step_seconds"] / stag["worst_step_seconds"]
+            if stag["worst_step_seconds"] else None
+        ),
+        "per_shape_leaf_cost": {
+            f"{m}x{n}": c for (m, n), c in shape_cost.items()
+        },
+    }
+    return report
+
+
+def eqn6_fused_vs_unfused(mats, rank, lr=0.1, steps=1):
+    """Bytes-accessed comparison for ONE Eqn-6 SGD refresh step.
+
+    ``unfused``: the pre-fusion schedule — ``correlation.loss_and_grad``'s
+    einsum chain plus the P update as separately-jitted dispatches, each a
+    real HBM materialization boundary; summed XLA ``cost_analysis`` bytes
+    (same methodology as the q8 section above).
+
+    ``fused``: operand+result bytes of the single ``kernels/eqn6.py``
+    dispatch — G, P, M_proj in; new-P, grad, val out — plus, conservatively,
+    the kernel's internal G re-stream for multi-step SGD ((steps−1)·m·n
+    words; P and every accumulator stay VMEM-resident across the grid).
+
+    ``g_bytes_*`` isolates the m×n traffic the tentpole targets: the number
+    of (m, n)-sized tensor reads+writes each schedule performs, in bytes.
+    The unfused chain touches G (or an m×n intermediate: Ĝ, M̂, D) 11 times
+    per step; the fused kernel streams G exactly once per step — and half
+    that again in bytes when G is bf16.
+    """
+    from repro.core.correlation import _EPS
+
+    out = {}
+    for (m, n), _count in mats:
+        mm, nn = max(m, n), min(m, n)
+        r = min(rank, nn)
+        g = jnp.zeros((mm, nn))
+        p = jnp.zeros((nn, r))
+        mp = jnp.zeros((mm, r))
+        gp = jnp.zeros((mm, r))
+        ghat = jnp.zeros((mm, nn))
+        mhat = jnp.zeros((mm, nn))
+        d = jnp.zeros((mm, nn))
+        ptp = jnp.zeros((r, r))
+        nr = jnp.zeros((nn, r))
+        sc = jnp.zeros(())
+
+        stages = [
+            ("project", lambda g_, p_: jnp.einsum("mn,nr->mr", g_, p_),
+             (g, p)),
+            ("reconstruct", lambda gp_, p_: jnp.einsum("mr,nr->mn", gp_, p_),
+             (gp, p)),
+            ("mse_val", lambda gh_, g_: jnp.mean(jnp.square(gh_ - g_)),
+             (ghat, g)),
+            ("t1", lambda p_, gp_: jnp.einsum("nr,mr,ms->ns", p_, gp_, gp_),
+             (p, gp)),
+            ("t2", lambda g_, gp_: jnp.einsum("mn,mr->nr", g_, gp_),
+             (g, gp)),
+            ("ptp", lambda p_: jnp.einsum("nr,nk->rk", p_, p_), (p,)),
+            ("gp_ptp", lambda gp_, pt_: jnp.einsum("mr,rk->mk", gp_, pt_),
+             (gp, ptp)),
+            ("t3", lambda g_, x_: jnp.einsum("mn,mk->nk", g_, x_),
+             (g, gp)),
+            ("m_hat", lambda mp_, p_: jnp.einsum("mr,nr->mn", mp_, p_),
+             (mp, p)),
+            ("cos_d", lambda mh_, g_: (
+                (g_ / (jnp.linalg.norm(mh_, axis=-1, keepdims=True)
+                       * jnp.linalg.norm(g_, axis=-1, keepdims=True) + _EPS)
+                 - mh_ * jnp.sum(mh_ * g_, axis=-1, keepdims=True)
+                 / (jnp.linalg.norm(mh_, axis=-1, keepdims=True) ** 3
+                    * jnp.linalg.norm(g_, axis=-1, keepdims=True) + _EPS))
+                / mh_.shape[-2]
+            ), (mhat, g)),
+            ("cos_grad", lambda d_, mp_: jnp.einsum("mn,mr->nr", d_, mp_),
+             (d, mp)),
+            ("combine_update",
+             lambda p_, a_, b_, c_, gc_, vm_, vc_: p_ - lr * (
+                 (2.0 / (mm * nn)) * (a_ - 2.0 * b_ + c_) * (1.0 - vc_)
+                 - gc_ * vm_
+             ), (p, nr, nr, nr, nr, sc, sc)),
+        ]
+        unfused_cost = {
+            name: _bytes_accessed(fn, *args) for name, fn, args in stages
+        }
+        unfused_bytes = float(steps) * sum(unfused_cost.values())
+
+        # fused single-dispatch I/O + conservative multi-step G re-stream
+        p_new, grad, val = p, nr, sc
+        fused_io = _nbytes(g, p, mp) + _nbytes(p_new, grad, val)
+        g_restream = (steps - 1) * float(mm * nn * 4)
+        fused_bytes = fused_io + g_restream
+
+        g_bytes_unfused = 11.0 * mm * nn * 4 * steps
+        g_bytes_fused = float(mm * nn * 4 * steps)
+        g_bytes_fused_bf16 = float(mm * nn * 2 * steps)
+
+        out[f"{mm}x{nn}"] = {
+            "rank": int(r),
+            "steps": int(steps),
+            "unfused_bytes": unfused_bytes,
+            "unfused_per_stage": unfused_cost,
+            "fused_io_bytes": fused_io,
+            "fused_bytes_conservative": fused_bytes,
+            "ratio": unfused_bytes / fused_io,
+            "ratio_conservative": unfused_bytes / fused_bytes,
+            "g_bytes_unfused": g_bytes_unfused,
+            "g_bytes_fused": g_bytes_fused,
+            "g_bytes_fused_bf16": g_bytes_fused_bf16,
+            "g_stream_ratio": g_bytes_unfused / g_bytes_fused,
+            "launches_unfused": len(stages),
+            "launches_fused": 1,
+        }
+    return out
+
+
+def run_refresh(csv: Csv, fast: bool = False):
+    """Refresh-cost section: staggered-vs-synchronized worst step + fused
+    Eqn-6 traffic. Writes ``BENCH_refresh.json`` next to the repo root."""
+    rank, t_u, lam = 512, 40, 5  # paper's LLaMA-1B recipe
+    print("# refresh cost (LLaMA-1B shapes)")
+    stag = refresh_stagger_report(
+        t_u=t_u, lam=lam, rank=rank, measure=not fast
+    )
+    rb = stag["worst_step_bytes_ratio"]
+    rs = stag["worst_step_seconds_ratio"]
+    rs_str = f"{rs:.1f}x" if rs is not None else "n/a"
+    csv.add("refresh/stagger_worst_step", 0.0,
+            f"bytes_ratio={rb:.1f}x;seconds_ratio={rs_str}")
+    print(
+        f"  worst-step refresh: sync "
+        f"{stag['synchronized']['worst_step_bytes']/1e6:9.1f} MB -> "
+        f"staggered {stag['staggered']['worst_step_bytes']/1e6:9.1f} MB "
+        f"({rb:.1f}x better; wall-time ratio {rs_str})"
+    )
+
+    mats = LLAMA1B_MATS[:1] if fast else LLAMA1B_MATS
+    eqn6 = eqn6_fused_vs_unfused(mats, rank)
+    for label, row in eqn6.items():
+        csv.add(
+            f"refresh/eqn6_fused_vs_unfused/{label}", 0.0,
+            f"ratio={row['ratio']:.2f}x;g_stream={row['g_stream_ratio']:.1f}x"
+            f";launches={row['launches_unfused']}->{row['launches_fused']}",
+        )
+        print(
+            f"  eqn6 {label:12s} unfused {row['unfused_bytes']/1e6:8.1f} MB "
+            f"({row['launches_unfused']} launches) -> fused "
+            f"{row['fused_io_bytes']/1e6:8.1f} MB (1 launch): "
+            f"{row['ratio']:.2f}x total, {row['g_stream_ratio']:.1f}x on "
+            f"G-sized streams"
+        )
+    report = {
+        "stagger": stag,
+        "eqn6": eqn6,
+        "eqn6_g_stream_ratio_min": min(
+            r_["g_stream_ratio"] for r_ in eqn6.values()
+        ),
+        "eqn6_ratio_min": min(r_["ratio"] for r_ in eqn6.values()),
+        "method": (
+            "stagger: per-leaf refresh cost = streamed-G bytes (fused Eqn-6 "
+            "one sweep, Eqn-7 recal two) and optionally measured per-leaf "
+            "wall seconds; worst step over the steady-state lam*T_u window, "
+            "phases from the shipped stagger_phases allocator. eqn6: "
+            "unfused = sum of XLA cost_analysis 'bytes accessed' over the "
+            "12 separately-dispatched stages of the pre-fusion refresh "
+            "(loss_and_grad einsum chain + P update); fused = operand+"
+            "result bytes of the single eqn6 kernel dispatch plus the "
+            "conservative (steps-1) G re-stream."
+        ),
+    }
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_refresh.json",
+    )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(
+        f"  wrote {out_path} (stagger {rb:.1f}x, eqn6 G-stream "
+        f"{report['eqn6_g_stream_ratio_min']:.1f}x)"
+    )
+
+
 def run(csv: Csv, fast: bool = False):
     rank = 512
     t_u, lam = 40, 5  # paper's LLaMA-1B recipe

@@ -38,6 +38,8 @@ class OptimizerConfig:
     eqn6_steps: int = 1
     update_scale: float = 1.0
     moment_transplant: bool = False
+    stagger: bool = True  # phase-staggered refresh schedule (coap_adam doc)
+    stagger_groups: int = 8
     seed: int = 0
     state_dtype: Any = jnp.float32
 
@@ -106,6 +108,8 @@ def make_optimizer(cfg: OptimizerConfig) -> optim.GradientTransformation:
             quantize=quantize,
             state_dtype=cfg.state_dtype,
             moment_transplant=cfg.moment_transplant,
+            stagger=cfg.stagger,
+            stagger_groups=cfg.stagger_groups,
         )
         if strategy == "galore":
             kw["update_scale"] = (

@@ -129,7 +129,9 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
             jnp.asarray([idx], jnp.int32),
         )
         new_p = new_p[0]
-        m = _maybe_transplant(cfg, leaf.m, p_old, new_p, refreshed)
+        # _refresh_p returns a (B,)=(1,) refresh mask; this per-leaf path
+        # (synchronized schedule) consumes it as a scalar.
+        m = _maybe_transplant(cfg, leaf.m, p_old, new_p, refreshed[0])
         g_proj = projector.project(gc, new_p)
         g2 = jnp.square(g_proj)
         new_row = b2 * leaf.row + (1.0 - b2) * jnp.sum(g2, axis=-1)

@@ -36,6 +36,33 @@ over leading axes, and flora's per-leaf RNG keys fold in the ORIGINAL flat
 leaf index, so bucketed and per-leaf execution produce identical bits
 (``bucket_leaves=False`` keeps the per-leaf loop for A/B checks).
 
+STAGGERED REFRESH (``stagger=True``, default): the paper-faithful schedule
+refreshes EVERY projected leaf at ``count % T_u == 0`` — a synchronized
+QR/SVD + Eqn-6 stall across the whole tree every ``T_u`` steps (the GaLore
+cost cliff the paper's cheap refresh is meant to remove). With stagger on,
+each leaf gets a deterministic phase offset and refreshes when
+``(count + phase) % T_u == 0`` (recalibration likewise at
+``(count + phase) % (λ·T_u) == 0``), so refresh work spreads nearly
+uniformly over the interval and the worst step pays ~1/U of the
+synchronized cost (U = total phase groups). Semantics preserved exactly:
+
+  * every leaf still refreshes with period ``T_u`` and recalibrates with
+    period ``λ·T_u`` — only the phase differs per leaf;
+  * Eqn-7 initialization at t=0 runs for ALL leaves regardless of phase
+    (Algorithm 1 line 3 — the first gradient seeds every P);
+  * phases are a pure function of the bucket structure
+    (``stagger_phases``), so they are identical across restarts and
+    identical between bucketed and per-leaf execution;
+  * within a congruent bucket, leaves are partitioned into at most
+    ``stagger_groups`` contiguous phase groups; on a refresh step only the
+    matching group's slice runs QR/SVD/Eqn-6 (``lax.switch`` over static
+    slices), and the per-step fused update stays ONE launch per bucket.
+
+``stagger=False`` restores the synchronized schedule bit-for-bit.
+Flora's per-step resample (T_u=1) degenerates to a single phase-0 group and
+is unchanged; with T_u>1 its resamples stagger for free. Conv (Tucker-2)
+leaves keep the synchronized per-leaf schedule (ROADMAP open item).
+
 Known trade-off: the stack/scatter round-trip at the bucket boundary is
 real copy traffic (XLA fuses some of it into kernel operands, but not the
 int8 state round-trip). It buys one launch + one trace per bucket instead
@@ -132,6 +159,8 @@ class ProjectedAdamConfig:
     moment_transplant: bool = False  # carry M into the new subspace at refresh
     use_fused_kernel: bool = True  # route through kernels/ops (Pallas on TPU)
     bucket_leaves: bool = True  # batch congruent leaves into stacked launches
+    stagger: bool = True  # phase-staggered refresh schedule (module docstring)
+    stagger_groups: int = 8  # max phase groups per congruent bucket
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -185,6 +214,93 @@ def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
     return cfg.rules.spec_for(path, shape)
 
 
+def stagger_phases(
+    bucket_sizes, t_update: int, stagger_groups: int
+) -> list:
+    """Deterministic per-leaf refresh phases for the staggered schedule.
+
+    ``bucket_sizes`` lists the projected buckets' leaf counts in tree
+    (insertion) order. Each bucket is split into at most ``stagger_groups``
+    contiguous near-equal groups; the resulting units are spread uniformly
+    over ``[0, t_update)`` so the worst refresh step carries ~1/U of the
+    synchronized cost. Pure function of the tree structure — phases are
+    identical across restarts and between bucketed and per-leaf execution.
+    Returns one tuple of per-leaf-position phases per bucket.
+    """
+    t_u = max(1, int(t_update))
+    n_groups = [
+        max(1, min(int(b), int(stagger_groups), t_u)) for b in bucket_sizes
+    ]
+    total = sum(n_groups) or 1
+    out = []
+    u = 0
+    for b, ng in zip(bucket_sizes, n_groups):
+        unit_phases = [((u + j) * t_u) // total for j in range(ng)]
+        out.append(tuple(unit_phases[(pos * ng) // b] for pos in range(b)))
+        u += ng
+    return out
+
+
+def _phase_groups(phases) -> list:
+    """Maximal runs of equal phase -> [(start, size, phase)]. Phases are
+    non-decreasing within a bucket (``stagger_phases`` allocates monotone
+    units), so equal phases are always adjacent and groups carry distinct
+    phases in [0, T_u) — at most one group matches any given step."""
+    groups = []
+    start = 0
+    for i in range(1, len(phases) + 1):
+        if i == len(phases) or phases[i] != phases[start]:
+            groups.append((start, i - start, phases[start]))
+            start = i
+    return groups
+
+
+def _expand_mask(mask: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """(B,) bool -> (B, 1, ..., 1) broadcastable against a stacked leaf."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _sched_preds(count, ph: int, t_u: int, lam: int):
+    """THE staggered-schedule predicates, defined once: refresh when
+    ``(count + phase) % T_u == 0``, recalibrate when ``(count + phase) %
+    (λ·T_u) == 0`` — plus the mandatory Eqn-7 initialization for everyone at
+    count == 0. ``_refresh_mask`` is the vectorized refresh predicate."""
+    do_ref = ((count + ph) % t_u == 0) | (count == 0)
+    do_recal = ((count + ph) % (lam * t_u) == 0) | (count == 0)
+    return do_ref, do_recal
+
+
+def _refresh_mask(count, phases, t_u: int) -> jnp.ndarray:
+    phase_arr = jnp.asarray(phases, jnp.int32)
+    return ((count + phase_arr) % t_u == 0) | (count == 0)
+
+
+def _stagger_select(groups, count, t_u: int) -> jnp.ndarray:
+    """Branch index for a staggered lax.switch: 0 = no-op, 1..G = the (at
+    most one — groups carry distinct phases mod T_u) matching phase group,
+    G+1 = whole-bucket t=0 initialization."""
+    sel = jnp.zeros((), jnp.int32)
+    for j, (_, _, ph) in enumerate(groups):
+        sel = jnp.where((count + ph) % t_u == 0, j + 1, sel)
+    return jnp.where(count == 0, len(groups) + 1, sel)
+
+
+def _stagger_dispatch(groups, count, t_u: int, noop, group_fn, full_fn):
+    """THE staggered group dispatch, shared by the refresh and both
+    transplant paths: lax.switch over [no-op] + one branch per phase group +
+    [whole-bucket t=0 init]. ``group_fn(s0, sz, ph)`` produces the branch
+    result for that group's static slice."""
+    branches = (
+        [noop]
+        + [
+            (lambda s0=s0, sz=sz, ph=ph: group_fn(s0, sz, ph))
+            for s0, sz, ph in groups
+        ]
+        + [full_fn]
+    )
+    return lax.switch(_stagger_select(groups, count, t_u), branches)
+
+
 def _refresh_p(
     cfg: ProjectedAdamConfig,
     spec: ProjSpec,
@@ -193,6 +309,7 @@ def _refresh_p(
     m_loader,
     count: jnp.ndarray,
     idx_arr: jnp.ndarray,
+    phases: Optional[Tuple[int, ...]] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Strategy-specific P refresh on a stacked leaf bucket.
 
@@ -200,37 +317,97 @@ def _refresh_p(
     ORIGINAL flat leaf indices (flora folds them into its per-leaf RNG keys,
     so bucketing never changes the random stream). ``m_loader`` is invoked
     lazily inside the refresh branch — quantized M is only dequantized on the
-    (rare) refresh steps, never in the per-step hot loop.
-    Returns (new_p, refreshed?bool)."""
-    if cfg.strategy == "coap":
-        t_u = cfg.t_update
-        do_ref = (count % t_u) == 0
-        do_recal = (count % (cfg.lam * t_u)) == 0
+    (rare) refresh steps, never in the per-step hot loop. Staggered group
+    branches pass it a bucket-axis ``slice`` so only the refreshing slice is
+    ever dequantized (per-leaf callers may supply a zero-arg loader: the
+    single-group path calls it without arguments). ``gc`` may be bf16
+    (every refresh primitive upcasts internally).
 
-        def refreshed():
+    ``phases`` (len B, non-decreasing) staggers the schedule: leaf b
+    refreshes when ``(count + phases[b]) % T_u == 0`` — plus the mandatory
+    Eqn-7 initialization for everyone at count==0. With a single phase group
+    (the default / ``stagger=False``) this is exactly the synchronized
+    Algorithm-1 schedule; with several, a ``lax.switch`` refreshes only the
+    matching group's static slice.
+
+    Returns (new_p, refreshed) where ``refreshed`` is a (B,) bool mask.
+    """
+    b = p.shape[0]
+    if phases is None:
+        phases = (0,) * b
+    groups = _phase_groups(phases)
+    t_u = cfg.t_update
+    mask = _refresh_mask(count, phases, t_u)
+
+    def eqn6(p_g, gc_g, m_g):
+        return correlation.sgd_update(
+            p_g, gc_g, m_g, lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
+            normalize=cfg.eqn6_normalize, use_fused=cfg.use_fused_kernel,
+        )
+
+    def _staggered(refresh_slice, full_init):
+        return _stagger_dispatch(
+            groups, count, t_u,
+            noop=lambda: p,
+            group_fn=lambda s0, sz, ph: p.at[s0:s0 + sz].set(
+                refresh_slice(s0, sz, ph)
+            ),
+            full_fn=full_init,
+        )
+
+    if cfg.strategy == "coap":
+        if len(groups) == 1:
+            do_ref, do_recal = _sched_preds(count, groups[0][2], t_u, cfg.lam)
+
+            def refreshed():
+                return lax.cond(
+                    do_recal,
+                    lambda: recalibrate.lowcost_svd(gc, p),
+                    lambda: eqn6(p, gc, m_loader()),
+                )
+
+            return lax.cond(do_ref, refreshed, lambda: p), mask
+
+        def refresh_slice(s0, sz, ph):
+            p_g = p[s0:s0 + sz]
+            gc_g = gc[s0:s0 + sz]
+            _, do_recal = _sched_preds(count, ph, t_u, cfg.lam)
             return lax.cond(
                 do_recal,
-                lambda: recalibrate.lowcost_svd(gc, p),
-                lambda: correlation.sgd_update(
-                    p, gc, m_loader(), lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
-                    normalize=cfg.eqn6_normalize,
-                ),
+                lambda: recalibrate.lowcost_svd(gc_g, p_g),
+                lambda: eqn6(p_g, gc_g, m_loader(slice(s0, s0 + sz))),
             )
 
-        new_p = lax.cond(do_ref, refreshed, lambda: p)
-        return new_p, do_ref
-    if cfg.strategy == "galore":
-        do_ref = (count % cfg.t_update) == 0
-        new_p = lax.cond(
-            do_ref, lambda: recalibrate.galore_svd(gc, spec.rank).astype(p.dtype),
-            lambda: p,
+        new_p = _staggered(
+            refresh_slice, lambda: recalibrate.lowcost_svd(gc, p)
         )
-        return new_p, do_ref
+        return new_p, mask
+
+    if cfg.strategy == "galore":
+        if len(groups) == 1:
+            do_ref, _ = _sched_preds(count, groups[0][2], t_u, cfg.lam)
+            new_p = lax.cond(
+                do_ref,
+                lambda: recalibrate.galore_svd(gc, spec.rank).astype(p.dtype),
+                lambda: p,
+            )
+            return new_p, mask
+
+        def refresh_slice(s0, sz, ph):
+            return recalibrate.galore_svd(
+                gc[s0:s0 + sz], spec.rank
+            ).astype(p.dtype)
+
+        new_p = _staggered(
+            refresh_slice,
+            lambda: recalibrate.galore_svd(gc, spec.rank).astype(p.dtype),
+        )
+        return new_p, mask
+
     # flora
-    do_ref = (count % cfg.t_update) == 0
     elem_shape = gc.shape[1:]
 
-    def resample():
+    def resample_idx(idx_slice):
         def one(i):
             key = jax.random.fold_in(
                 jax.random.fold_in(jax.random.key(cfg.seed), i), count
@@ -239,10 +416,18 @@ def _refresh_p(
                 key, elem_shape, spec.rank, p.dtype
             )
 
-        return jax.vmap(one)(idx_arr)
+        return jax.vmap(one)(idx_slice)
 
-    new_p = lax.cond(do_ref, resample, lambda: p)
-    return new_p, do_ref
+    if len(groups) == 1:
+        do_ref, _ = _sched_preds(count, groups[0][2], t_u, cfg.lam)
+        new_p = lax.cond(do_ref, lambda: resample_idx(idx_arr), lambda: p)
+        return new_p, mask
+
+    new_p = _staggered(
+        lambda s0, sz, ph: resample_idx(idx_arr[s0:s0 + sz]),
+        lambda: resample_idx(idx_arr),
+    )
+    return new_p, mask
 
 
 def _wants_transplant(cfg: ProjectedAdamConfig) -> bool:
@@ -251,19 +436,51 @@ def _wants_transplant(cfg: ProjectedAdamConfig) -> bool:
 
 
 def _maybe_transplant(
-    cfg: ProjectedAdamConfig, m: jnp.ndarray, p_old, p_new, refreshed
+    cfg: ProjectedAdamConfig, m: jnp.ndarray, p_old, p_new, refreshed,
+    phases=None, count=None,
 ) -> jnp.ndarray:
     """M_new = (M P_oldᵀ) P_new — keeps momentum direction across subspace
     switches. Flora's mechanism; optional (off = Algorithm 1 verbatim) for
-    COAP/GaLore."""
+    COAP/GaLore.
+
+    ``refreshed`` is either a scalar bool (per-leaf callers, e.g. the
+    adafactor variant) or a (B,) mask over a stacked bucket: under the
+    staggered schedule only the refreshed slice may transplant — P is
+    non-orthonormal, so project∘backproject is NOT the identity and must not
+    touch leaves whose P did not change. When the caller supplies ``phases``
+    and ``count``, the transplant follows the same group structure as
+    ``_refresh_p``: only the refreshing slice's (B_g, m, n, r) work runs,
+    not the whole bucket's."""
     if not _wants_transplant(cfg):
         return m
+    if getattr(refreshed, "ndim", 0) == 0:
+        def do():
+            restored = projector.backproject(m, p_old)
+            return projector.project(restored, p_new)
 
-    def do():
-        restored = projector.backproject(m, p_old)
-        return projector.project(restored, p_new)
+        return lax.cond(refreshed, do, lambda: m)
 
-    return lax.cond(refreshed, do, lambda: m)
+    def carry(sl):
+        restored = projector.backproject(m[sl], p_old[sl])
+        return projector.project(restored, p_new[sl])
+
+    groups = _phase_groups(phases) if phases is not None else []
+    if len(groups) <= 1:
+        def do_masked():
+            return jnp.where(
+                _expand_mask(refreshed, m.ndim), carry(slice(None)), m
+            )
+
+        return lax.cond(jnp.any(refreshed), do_masked, lambda: m)
+
+    return _stagger_dispatch(
+        groups, count, cfg.t_update,
+        noop=lambda: m,
+        group_fn=lambda s0, sz, ph: m.at[s0:s0 + sz].set(
+            carry(slice(s0, s0 + sz))
+        ),
+        full_fn=lambda: carry(slice(None)),  # t=0: everyone refreshed
+    )
 
 
 def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
@@ -308,23 +525,28 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         )
 
     def _update_proj_bucket(leaf: ProjLeaf, g, spec: ProjSpec, count, t,
-                            idx_arr):
+                            idx_arr, phases=None):
         """One step for a stacked bucket of congruent projected leaves (all
-        arrays carry a leading (B,) axis; B == 1 for singleton buckets)."""
-        gc = projector.to_canonical(g, spec).astype(jnp.float32)
+        arrays carry a leading (B,) axis; B == 1 for singleton buckets).
+        ``gc`` keeps the gradient's dtype — bf16 gradients stream into the
+        fused kernels as bf16 (upcast per-tile in VMEM, halving per-step G
+        traffic); only the unfused jnp fallbacks materialize fp32."""
+        gc = projector.to_canonical(g, spec)
         p_old = leaf.p
 
+        # Loader takes an optional bucket-axis slice so staggered group
+        # refreshes only dequantize/upcast the slice they actually update.
         if cfg.quantize:
-            def m_loader():
+            def m_loader(sl=slice(None)):
                 return kops.dequantize_rowblock(
-                    leaf.m, leaf.m_scale, block=cfg.quant_block
+                    leaf.m[sl], leaf.m_scale[sl], block=cfg.quant_block
                 )
         else:
-            def m_loader():
-                return leaf.m.astype(jnp.float32)
+            def m_loader(sl=slice(None)):
+                return leaf.m[sl].astype(jnp.float32)
 
         new_p, refreshed = _refresh_p(
-            cfg, spec, p_old, gc, m_loader, count, idx_arr
+            cfg, spec, p_old, gc, m_loader, count, idx_arr, phases
         )
 
         if cfg.quantize:
@@ -336,15 +558,49 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 # dequant->transplant->EMA->requant schedule: one added
                 # block-absmax rounding per refresh, accepted so the hot
                 # per-step path stays a single kernel with int8-only state.
-                def transplanted():
+                # Under stagger only the refreshing group's slice is
+                # dequantized/transplanted/requantized (same group structure
+                # as _refresh_p — the codec is row-wise, so slice-local
+                # requant emits the identical codes).
+                def carry_q(sl):
                     carried = projector.project(
-                        projector.backproject(m_loader(), p_old), new_p
+                        projector.backproject(m_loader(sl), p_old[sl]),
+                        new_p[sl],
                     )
-                    return kops.quantize_rowblock(carried, block=cfg.quant_block)
+                    return kops.quantize_rowblock(
+                        carried, block=cfg.quant_block
+                    )
 
-                m_q, m_s = lax.cond(
-                    refreshed, transplanted, lambda: (m_q, m_s)
-                )
+                def q_group(s0, sz, _ph):
+                    cq, cs = carry_q(slice(s0, s0 + sz))
+                    return (
+                        m_q.at[s0:s0 + sz].set(cq),
+                        m_s.at[s0:s0 + sz].set(cs),
+                    )
+
+                tgroups = _phase_groups(phases) if phases else []
+                if len(tgroups) <= 1:
+                    def transplanted():
+                        cq, cs = carry_q(slice(None))
+                        return (
+                            jnp.where(
+                                _expand_mask(refreshed, cq.ndim), cq, m_q
+                            ),
+                            jnp.where(
+                                _expand_mask(refreshed, cs.ndim), cs, m_s
+                            ),
+                        )
+
+                    m_q, m_s = lax.cond(
+                        jnp.any(refreshed), transplanted, lambda: (m_q, m_s)
+                    )
+                else:
+                    m_q, m_s = _stagger_dispatch(
+                        tgroups, count, cfg.t_update,
+                        noop=lambda: (m_q, m_s),
+                        group_fn=q_group,
+                        full_fn=lambda: carry_q(slice(None)),  # t=0 init
+                    )
             if cfg.use_fused_kernel:
                 # Single-pass fused int8 step: no fp32 M/V, no Δ_proj in HBM.
                 nmq, nms, nvq, nvs, update_c = kops.coap_fused_update_q8(
@@ -363,13 +619,15 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         else:
             m = m_loader()
             v = leaf.v.astype(jnp.float32)
-            m = _maybe_transplant(cfg, m, p_old, new_p, refreshed)
+            m = _maybe_transplant(
+                cfg, m, p_old, new_p, refreshed, phases, count
+            )
             if cfg.use_fused_kernel:
                 new_m, new_v, update_c = kops.coap_fused_update_bp(
                     gc, new_p, m, v, t, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps
                 )
             else:
-                g_proj = projector.project(gc, new_p)
+                g_proj = projector.project(gc.astype(jnp.float32), new_p)
                 new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
                 new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_proj)
                 tf = t.astype(jnp.float32)
@@ -389,6 +647,18 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
 
     def _update_dense_leaf(leaf: DenseLeaf, g, count, t):
         g32 = g.astype(jnp.float32)
+        if cfg.quantize and cfg.use_fused_kernel:
+            # 8-bit dense Adam as ONE fused dispatch (dequant -> EMA ->
+            # bias-corrected Δ + underflow clip -> requant); same math as the
+            # unfused schedule below, but mu/nu never round-trip HBM as
+            # fp32 between separate jnp passes.
+            nmq, nms, nvq, nvs, upd = kops.quantized_adam_update(
+                g32, leaf.mu, leaf.mu_scale, leaf.nu, leaf.nu_scale, t,
+                b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, block=cfg.quant_block,
+            )
+            return upd.astype(g.dtype), DenseLeaf(
+                mu=nmq, nu=nvq, mu_scale=nms, nu_scale=nvs
+            )
         mu = _load(leaf.mu, leaf.mu_scale, g.shape, cfg)
         nu = _load(leaf.nu, leaf.nu_scale, g.shape, cfg)
         new_mu = cfg.b1 * mu + (1.0 - cfg.b1) * g32
@@ -452,11 +722,34 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                     lambda x: x[b], nl_stack
                 )
 
-        for idxs in groups(proj_buckets):
+        # Per-leaf refresh phases (staggered schedule): allocated per bucket
+        # in tree order, identically for bucketed and per-leaf execution.
+        if cfg.stagger and cfg.t_update > 1:
+            phase_lists = stagger_phases(
+                [len(idxs) for idxs in proj_buckets.values()],
+                cfg.t_update, cfg.stagger_groups,
+            )
+        else:
+            phase_lists = [
+                (0,) * len(idxs) for idxs in proj_buckets.values()
+            ]
+
+        def proj_groups():
+            out = []
+            for idxs, phases in zip(proj_buckets.values(), phase_lists):
+                if cfg.bucket_leaves:
+                    out.append((idxs, phases))
+                else:
+                    out.extend(
+                        ([i], (ph,)) for i, ph in zip(idxs, phases)
+                    )
+            return out
+
+        for idxs, phases in proj_groups():
             g_stack = jnp.stack([flat_u[i][1] for i in idxs])
             u_stack, nl_stack = _update_proj_bucket(
                 stack_states(idxs), g_stack, specs[idxs[0]], count, t,
-                jnp.asarray(idxs, jnp.int32),
+                jnp.asarray(idxs, jnp.int32), phases,
             )
             scatter(idxs, u_stack, nl_stack)
 
@@ -499,6 +792,8 @@ def _projected_adamw(
     state_dtype=jnp.float32,
     update_scale=1.0,
     moment_transplant=False,
+    stagger=True,
+    stagger_groups=8,
     mask=None,
 ) -> GradientTransformation:
     cfg = ProjectedAdamConfig(
@@ -516,6 +811,8 @@ def _projected_adamw(
         state_dtype=state_dtype,
         update_scale=update_scale,
         moment_transplant=moment_transplant,
+        stagger=stagger,
+        stagger_groups=stagger_groups,
     )
     txs = [scale_by_projected_adam(cfg)]
     if weight_decay:

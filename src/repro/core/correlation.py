@@ -119,6 +119,7 @@ def sgd_update(
     lr: float = 0.1,
     steps: int = 1,
     normalize: bool = False,
+    use_fused: bool = False,
 ) -> jnp.ndarray:
     """Paper: 'use SGD to iteratively update P_t' — lr 0.1 by default.
 
@@ -128,7 +129,17 @@ def sgd_update(
     makes the step scale-invariant (the direction term is already
     scale-free). Off by default for faithfulness; ablated in
     benchmarks/table7_ablation.py.
+
+    ``use_fused=True`` routes through the single-pass fused loss+grad kernel
+    (``kernels/eqn6.py``: one G sweep per step instead of ~6 separate
+    einsums; bf16 G streams without an fp32 materialization). Semantics are
+    identical; the jnp path below is the oracle the kernel is pinned
+    against. ``normalize`` needs a ‖G‖ pre-pass and keeps the jnp path.
     """
+    if use_fused and not normalize:
+        from repro.kernels import ops as kops  # lazy: kernels layer is below
+
+        return kops.eqn6_sgd_update(p, g, m_proj, lr=lr, steps=steps)
     dtype = p.dtype
     p = p.astype(jnp.float32)
     g = g.astype(jnp.float32)

@@ -20,6 +20,13 @@ blocks bm=512, bn=512 keep the working set
 r ≤ 1024, with all MXU dims 128-aligned. The wrapper pads ragged shapes and
 vmaps over leading (layer/expert) stack axes.
 
+bf16 gradient streaming: G blocks are DMA'd in the caller's dtype and
+upcast to fp32 in VMEM (the ``astype`` inside the body), so bf16 training
+halves the kernel's dominant HBM read (the m·n gradient) with fp32 MXU
+accumulation — the optimizer never materializes an fp32 copy of G
+(``coap_adam._update_proj_bucket`` passes the canonical gradient through
+uncast; only the unfused jnp fallbacks cast eagerly).
+
 ``coap_fused_update_bp_pallas`` additionally fuses the back-projection
 ``ΔW = Δ_proj Pᵀ`` as a second MXU stage in the SAME kernel: the inner grid
 dimension runs 2·(n/bn) steps — phase 1 (k < kn) accumulates G@P exactly as

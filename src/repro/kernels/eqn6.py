@@ -1,0 +1,247 @@
+"""Single-pass fused Eqn-6 refresh kernel (loss+grad+SGD step over one G sweep).
+
+The unfused refresh (``core/correlation.loss_and_grad`` as separate einsum
+dispatches) streams the full m×n gradient from HBM ~6 times per SGD step:
+``GP``, ``GᵀGP``, ``Gᵀ(GP·PᵀP)``, the MSE value (via Ĝ), the row-cosine
+D-term, and ``DᵀM_proj`` each re-read G or an m×n intermediate. This kernel
+computes the exact same closed-form value+gradient in ONE tiled sweep over
+G's row-blocks, because every Eqn-6 term reduces to accumulators that are
+local to a (bm, n) row tile:
+
+    A  = (GP)ᵀ(GP)              (r, r)   MXU, per-tile gpᵀgp
+    C  = Gᵀ(GP)                 (n, r)   MXU, per-tile Gᵀgp
+    E  = Σᵢ αᵢ Gᵢᵀ M_projᵢ      (n, r)   αᵢ from row norms (VPU, local)
+    F  = Σᵢ βᵢ M_projᵢᵀM_projᵢ  (r, r)
+    ‖G‖²_F, Σᵢ cosᵢ             scalars (SMEM)
+
+with the non-local pieces recovered at sweep end WITHOUT re-reading G:
+
+    t3      = Gᵀ(GP·PᵀP) = C·PᵀP          (PᵀP from resident P)
+    ‖Ĝ‖²_F  = ⟨A, PᵀP⟩,  ⟨Ĝ, G⟩ = tr(A)   (so MSE needs no Ĝ materialized)
+    ‖M̂ᵢ‖²  = rowᵢ(M_proj·PᵀP)·M_projᵢ     (so M̂ is never formed)
+    ∂Cos    = DᵀM_proj = E − P·F           (D is never formed)
+
+The epilogue combines the product rule (see core/correlation.py for the
+paper-typo note) and applies ``P ← P − lr·∇`` to the VMEM-resident P, so a
+refresh streams G exactly ``steps`` times (grid = (steps, m/bm)) and writes
+only (n, r)-sized outputs — no m×n intermediate ever exists in HBM.
+
+bf16 gradient streaming: G (and M_proj) tiles are upcast to fp32 in VMEM
+after the DMA, so bf16 training halves refresh G traffic with fp32 math.
+
+VMEM budget: six (n, r) fp32 buffers stay resident — the P input block, the
+new-P and grad output blocks, and the P/C/E scratch — plus A/F/PᵀP (3·r²),
+one (bm, n) G tile and one (bm, r) M tile. At LLaMA-1B attention shapes
+(n=2048, r=512) that is ~25 MB of (n, r) buffers alone, OVER the 16 MB/core
+budget: the compiled TPU path currently fits r ≤ 256 at n=2048 (~13 MB with
+bm=256). Larger n·r needs an n-split variant, dropping the grad output, or
+smaller blocks — ROADMAP open item ("Eqn-6 kernel n-split variant");
+interpret mode (the CPU test path) is unconstrained.
+
+``eqn6_normalize=True`` (scale-invariant variant) needs a ‖G‖ pre-pass and
+is NOT fused — callers fall back to the jnp path (see correlation.sgd_update).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only compiler params; absent/renamed on some builds
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+from repro.kernels.coap_update import _pad_to as _pad_to_axis
+
+DEFAULT_BM = 256
+_EPS = 1e-12  # must match core/correlation._EPS exactly (oracle parity)
+
+
+def _sequential_compiler_params():
+    """Both grid dims carry state (SGD steps outer, row sweep inner)."""
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        )
+    except Exception:  # older naming
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        )
+
+
+def _eqn6_kernel(p_ref, g_ref, mp_ref, p_out_ref, val_ref, grad_ref,
+                 p_s, ptp_s, a_s, c_s, e_s, f_s, sc_s,
+                 *, lr, nm, m_true, n_true, eps):
+    s = pl.program_id(0)  # SGD step
+    k = pl.program_id(1)  # row-block of G
+
+    @pl.when((s == 0) & (k == 0))
+    def _load_p():
+        p_s[...] = p_ref[...].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _start_sweep():
+        # PᵀP from the resident (possibly already-updated) P.
+        ptp_s[...] = jax.lax.dot_general(
+            p_s[...], p_s[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        a_s[...] = jnp.zeros_like(a_s)
+        c_s[...] = jnp.zeros_like(c_s)
+        e_s[...] = jnp.zeros_like(e_s)
+        f_s[...] = jnp.zeros_like(f_s)
+        sc_s[0] = 0.0
+        sc_s[1] = 0.0
+
+    # ---- per-row-block accumulation (G/M tiles upcast in VMEM) ----------
+    g = g_ref[...].astype(jnp.float32)  # (bm, n)
+    mp = mp_ref[...].astype(jnp.float32)  # (bm, r)
+    gp = jnp.dot(g, p_s[...], preferred_element_type=jnp.float32)  # (bm, r)
+    a_s[...] += jax.lax.dot_general(
+        gp, gp, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    c_s[...] += jax.lax.dot_general(
+        g, gp, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    gn2 = jnp.sum(g * g, axis=1, keepdims=True)  # (bm, 1)
+    sc_s[0] = sc_s[0] + jnp.sum(gn2)
+    # ‖M̂ᵢ‖² and ⟨M̂ᵢ, Gᵢ⟩ via PᵀP / GP — M̂ never formed. Padded rows
+    # (zero G and M) contribute exactly 0 everywhere: denom reduces to eps
+    # and every numerator is 0.
+    w = jnp.dot(mp, ptp_s[...], preferred_element_type=jnp.float32)
+    mh2 = jnp.sum(w * mp, axis=1, keepdims=True)
+    inner = jnp.sum(mp * gp, axis=1, keepdims=True)
+    mh = jnp.sqrt(mh2)
+    gn = jnp.sqrt(gn2)
+    denom = mh * gn + eps
+    sc_s[1] = sc_s[1] + jnp.sum(inner / denom)
+    alpha = 1.0 / (m_true * denom)
+    beta = inner / (m_true * (mh * mh2 * gn + eps))  # mh³ = mh·mh²
+    e_s[...] += jax.lax.dot_general(
+        g, alpha * mp, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    f_s[...] += jax.lax.dot_general(
+        beta * mp, mp, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nm - 1)
+    def _finalize():
+        a = a_s[...]
+        ptp = ptp_s[...]
+        c = c_s[...]
+        p_cur = p_s[...]
+        r = a.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+        tr_a = jnp.sum(jnp.where(row == col, a, 0.0))  # ⟨Ĝ, G⟩
+        mn = m_true * n_true
+        v_mse = (jnp.sum(a * ptp) - 2.0 * tr_a + sc_s[0]) / mn
+        g_mse = (2.0 / mn) * (
+            jnp.dot(p_cur, a, preferred_element_type=jnp.float32)
+            - 2.0 * c
+            + jnp.dot(c, ptp, preferred_element_type=jnp.float32)
+        )
+        v_cos = sc_s[1] / m_true
+        g_cos = e_s[...] - jnp.dot(
+            p_cur, f_s[...], preferred_element_type=jnp.float32
+        )
+        grad = g_mse * (1.0 - v_cos) - g_cos * v_mse
+        val_ref[0] = v_mse * (1.0 - v_cos)
+        grad_ref[...] = grad
+        new_p = p_cur - lr * grad
+        p_s[...] = new_p  # next SGD step (outer grid dim) sees the update
+        p_out_ref[...] = new_p
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "steps", "eps", "interpret", "bm")
+)
+def eqn6_sgd_update_pallas(
+    p, g, m_proj, lr=0.1, steps=1, eps=_EPS,
+    interpret: bool = False, bm: int = DEFAULT_BM,
+):
+    """Fused Eqn-6 refresh. p (...,n,r), g (...,m,n), m_proj (...,m,r) ->
+    (new_p, last_val, last_grad); grad/val are those of the LAST SGD step
+    (computed at the pre-update P, like the oracle). Broadcasts over leading
+    (layer/expert) stack axes via vmap; g/m_proj may be bf16 (upcast
+    per-tile in VMEM)."""
+    if g.ndim > 2:
+        fn = functools.partial(
+            eqn6_sgd_update_pallas, lr=lr, steps=steps, eps=eps,
+            interpret=interpret, bm=bm,
+        )
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0))
+        return fn(p, g, m_proj)
+
+    m_dim, n_dim = g.shape
+    r = p.shape[-1]
+    bm_eff = min(bm, max(8, m_dim))
+    # Zero padding is exact: padded G rows/cols and M rows/cols contribute 0
+    # to every accumulator, and padded P rows/cols stay 0 through the update
+    # (their gradient is identically 0) — sliced off on exit.
+    g_p = _pad_to_axis(_pad_to_axis(g, bm_eff, 0), 128, 1)
+    mp_p = _pad_to_axis(_pad_to_axis(m_proj, bm_eff, 0), 128, 1)
+    p_p = _pad_to_axis(_pad_to_axis(p, 128, 0), 128, 1)
+    mp_pad, np_pad = g_p.shape
+    r_pad = p_p.shape[1]
+    nm = mp_pad // bm_eff
+    grid = (steps, nm)
+
+    kernel = functools.partial(
+        _eqn6_kernel, lr=lr, nm=nm,
+        m_true=float(m_dim), n_true=float(n_dim), eps=eps,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((np_pad, r_pad), jnp.float32),  # new P
+        jax.ShapeDtypeStruct((1,), jnp.float32),  # last objective value
+        jax.ShapeDtypeStruct((np_pad, r_pad), jnp.float32),  # last grad
+    ]
+    in_specs = [
+        pl.BlockSpec((np_pad, r_pad), lambda s, k: (0, 0)),  # P (resident)
+        pl.BlockSpec((bm_eff, np_pad), lambda s, k: (k, 0)),  # G row-block
+        pl.BlockSpec((bm_eff, r_pad), lambda s, k: (k, 0)),  # M_proj rows
+    ]
+    out_specs = [
+        pl.BlockSpec((np_pad, r_pad), lambda s, k: (0, 0)),
+        pl.BlockSpec((1,), lambda s, k: (0,)),
+        pl.BlockSpec((np_pad, r_pad), lambda s, k: (0, 0)),
+    ]
+    kwargs = dict(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    if _HAS_PLTPU:
+        kwargs["scratch_shapes"] = [
+            pltpu.VMEM((np_pad, r_pad), jnp.float32),  # resident P
+            pltpu.VMEM((r_pad, r_pad), jnp.float32),  # PᵀP
+            pltpu.VMEM((r_pad, r_pad), jnp.float32),  # A
+            pltpu.VMEM((np_pad, r_pad), jnp.float32),  # C
+            pltpu.VMEM((np_pad, r_pad), jnp.float32),  # E
+            pltpu.VMEM((r_pad, r_pad), jnp.float32),  # F
+            pltpu.SMEM((2,), jnp.float32),  # ‖G‖², Σ row-cos
+        ]
+        if not interpret:
+            kwargs["compiler_params"] = _sequential_compiler_params()
+    else:  # pragma: no cover
+        raise RuntimeError("Pallas TPU backend unavailable; use ops ref path")
+
+    p_new, val, grad = pl.pallas_call(kernel, **kwargs)(p_p, g_p, mp_p)
+    return (
+        p_new[:n_dim, :r].astype(p.dtype),
+        val[0],
+        grad[:n_dim, :r],
+    )

@@ -127,6 +127,21 @@ def quantized_adam_update(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("lr", "steps"))
+def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1):
+    """Fused Eqn-6 projection refresh: ``steps`` SGD iterations on the
+    paper's Eqn-6 objective with loss+grad computed in ONE tiled sweep over
+    G per step (see ``eqn6.py``). Accepts bf16 ``g``/``m_proj`` (upcast
+    per-tile in VMEM). Returns the new P only (in ``p``'s dtype)."""
+    if _mode() == "ref":
+        return ref.eqn6_sgd_update(p, g, m_proj, lr=lr, steps=steps)[0]
+    from repro.kernels import eqn6
+
+    return eqn6.eqn6_sgd_update_pallas(
+        p, g, m_proj, lr=lr, steps=steps, interpret=_interpret_flag()
+    )[0]
+
+
 def rmsnorm(x, scale, eps=1e-6):
     if _mode() == "ref":
         return ref.rmsnorm(x, scale, eps)

@@ -29,6 +29,10 @@ state. The unfused schedule (dequant + project + Adam + requant +
 backproject as separate dispatches) reads/writes every intermediate through
 HBM and is kept only as the benchmark baseline (benchmarks/overhead.py).
 
+Like the fp32 fused kernels, ``coap_fused_update_q8_pallas`` accepts bf16 G
+and upcasts per-tile in VMEM — with int8 states AND a bf16 gradient stream
+the whole 8-bit step moves ~mn·2 + 2mr·1 bytes of tensor traffic.
+
 Hardware adaptation note (DESIGN.md §3): Dettmers' dynamic-tree codebook is
 a CUDA-LUT trick; linear absmax maps onto the TPU VPU (mul + round + clip)
 with no gather. Same state size, slightly coarser tails. TPU tiling note:

@@ -225,6 +225,39 @@ def coap_fused_update_q8(
 
 
 # ---------------------------------------------------------------------------
+# Fused Eqn-6 refresh (kernel: eqn6.py)
+# ---------------------------------------------------------------------------
+def eqn6_sgd_update(
+    p: jnp.ndarray,  # (..., n, r) projection
+    g: jnp.ndarray,  # (..., m, n) canonical gradient (fp32 or bf16)
+    m_proj: jnp.ndarray,  # (..., m, r) projected first moment
+    lr: float = 0.1,
+    steps: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused Eqn-6 kernel: ``steps`` SGD iterations on the
+    paper's Eqn-6 objective. The closed-form math lives in
+    ``core/correlation.py`` (single source of truth — lazily imported here
+    because core sits above the kernels layer); this wrapper only re-exposes
+    it in the kernel's signature: returns ``(new_p, last_val, last_grad)``
+    where val/grad belong to the last iteration's pre-update P.
+    """
+    from repro.core import correlation  # lazy: avoids core<->kernels cycle
+
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    mp32 = m_proj.astype(jnp.float32)
+
+    def body(_, carry):
+        p_cur, _, _ = carry
+        val, grad = correlation.loss_and_grad(p_cur, g32, mp32)
+        return (p_cur - lr * grad, val, grad)
+
+    init = (p32, jnp.zeros(g.shape[:-2], jnp.float32), jnp.zeros_like(p32))
+    new_p, val, grad = jax.lax.fori_loop(0, steps, body, init)
+    return new_p.astype(p.dtype), val, grad
+
+
+# ---------------------------------------------------------------------------
 # RMSNorm (kernel: rmsnorm.py) — model-side hot spot for long-context decode
 # ---------------------------------------------------------------------------
 def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:

@@ -10,11 +10,13 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import correlation
 from repro.kernels import ref
 from repro.kernels.coap_update import (
     coap_fused_update_bp_pallas,
     coap_fused_update_pallas,
 )
+from repro.kernels.eqn6 import eqn6_sgd_update_pallas
 from repro.kernels.quant8 import (
     coap_fused_update_q8_pallas,
     dequantize_blockwise_pallas,
@@ -302,6 +304,94 @@ def test_coap_fused_update_q8_underflow_clip_guard():
     assert raw > ref.QUANT_DELTA_CLIP * 100
     # and ΔW stays bounded by clip * ||P||_1 per row
     assert np.isfinite(np.asarray(got[4])).all()
+
+
+# ---------------------------------------------------------------------------
+# eqn6 fused refresh kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(16, 520),
+    n=st.integers(24, 700),
+    r=st.sampled_from([8, 32, 100]),
+    seed=st.integers(0, 100),
+)
+def test_eqn6_kernel_matches_loss_and_grad_oracle(m, n, r, seed):
+    """steps=1: the kernel's val/grad must pin against the closed-form
+    ``correlation.loss_and_grad`` oracle and its P update against
+    ``correlation.sgd_update`` (ragged shapes included)."""
+    r = min(r, n)
+    g = _rand((m, n), seed)
+    p = _rand((n, r), seed + 1) / np.sqrt(r)
+    mp = 0.1 * _rand((m, r), seed + 2)
+    p_new, val, grad = eqn6_sgd_update_pallas(
+        g=g, p=p, m_proj=mp, lr=0.1, steps=1, interpret=True, bm=64
+    )
+    want_val, want_grad = correlation.loss_and_grad(p, g, mp)
+    np.testing.assert_allclose(val, want_val, rtol=1e-4)
+    np.testing.assert_allclose(grad, want_grad, rtol=1e-3, atol=1e-6)
+    want_p = correlation.sgd_update(p, g, mp, lr=0.1, steps=1)
+    np.testing.assert_allclose(p_new, want_p, rtol=1e-4, atol=1e-6)
+
+
+def test_eqn6_kernel_multistep_matches_sgd_update():
+    """Multi-step SGD loops the grid: G is re-streamed per step against the
+    in-VMEM-updated P; must track the oracle's fori_loop."""
+    m, n, r = 300, 260, 32
+    g = _rand((m, n), 0)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    mp = 0.1 * _rand((m, r), 2)
+    for steps in (2, 5):
+        got, _, _ = eqn6_sgd_update_pallas(
+            p, g, mp, lr=0.05, steps=steps, interpret=True, bm=128
+        )
+        want = correlation.sgd_update(p, g, mp, lr=0.05, steps=steps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_eqn6_kernel_bf16_gradient():
+    """bf16 G/M stream straight into the kernel (per-tile VMEM upcast); the
+    result must match the oracle fed the same bf16 inputs (upcasting is
+    value-exact, so tolerance stays fp32-tight)."""
+    m, n, r = 130, 260, 32
+    g = _rand((m, n), 0, jnp.bfloat16)
+    p = _rand((n, r), 1) / np.sqrt(r)
+    mp = (0.1 * _rand((m, r), 2)).astype(jnp.bfloat16)
+    p_new, val, grad = eqn6_sgd_update_pallas(
+        p, g, mp, lr=0.1, steps=1, interpret=True, bm=64
+    )
+    want_val, want_grad = correlation.loss_and_grad(
+        p, g.astype(jnp.float32), mp.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(val, want_val, rtol=1e-4)
+    np.testing.assert_allclose(grad, want_grad, rtol=1e-3, atol=1e-6)
+    want_p = correlation.sgd_update(p, g, mp, lr=0.1, steps=1)
+    np.testing.assert_allclose(p_new, want_p, rtol=1e-4, atol=1e-6)
+
+
+def test_eqn6_kernel_stacked_axes():
+    """Stacked (L, ...) leaves — the shape the bucketed refresh emits."""
+    g = _rand((2, 3, 130, 260), 0)
+    p = _rand((2, 3, 260, 32), 1) / np.sqrt(32)
+    mp = 0.1 * _rand((2, 3, 130, 32), 2)
+    p_new, val, grad = eqn6_sgd_update_pallas(
+        p, g, mp, lr=0.1, steps=1, interpret=True, bm=64
+    )
+    want_val, want_grad = correlation.loss_and_grad(p, g, mp)
+    assert val.shape == (2, 3)
+    np.testing.assert_allclose(val, want_val, rtol=1e-4)
+    np.testing.assert_allclose(grad, want_grad, rtol=1e-3, atol=1e-6)
+
+
+def test_eqn6_ref_oracle_is_sgd_update():
+    """ref.eqn6_sgd_update must be bit-identical to correlation.sgd_update
+    (it IS the same fori_loop, re-exposed in the kernel signature)."""
+    g = _rand((64, 48), 7)
+    p = _rand((48, 8), 8) / np.sqrt(8)
+    mp = 0.1 * _rand((64, 8), 9)
+    got, _val, _grad = ref.eqn6_sgd_update(p, g, mp, lr=0.1, steps=3)
+    want = correlation.sgd_update(p, g, mp, lr=0.1, steps=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

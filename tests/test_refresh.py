@@ -1,0 +1,303 @@
+"""Staggered projection-refresh schedule + fused refresh path integration.
+
+Covers the refresh-overhaul contracts:
+  * cadence parity — under stagger every leaf still refreshes exactly every
+    ``T_u`` steps and recalibrates every ``λ·T_u`` steps, just phase-shifted;
+  * Eqn-7 initialization at t=0 runs for every leaf regardless of phase;
+  * phases are deterministic (pure function of the tree) and identical
+    between bucketed and per-leaf execution;
+  * ``stagger=False`` restores the synchronized schedule;
+  * bf16 gradients stream through the fused paths without an fp32 G
+    materialization changing numerics;
+  * benchmark gates: staggered worst-step refresh cost ≥4× below
+    synchronized on the LLaMA-1B bucket structure, and the fused Eqn-6
+    kernel streams ≥2× fewer G bytes than the unfused einsum chain.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coap_adam import (
+    ProjLeaf,
+    ProjectedAdamConfig,
+    _phase_groups,
+    scale_by_projected_adam,
+    stagger_phases,
+)
+from repro.core.projector import ProjectionRules
+
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("rules", ProjectionRules(rank=16, min_dim=8))
+    return ProjectedAdamConfig(**kw)
+
+
+def _multibucket_params():
+    """Three congruence buckets: 4x(96,64) + 2x(128,48) + 1x(80,72)."""
+    p = {f"a{i}": {"w": jnp.zeros((96, 64))} for i in range(4)}
+    p.update({f"b{i}": {"w": jnp.zeros((128, 48))} for i in range(2)})
+    p["c0"] = {"w": jnp.zeros((80, 72))}
+    return p
+
+
+def _grads(params, seed=0):
+    key = jax.random.key(seed)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            jax.random.normal(jax.random.fold_in(key, i), p.shape)
+            for i, p in enumerate(flat)
+        ],
+    )
+
+
+def _proj_ps(state):
+    """Ordered list of every projected leaf's P."""
+    return [
+        x.p
+        for x in jax.tree_util.tree_leaves(
+            state.leaves, is_leaf=lambda x: isinstance(x, ProjLeaf)
+        )
+        if isinstance(x, ProjLeaf)
+    ]
+
+
+def _change_steps(tx, params, n_steps, seed=1):
+    """Runs n_steps and returns, per projected leaf, the set of counts at
+    which its P changed."""
+    state = tx.init(params)
+    step = jax.jit(lambda g, s: tx.update(g, s, None))
+    prev = _proj_ps(state)
+    changed = [set() for _ in prev]
+    for count in range(n_steps):
+        _, state = step(_grads(params, seed=seed + count), state)
+        now = _proj_ps(state)
+        for i, (a, b) in enumerate(zip(prev, now)):
+            if bool(jnp.max(jnp.abs(a - b)) > 1e-7):
+                changed[i].add(count)
+        prev = now
+    return changed, state
+
+
+# ---------------------------------------------------------------------------
+# phase allocator properties
+# ---------------------------------------------------------------------------
+def test_stagger_phases_deterministic_and_bounded():
+    sizes = [96, 48, 24]
+    a = stagger_phases(sizes, 40, 8)
+    b = stagger_phases(sizes, 40, 8)
+    assert a == b  # pure function of the tree — identical across restarts
+    for phases, size in zip(a, sizes):
+        assert len(phases) == size
+        assert all(0 <= ph < 40 for ph in phases)
+        assert list(phases) == sorted(phases)  # monotone -> contiguous runs
+        assert len(_phase_groups(phases)) <= 8
+    # buckets don't all share one phase (the schedule actually staggers)
+    assert len({ph for phases in a for ph in phases}) > 1
+
+
+def test_stagger_phases_degenerate_cases():
+    # T_u=1 (flora): everything phase 0 — schedule unchanged
+    assert stagger_phases([5, 3], 1, 8) == [(0,) * 5, (0,) * 3]
+    # single singleton bucket: phase 0 (matches the unstaggered schedule)
+    assert stagger_phases([1], 200, 8) == [(0,)]
+
+
+# ---------------------------------------------------------------------------
+# schedule cadence
+# ---------------------------------------------------------------------------
+def test_staggered_cadence_every_leaf_period_t_u():
+    """Every leaf refreshes at count 0 (Eqn-7 init) and then exactly when
+    (count + phase) % T_u == 0 — period T_u, phase per bucket group."""
+    t_u = 4
+    params = _multibucket_params()
+    tx = scale_by_projected_adam(_cfg(t_update=t_u, lam=2, stagger=True))
+    n = 2 * 2 * t_u + 1
+    changed, _ = _change_steps(tx, params, n)
+    phase_lists = stagger_phases([4, 2, 1], t_u, 8)
+    flat_phases = [ph for phases in phase_lists for ph in phases]
+    assert len(changed) == len(flat_phases)
+    for leaf_changed, ph in zip(changed, flat_phases):
+        want = {
+            c for c in range(n) if c == 0 or (c + ph) % t_u == 0
+        }
+        assert leaf_changed == want, (ph, leaf_changed, want)
+    # staggering engaged: not all leaves share one refresh schedule
+    assert len({frozenset(c) for c in changed}) > 1
+
+
+def test_staggered_recalibration_cadence():
+    """With eqn6_lr=0 the Eqn-6 refresh is a no-op, so P changes ONLY at
+    Eqn-7 recalibration steps: count 0 and (count + phase) % (λ·T_u) == 0."""
+    t_u, lam = 3, 2
+    params = _multibucket_params()
+    tx = scale_by_projected_adam(
+        _cfg(t_update=t_u, lam=lam, stagger=True, eqn6_lr=0.0)
+    )
+    n = 2 * lam * t_u + 1
+    changed, _ = _change_steps(tx, params, n)
+    phase_lists = stagger_phases([4, 2, 1], t_u, 8)
+    flat_phases = [ph for phases in phase_lists for ph in phases]
+    for leaf_changed, ph in zip(changed, flat_phases):
+        want = {
+            c for c in range(n) if c == 0 or (c + ph) % (lam * t_u) == 0
+        }
+        assert leaf_changed == want, (ph, leaf_changed, want)
+
+
+def test_eqn7_init_at_t0_for_all_phases():
+    """At count 0 every projected leaf must get the Eqn-7 initialization:
+    P's columns come out of the low-cost SVD orthonormal, nonzero-phase
+    leaves included."""
+    params = _multibucket_params()
+    tx = scale_by_projected_adam(_cfg(t_update=4, lam=2, stagger=True))
+    state = tx.init(params)
+    _, state = jax.jit(lambda g, s: tx.update(g, s, None))(
+        _grads(params), state
+    )
+    for p in _proj_ps(state):
+        ptp = np.asarray(jnp.einsum("nr,nk->rk", p, p))
+        np.testing.assert_allclose(ptp, np.eye(p.shape[-1]), atol=1e-4)
+
+
+def test_stagger_false_is_synchronized():
+    """stagger=False: every projected leaf refreshes at the same steps
+    (count % T_u == 0), reproducing the paper-faithful schedule."""
+    t_u = 3
+    params = _multibucket_params()
+    tx = scale_by_projected_adam(_cfg(t_update=t_u, lam=2, stagger=False))
+    n = 2 * t_u + 1
+    changed, _ = _change_steps(tx, params, n)
+    want = {c for c in range(n) if c % t_u == 0}
+    for leaf_changed in changed:
+        assert leaf_changed == want, (leaf_changed, want)
+
+
+def test_schedule_deterministic_across_rebuilds():
+    """Two independently-built optimizers must produce bit-identical
+    trajectories (phases are structural, not runtime-random)."""
+    params = _multibucket_params()
+    outs = []
+    for _ in range(2):
+        tx = scale_by_projected_adam(_cfg(t_update=3, lam=2, stagger=True))
+        state = tx.init(params)
+        step = jax.jit(lambda g, s: tx.update(g, s, None))
+        for i in range(5):
+            _, state = step(_grads(params, seed=10 + i), state)
+        outs.append(state.leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bucketed vs per-leaf parity under stagger
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("strategy", ["coap", "galore", "flora"])
+def test_staggered_bucketed_matches_per_leaf(quantize, strategy):
+    """Per-leaf groups inherit the exact phase their leaf has inside its
+    bucket, so bucketed and per-leaf execution refresh at the same steps and
+    agree bit-for-bit on int8 states (float to stacking ulp noise)."""
+    params = _multibucket_params()
+    g = _grads(params, seed=3)
+    outs = {}
+    for bucketed in (True, False):
+        tx = scale_by_projected_adam(
+            _cfg(strategy=strategy, quantize=quantize, t_update=3,
+                 stagger=True, bucket_leaves=bucketed)
+        )
+        state = tx.init(params)
+        step = jax.jit(lambda gg, s: tx.update(gg, s, None))
+        for _ in range(4):
+            upd, state = step(g, state)
+        outs[bucketed] = (upd, state.leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[True]),
+                    jax.tree_util.tree_leaves(outs[False])):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.int8:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# bf16 gradient streaming
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quantize", [False, True])
+def test_bf16_gradients_stream_without_numeric_drift(quantize):
+    """bf16 grads feed the fused kernels directly (per-tile upcast). The
+    optimizer state after a step must be BIT-IDENTICAL to feeding the same
+    values pre-cast to fp32 (upcasting bf16 is exact), and the returned
+    update must be the fp32 result rounded once to bf16."""
+    params = _multibucket_params()
+    g32 = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32),
+        jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.bfloat16), _grads(params, seed=5)
+        ),
+    )
+    g16 = jax.tree_util.tree_map(lambda x: x.astype(jnp.bfloat16), g32)
+    out = {}
+    for name, g in [("fp32", g32), ("bf16", g16)]:
+        tx = scale_by_projected_adam(
+            _cfg(t_update=2, lam=2, quantize=quantize)
+        )
+        state = tx.init(params)
+        step = jax.jit(lambda gg, s: tx.update(gg, s, None))
+        for _ in range(3):
+            upd, state = step(g, state)
+        out[name] = (upd, state.leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(out["fp32"][1]),
+                    jax.tree_util.tree_leaves(out["bf16"][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(out["fp32"][0]),
+                    jax.tree_util.tree_leaves(out["bf16"][0])):
+        # update dtype follows the gradient dtype: the bf16 run's update is
+        # the fp32 run's update rounded once to bf16
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(a).astype(jnp.bfloat16)
+                       .astype(jnp.float32)),
+            np.asarray(jnp.asarray(b).astype(jnp.float32)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# benchmark gates (acceptance criteria)
+# ---------------------------------------------------------------------------
+def test_stagger_worst_step_gate():
+    """Staggered schedule must cut the worst-step refresh cost >=4x vs the
+    synchronized schedule on the multi-bucket LLaMA-1B tree (bytes-based
+    accounting; the benchmark also reports measured wall time)."""
+    from benchmarks.overhead import refresh_stagger_report
+
+    rep = refresh_stagger_report(measure=False)
+    assert rep["worst_step_bytes_ratio"] >= 4.0, rep["worst_step_bytes_ratio"]
+    # stagger redistributes, never adds, refresh work
+    assert (rep["synchronized"]["total_bytes_per_period"]
+            == rep["staggered"]["total_bytes_per_period"])
+
+
+def test_eqn6_fused_bytes_gate():
+    """Fused Eqn-6 must stream >=2x fewer G bytes than the unfused einsum
+    chain (and >=2x fewer total bytes under the BENCH_overhead-style
+    per-dispatch cost_analysis accounting)."""
+    from benchmarks.overhead import LLAMA1B_MATS, eqn6_fused_vs_unfused
+
+    rows = eqn6_fused_vs_unfused(LLAMA1B_MATS[:1], rank=512)
+    for label, row in rows.items():
+        assert row["g_stream_ratio"] >= 2.0, (label, row["g_stream_ratio"])
+        assert row["ratio"] >= 2.0, (label, row["ratio"])
+        assert row["ratio_conservative"] >= 2.0, (
+            label, row["ratio_conservative"]
+        )
+        assert row["launches_fused"] == 1
