@@ -1,5 +1,5 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke bench-overhead bench-refresh
+.PHONY: test smoke bench-overhead bench-refresh bench-state
 
 test:
 	./scripts/ci.sh
@@ -16,3 +16,9 @@ bench-overhead:
 # refresh cost + fused vs unfused Eqn-6 bytes on LLaMA-1B shapes).
 bench-refresh:
 	PYTHONPATH=src:. python benchmarks/run.py --only refresh
+
+# Regenerates BENCH_state.json (per-step state bytes moved: per-leaf
+# stack/scatter vs pre-stacked bucket storage, LLaMA-1B bucket structure,
+# plus the measured whole-step cost_analysis comparison).
+bench-state:
+	PYTHONPATH=src:. python benchmarks/run.py --only state

@@ -16,8 +16,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="trim the largest shapes / fewest steps")
     ap.add_argument("--only", default="",
-                    help="comma list: memory,svd,overhead,refresh,fig3,"
-                         "table7,fig4,t5q")
+                    help="comma list: memory,svd,overhead,refresh,state,"
+                         "fig3,table7,fig4,t5q")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -38,6 +38,8 @@ def main() -> None:
         overhead.run(csv, fast=args.fast)
     if want("refresh"):
         overhead.run_refresh(csv, fast=args.fast)
+    if want("state"):
+        overhead.run_state(csv, fast=args.fast)
     steps = 80 if args.fast else 200
     if want("fig3"):
         convergence.fig3_ceu(csv, steps=steps)

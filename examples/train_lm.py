@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--optimizer", default="coap-adamw")
     ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--stacked-state", action="store_true",
+                    help="store optimizer state pre-stacked per bucket "
+                         "(core/stacked_state.py; checkpoints stay "
+                         "restorable into either layout)")
     ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
     args = ap.parse_args()
 
@@ -47,6 +51,7 @@ def main():
         name=args.optimizer,
         learning_rate=warmup_cosine_schedule(8e-3, 20, args.steps),
         rank=args.rank, t_update=40, lam=5, min_dim=64, grad_clip=None,
+        stacked_state=args.stacked_state,
     ))
     loop = TrainLoop(
         model, tx,

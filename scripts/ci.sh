@@ -15,15 +15,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 smoke() {
   echo "== interpret-mode kernel smoke =="
   # test_kernels.py covers every kernel body (incl. the fused Eqn-6 refresh
-  # kernel pinned against the correlation.loss_and_grad oracle); the
+  # kernel — normalize-aware first-grid-phase variant and VMEM guard
+  # included — pinned against the correlation.loss_and_grad oracle); the
   # refresh/bucketing picks drive the staggered schedule, the fused Eqn-6
-  # route and the quantized dense path end-to-end through pallas interpret.
+  # route and the quantized dense path end-to-end through pallas interpret;
+  # the stacked-state picks run the pre-stacked bucket storage (A/B parity
+  # vs per-leaf, int8 included, plus a cross-mode checkpoint restore)
+  # through the same interpret-mode kernels.
   REPRO_PALLAS=interpret python -m pytest -q \
     tests/test_kernels.py \
     tests/test_bucketing.py::test_mixed_tree_full_optimizer_runs \
     tests/test_bucketing.py::test_q8_state_holds_no_fp32_moments \
     tests/test_refresh.py::test_staggered_cadence_every_leaf_period_t_u \
-    "tests/test_refresh.py::test_bf16_gradients_stream_without_numeric_drift"
+    "tests/test_refresh.py::test_bf16_gradients_stream_without_numeric_drift" \
+    "tests/test_stacked_state.py::test_stacked_matches_per_leaf" \
+    tests/test_stacked_state.py::test_stacked_bf16_gradient_streaming_parity \
+    "tests/test_stacked_state.py::test_checkpoint_cross_mode_restore[True-float32]"
 }
 
 if [[ "${1:-}" == "smoke" ]]; then

@@ -3,6 +3,12 @@
 The paper's headline numbers (Tables 1–6 'Optimizer Mem.') are byte counts
 of the optimizer state; since our states are explicit pytrees we reproduce
 those columns by *arithmetic over the actual state*, not estimation.
+
+Stacked-state aware: a ``StackedLeaves`` node (core/stacked_state.py) is
+walked through its buckets and tail, so its stacked leaf-states land in the
+same categories as their per-leaf equivalents — stacking B equal-shape
+arrays is byte-neutral, and ``tests/test_stacked_state.py`` pins the byte
+tables of the two layouts equal.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.coap_adam import ConvLeaf, DenseLeaf, ProjLeaf
 from repro.core.coap_adafactor import DenseFactorLeaf, ProjFactorLeaf
+from repro.core.stacked_state import StackedLeaves
 
 
 @dataclasses.dataclass
@@ -77,7 +84,11 @@ def optimizer_state_bytes(opt_state: Any) -> MemoryReport:
         if visit(node):
             return
         children = None
-        if isinstance(node, (list, tuple)):
+        if isinstance(node, StackedLeaves):
+            # Stacked buckets hold the same typed leaf-states with a (B,)
+            # axis; categorization (and totals) match per-leaf storage.
+            children = list(node.buckets) + list(node.tail)
+        elif isinstance(node, (list, tuple)):
             children = node
         elif isinstance(node, dict):
             children = node.values()

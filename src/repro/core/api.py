@@ -40,6 +40,7 @@ class OptimizerConfig:
     moment_transplant: bool = False
     stagger: bool = True  # phase-staggered refresh schedule (coap_adam doc)
     stagger_groups: int = 8
+    stacked_state: bool = False  # pre-stacked bucket state (coap_adam doc)
     seed: int = 0
     state_dtype: Any = jnp.float32
 
@@ -110,6 +111,7 @@ def make_optimizer(cfg: OptimizerConfig) -> optim.GradientTransformation:
             moment_transplant=cfg.moment_transplant,
             stagger=cfg.stagger,
             stagger_groups=cfg.stagger_groups,
+            stacked_state=cfg.stacked_state,
         )
         if strategy == "galore":
             kw["update_scale"] = (
@@ -140,6 +142,7 @@ def make_optimizer(cfg: OptimizerConfig) -> optim.GradientTransformation:
                 eqn6_steps=cfg.eqn6_steps,
                 seed=cfg.seed,
                 update_scale=0.25 if strategy == "galore" else cfg.update_scale,
+                stacked_state=cfg.stacked_state,
             )
         )
     else:

@@ -22,6 +22,15 @@ benchmarks; the literal one diverges for any η < 1, corroborating the typo
 
 Because learning rate is *inside* ΔW here, this transformation is terminal:
 chain it with ``scale(-1)`` only (no extra lr scaling).
+
+``stacked_state=True`` stores the leaf states pre-stacked per congruence
+bucket (``core/stacked_state.py`` — the same codec the Adam variant,
+checkpointing, accounting and compression use). The adafactor update still
+COMPUTES per leaf through ``leaf_view`` slices (bit-identical to the
+per-leaf mode by construction); porting the bucket+phase hot-path machinery
+from ``coap_adam.update_fn`` is the existing "staggered adafactor refresh"
+ROADMAP item. Every non-projected leaf (conv included) takes the dense
+Adafactor path, so the layout classifies only project/dense — no tail.
 """
 from __future__ import annotations
 
@@ -33,6 +42,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import correlation, projector, recalibrate
+from repro.core import stacked_state
 from repro.core.coap_adam import ProjectedAdamConfig, _refresh_p, _maybe_transplant
 from repro.core.projector import (
     KIND_DENSE,
@@ -68,6 +78,19 @@ class ProjectedAdafactorConfig(ProjectedAdamConfig):
     gamma: float = 0.8  # β₂ decay-rate exponent
     learning_rate: float = 1e-4  # η lives inside ΔW (Algorithm 2)
     interpretation: str = "consistent"  # 'consistent' | 'literal'
+
+
+def _af_classify(spec) -> str:
+    """Adafactor has no conv path: everything non-projected is dense."""
+    if spec.kind == KIND_PROJECT:
+        return stacked_state.BUCKET_PROJECT
+    return stacked_state.BUCKET_DENSE
+
+
+def _af_layout(cfg, flat) -> stacked_state.StackedLayout:
+    return stacked_state.layout_for_flat(
+        cfg.rules.spec_for, flat, classify=_af_classify
+    )
 
 
 def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTransformation:
@@ -108,6 +131,11 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
                             nu=jnp.zeros(leaf.shape, jnp.float32),
                         )
                     )
+        if cfg.stacked_state:
+            return ProjectedAdafactorState(
+                count=jnp.zeros([], jnp.int32),
+                leaves=stacked_state.encode(_af_layout(cfg, flat), leaves),
+            )
         return ProjectedAdafactorState(
             count=jnp.zeros([], jnp.int32),
             leaves=jax.tree_util.tree_unflatten(treedef, leaves),
@@ -170,7 +198,22 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
         t = count + 1
         b2 = 1.0 - (t.astype(jnp.float32)) ** (-cfg.gamma)
         flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
-        flat_s = treedef.flatten_up_to(state.leaves)
+        if cfg.stacked_state:
+            layout = _af_layout(cfg, flat_u)
+            prev = state.leaves
+            if (
+                not isinstance(prev, stacked_state.StackedLeaves)
+                or prev.layout.signature() != layout.signature()
+            ):
+                raise ValueError(
+                    "stacked adafactor state does not match the gradient "
+                    "tree (rules / model structure changed since init?)"
+                )
+            flat_s = [
+                stacked_state.leaf_view(prev, i) for i in range(len(flat_u))
+            ]
+        else:
+            flat_s = treedef.flatten_up_to(state.leaves)
         new_updates, new_leaves = [], []
         for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
             spec = cfg.rules.spec_for(path_str(kp), g.shape)
@@ -180,12 +223,13 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
                 u, nl = _update_dense(leaf, g, t, b2)
             new_updates.append(u)
             new_leaves.append(nl)
+        if cfg.stacked_state:
+            leaves_out = stacked_state.encode(prev.layout, new_leaves)
+        else:
+            leaves_out = jax.tree_util.tree_unflatten(treedef, new_leaves)
         return (
             jax.tree_util.tree_unflatten(treedef, new_updates),
-            ProjectedAdafactorState(
-                count=count + 1,
-                leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
-            ),
+            ProjectedAdafactorState(count=count + 1, leaves=leaves_out),
         )
 
     return GradientTransformation(init_fn, update_fn)
@@ -204,6 +248,7 @@ def coap_adafactor(
     eqn6_steps: int = 1,
     seed: int = 0,
     update_scale: float = 1.0,
+    stacked_state: bool = False,
 ) -> GradientTransformation:
     """Adafactor+COAP per Algorithm 2 (η inside; terminal sign flip only)."""
     cfg = ProjectedAdafactorConfig(
@@ -218,5 +263,6 @@ def coap_adafactor(
         seed=seed,
         learning_rate=learning_rate,
         update_scale=update_scale,
+        stacked_state=stacked_state,
     )
     return chain(scale_by_projected_adafactor(cfg), scale(-1.0))

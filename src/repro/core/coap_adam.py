@@ -63,13 +63,25 @@ Flora's per-step resample (T_u=1) degenerates to a single phase-0 group and
 is unchanged; with T_u>1 its resamples stagger for free. Conv (Tucker-2)
 leaves keep the synchronized per-leaf schedule (ROADMAP open item).
 
-Known trade-off: the stack/scatter round-trip at the bucket boundary is
-real copy traffic (XLA fuses some of it into kernel operands, but not the
-int8 state round-trip). It buys one launch + one trace per bucket instead
-of per leaf; storing congruent leaves pre-stacked in the optimizer state
-would remove the copies entirely but breaks the state-tree/param-tree
-congruence that checkpointing, accounting and the cross-pod compression
-path rely on — revisit if dispatch count stops being the bottleneck.
+PRE-STACKED STATE (``stacked_state=True``): with per-leaf state storage the
+stack/scatter round-trip at the bucket boundary is real copy traffic every
+step (XLA fuses some fp32 copies into kernel operands, but never the int8
+state round-trip). Setting ``stacked_state=True`` stores the optimizer
+state pre-stacked along the bucket axis (``core/stacked_state.py``): the
+fused kernels and the staggered ``lax.switch`` refresh consume bucket
+slices directly, and only the gradient stack and update scatter — pure
+bf16/fp32 copies at the kernel boundary — remain on the hot path
+(``benchmarks/overhead.run_state`` quantifies the removed traffic;
+``BENCH_state.json``). State-tree/param-tree congruence is recovered on
+demand through the stacked-state codec (``encode``/``decode``/
+``leaf_view``/``manifest_entries``), which checkpointing, accounting and
+the cross-pod compression path all understand — a checkpoint written in
+either mode restores into the other. ``stacked_state=False`` (the default)
+keeps today's per-leaf layout bit-for-bit, and the two modes produce
+bit-identical updates and states — fp32, bf16 streaming, int8 codes and
+flora RNG included (``tests/test_stacked_state.py``). Conv (Tucker-2)
+leaves stay per-leaf in the stacked layout's residual tail (ROADMAP open
+item: conv bucketing).
 """
 from __future__ import annotations
 
@@ -82,6 +94,7 @@ from jax import lax
 
 from repro.core import conv as conv_mod
 from repro.core import correlation, projector, recalibrate
+from repro.core import stacked_state
 from repro.core.projector import (
     KIND_CONV,
     KIND_DENSE,
@@ -161,10 +174,16 @@ class ProjectedAdamConfig:
     bucket_leaves: bool = True  # batch congruent leaves into stacked launches
     stagger: bool = True  # phase-staggered refresh schedule (module docstring)
     stagger_groups: int = 8  # max phase groups per congruent bucket
+    stacked_state: bool = False  # store state pre-stacked (module docstring)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES}")
+        if self.stacked_state and not self.bucket_leaves:
+            raise ValueError(
+                "stacked_state=True stores the state along the bucket axis "
+                "and requires bucket_leaves=True"
+            )
 
 
 def _zeros_scales(shape_numel: int, block: int):
@@ -212,6 +231,15 @@ def _init_stored_proj(shape, cfg: ProjectedAdamConfig):
 
 def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
     return cfg.rules.spec_for(path, shape)
+
+
+def _layout_of(cfg: ProjectedAdamConfig, flat) -> stacked_state.StackedLayout:
+    """THE bucket assignment for this transform: projected/dense leaves
+    bucket by congruence signature, conv (Tucker-2) leaves go to the
+    per-leaf tail (the default classify). Shared with the stacked-state
+    codec so checkpoint / accounting / compression consumers see the
+    identical grouping."""
+    return stacked_state.layout_for_flat(cfg.rules.spec_for, flat)
 
 
 def stagger_phases(
@@ -519,6 +547,13 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 m0, ms0 = _init_stored(leaf.shape, cfg)
                 v0, vs0 = _init_stored(leaf.shape, cfg)
                 leaves.append(DenseLeaf(mu=m0, nu=v0, mu_scale=ms0, nu_scale=vs0))
+        if cfg.stacked_state:
+            # Same per-leaf states (identical RNG keys per flat index),
+            # stored pre-stacked: encode is a bit-exact stack per field.
+            return ProjectedAdamState(
+                count=jnp.zeros([], jnp.int32),
+                leaves=stacked_state.encode(_layout_of(cfg, flat), leaves),
+            )
         return ProjectedAdamState(
             count=jnp.zeros([], jnp.int32),
             leaves=jax.tree_util.tree_unflatten(treedef, leaves),
@@ -680,92 +715,108 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         count = state.count  # 0-based: first call refreshes/initializes P
         t = count + 1  # 1-based for bias correction (Algorithm 1)
         flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
-        flat_s = treedef.flatten_up_to(state.leaves)
         n_leaves = len(flat_u)
         new_updates = [None] * n_leaves
-        new_leaves = [None] * n_leaves
 
         # Bucket congruent leaves: one (vmapped) kernel launch per
         # (shape, spec, dtype) group instead of one per leaf. Conv leaves
-        # keep the per-leaf Tucker-2 path (Algorithm 3).
-        specs = []
-        proj_buckets, dense_buckets = {}, {}
-        for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
-            spec = _leaf_spec(cfg, path_str(kp), g.shape)
-            specs.append(spec)
-            if spec.kind == KIND_CONV:
-                u, nl = conv_mod.update_conv_leaf(
-                    cfg, leaf, g, spec, count, t, idx
+        # keep the per-leaf Tucker-2 path (Algorithm 3) in the layout's
+        # residual tail. The layout is THE bucket assignment shared with
+        # the stacked-state codec (checkpoint/accounting/compression).
+        layout = _layout_of(cfg, flat_u)
+
+        if cfg.stacked_state:
+            prev = state.leaves
+            if (
+                not isinstance(prev, stacked_state.StackedLeaves)
+                or prev.layout.signature() != layout.signature()
+            ):
+                raise ValueError(
+                    "stacked optimizer state does not match the gradient "
+                    "tree (optimizer rules / model structure changed since "
+                    "init, or a per-leaf state was passed with "
+                    "stacked_state=True)"
                 )
-                new_updates[idx], new_leaves[idx] = u, nl
-            elif spec.kind == KIND_PROJECT:
-                key = (spec, tuple(g.shape), jnp.dtype(g.dtype).name)
-                proj_buckets.setdefault(key, []).append(idx)
-            else:
-                key = (tuple(g.shape), jnp.dtype(g.dtype).name)
-                dense_buckets.setdefault(key, []).append(idx)
+            flat_s = None
+        else:
+            prev = None
+            flat_s = treedef.flatten_up_to(state.leaves)
 
-        def groups(buckets):
-            if cfg.bucket_leaves:
-                return list(buckets.values())
-            return [[i] for idxs in buckets.values() for i in idxs]
-
-        def stack_states(idxs):
-            return jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *[flat_s[i] for i in idxs]
-            )
-
-        def scatter(idxs, u_stack, nl_stack):
-            for b, i in enumerate(idxs):
-                new_updates[i] = u_stack[b]
-                new_leaves[i] = jax.tree_util.tree_map(
-                    lambda x: x[b], nl_stack
-                )
-
-        # Per-leaf refresh phases (staggered schedule): allocated per bucket
-        # in tree order, identically for bucketed and per-leaf execution.
+        # Per-leaf refresh phases (staggered schedule): allocated per
+        # projected bucket in tree order, identically in every mode.
         if cfg.stagger and cfg.t_update > 1:
             phase_lists = stagger_phases(
-                [len(idxs) for idxs in proj_buckets.values()],
-                cfg.t_update, cfg.stagger_groups,
+                layout.proj_bucket_sizes(), cfg.t_update, cfg.stagger_groups
             )
         else:
             phase_lists = [
-                (0,) * len(idxs) for idxs in proj_buckets.values()
+                (0,) * sz for sz in layout.proj_bucket_sizes()
             ]
 
-        def proj_groups():
-            out = []
-            for idxs, phases in zip(proj_buckets.values(), phase_lists):
-                if cfg.bucket_leaves:
-                    out.append((idxs, phases))
-                else:
-                    out.extend(
-                        ([i], (ph,)) for i, ph in zip(idxs, phases)
-                    )
-            return out
+        new_buckets = [None] * len(layout.buckets)
+        new_tail = [None] * len(layout.tail)
+        new_flat = [None] * n_leaves  # per-leaf mode only
 
-        for idxs, phases in proj_groups():
-            g_stack = jnp.stack([flat_u[i][1] for i in idxs])
-            u_stack, nl_stack = _update_proj_bucket(
-                stack_states(idxs), g_stack, specs[idxs[0]], count, t,
-                jnp.asarray(idxs, jnp.int32), phases,
+        for j, tinfo in enumerate(layout.tail):
+            leaf = prev.tail[j] if cfg.stacked_state else flat_s[tinfo.index]
+            u, nl = conv_mod.update_conv_leaf(
+                cfg, leaf, flat_u[tinfo.index][1], tinfo.spec, count, t,
+                tinfo.index,
             )
-            scatter(idxs, u_stack, nl_stack)
+            new_updates[tinfo.index] = u
+            new_tail[j] = nl
+            new_flat[tinfo.index] = nl
 
-        for idxs in groups(dense_buckets):
-            g_stack = jnp.stack([flat_u[i][1] for i in idxs])
-            u_stack, nl_stack = jax.vmap(
-                lambda lf, gg: _update_dense_leaf(lf, gg, count, t)
-            )(stack_states(idxs), g_stack)
-            scatter(idxs, u_stack, nl_stack)
+        proj_i = 0
+        for bi, info in enumerate(layout.buckets):
+            is_proj = info.kind == stacked_state.BUCKET_PROJECT
+            phases = phase_lists[proj_i] if is_proj else None
+            if is_proj:
+                proj_i += 1
+            if cfg.bucket_leaves:
+                slot_groups = [tuple(range(len(info.indices)))]
+            else:  # per-leaf A/B mode (stacked_state forbids this)
+                slot_groups = [(k,) for k in range(len(info.indices))]
+            for slots in slot_groups:
+                idxs = [info.indices[k] for k in slots]
+                g_stack = jnp.stack([flat_u[i][1] for i in idxs])
+                if cfg.stacked_state:
+                    # The hot-path win: the bucket state is ALREADY stacked
+                    # — no stack copy in, no scatter copy out.
+                    leaf_stack = prev.buckets[bi]
+                else:
+                    leaf_stack = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *[flat_s[i] for i in idxs],
+                    )
+                if is_proj:
+                    u_stack, nl_stack = _update_proj_bucket(
+                        leaf_stack, g_stack, info.spec, count, t,
+                        jnp.asarray(idxs, jnp.int32),
+                        tuple(phases[k] for k in slots),
+                    )
+                else:
+                    u_stack, nl_stack = jax.vmap(
+                        lambda lf, gg: _update_dense_leaf(lf, gg, count, t)
+                    )(leaf_stack, g_stack)
+                for b, i in enumerate(idxs):
+                    new_updates[i] = u_stack[b]
+                    if not cfg.stacked_state:
+                        new_flat[i] = jax.tree_util.tree_map(
+                            lambda x: x[b], nl_stack
+                        )
+                if cfg.stacked_state:
+                    new_buckets[bi] = nl_stack
 
+        if cfg.stacked_state:
+            new_leaves = stacked_state.StackedLeaves(
+                new_buckets, new_tail, prev.layout
+            )
+        else:
+            new_leaves = jax.tree_util.tree_unflatten(treedef, new_flat)
         return (
             jax.tree_util.tree_unflatten(treedef, new_updates),
-            ProjectedAdamState(
-                count=count + 1,
-                leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
-            ),
+            ProjectedAdamState(count=count + 1, leaves=new_leaves),
         )
 
     return GradientTransformation(init_fn, update_fn)
@@ -794,6 +845,7 @@ def _projected_adamw(
     moment_transplant=False,
     stagger=True,
     stagger_groups=8,
+    stacked_state=False,
     mask=None,
 ) -> GradientTransformation:
     cfg = ProjectedAdamConfig(
@@ -813,6 +865,7 @@ def _projected_adamw(
         moment_transplant=moment_transplant,
         stagger=stagger,
         stagger_groups=stagger_groups,
+        stacked_state=stacked_state,
     )
     txs = [scale_by_projected_adam(cfg)]
     if weight_decay:

@@ -134,12 +134,15 @@ def sgd_update(
     (``kernels/eqn6.py``: one G sweep per step instead of ~6 separate
     einsums; bf16 G streams without an fp32 materialization). Semantics are
     identical; the jnp path below is the oracle the kernel is pinned
-    against. ``normalize`` needs a ‖G‖ pre-pass and keeps the jnp path.
+    against. ``normalize`` fuses too: its ‖G‖ pre-pass runs as a first grid
+    phase of the same kernel (one extra G stream per refresh).
     """
-    if use_fused and not normalize:
+    if use_fused:
         from repro.kernels import ops as kops  # lazy: kernels layer is below
 
-        return kops.eqn6_sgd_update(p, g, m_proj, lr=lr, steps=steps)
+        return kops.eqn6_sgd_update(
+            p, g, m_proj, lr=lr, steps=steps, normalize=normalize
+        )
     dtype = p.dtype
     p = p.astype(jnp.float32)
     g = g.astype(jnp.float32)

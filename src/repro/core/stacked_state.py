@@ -1,0 +1,377 @@
+"""Pre-stacked optimizer-state subsystem: bucket storage + portable codec.
+
+WHY.  ``scale_by_projected_adam`` batches congruent leaves into one fused
+launch per ``(shape, spec, dtype)`` bucket, but with per-leaf state storage
+every step pays a stack/scatter round-trip at the bucket boundary — real HBM
+copy traffic on the moment states (XLA fuses some fp32 copies into kernel
+operands, but never the int8 code round-trip).  Storing the states
+PRE-STACKED along the bucket axis removes those copies entirely: the fused
+kernels read and write bucket arrays in place, and only the (cheap, fusable)
+gradient stack and update scatter remain on the hot path.
+
+LAYOUT.  A stacked optimizer state is a :class:`StackedLeaves` pytree node:
+
+  * ``buckets`` — one stacked leaf-state (``ProjLeaf``/``DenseLeaf``/…,
+    every field carrying a leading ``(B,)`` bucket axis) per congruence
+    bucket, projected buckets first, then dense buckets, each in tree
+    (insertion) order;
+  * ``tail`` — a residual tuple of PER-LEAF states for leaves that do not
+    bucket (conv/Tucker-2 leaves keep the per-leaf Algorithm-3 path);
+  * ``layout`` — static aux data (:class:`StackedLayout`): which original
+    flat leaf index lives in which bucket slot, its tree path, and its
+    ``ProjSpec``.  The layout is a pure function of the param tree and the
+    projection rules, so it is identical across restarts and across hosts.
+
+CODEC.  The codec maps a stacked state to and from the congruent per-leaf
+pytree, and names every array portably so *state consumers* need no
+knowledge of which mode produced it:
+
+  * :func:`build_layout` — bucket assignment (THE single definition: the
+    optimizer transforms, the checkpoint reader and the benchmarks all call
+    this, so bucket order can never drift between producers and consumers);
+  * :func:`encode` / :func:`decode` — per-leaf states <-> stacked buckets
+    (``decode(encode(x)) == x`` bit-for-bit, int8 codes included);
+  * :func:`leaf_view` — one leaf's state as a zero-copy slice of its bucket
+    (how ``distributed/compression.py`` addresses bucket slices);
+  * :func:`manifest_entries` — walks ANY pytree (stacked, per-leaf or
+    mixed) and yields one entry per storable array, in standard
+    ``tree_flatten`` order.  Stacked arrays carry their per-leaf *logical
+    paths* (``slots``): the path each slice would have under per-leaf
+    storage.  Both storage modes therefore share one logical-path
+    namespace, which is what lets ``train/checkpoint.py`` restore a
+    checkpoint written in either mode into a template of either mode.
+
+VERSIONING.  Stacked checkpoint entries are tagged ``codec:
+"stacked-bucket/v1"`` (:data:`STACKED_CODEC`).  v1 semantics: ``axis`` 0 is
+the bucket axis; ``slots[j]`` is the logical per-leaf path of slice ``j``;
+slices are bit-exact views (no transform is applied by the codec).  Any
+future layout change (e.g. conv/Tucker-2 bucketing) must bump the version
+string so old readers fail loudly instead of mis-slicing.
+
+A/B GUARANTEE.  ``ProjectedAdamConfig(stacked_state=False)`` keeps today's
+per-leaf layout bit-for-bit; ``stacked_state=True`` must produce the same
+updates and (decoded) states bit-for-bit — fp32, bf16 streaming, int8 codes
+and flora RNG included (``tests/test_stacked_state.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projector import KIND_CONV, KIND_PROJECT, ProjSpec, path_str
+
+STACKED_STATE_VERSION = 1
+STACKED_CODEC = "stacked-bucket/v1"
+
+# build_layout classifications.
+BUCKET_PROJECT = "project"  # congruent low-rank leaves, stacked
+BUCKET_DENSE = "dense"  # congruent dense leaves, stacked
+BUCKET_TAIL = "tail"  # per-leaf residual (conv/Tucker-2, …)
+
+
+class BucketInfo(NamedTuple):
+    """Static description of one congruence bucket."""
+
+    kind: str  # BUCKET_PROJECT | BUCKET_DENSE
+    spec: ProjSpec
+    shape: Tuple[int, ...]  # original leaf shape
+    dtype: str  # original leaf dtype name
+    indices: Tuple[int, ...]  # original flat leaf indices, tree order
+    paths: Tuple[str, ...]  # leaf tree paths, aligned with ``indices``
+
+
+class TailInfo(NamedTuple):
+    """One residual (non-bucketed) leaf."""
+
+    index: int
+    path: str
+    spec: ProjSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedLayout:
+    """Pure-structural bucket assignment (hashable: jit-static aux data)."""
+
+    version: int
+    buckets: Tuple[BucketInfo, ...]
+    tail: Tuple[TailInfo, ...]
+    n_leaves: int
+
+    def __post_init__(self):
+        pos = {}
+        for b, info in enumerate(self.buckets):
+            for slot, idx in enumerate(info.indices):
+                pos[idx] = ("bucket", b, slot)
+        for j, t in enumerate(self.tail):
+            pos[t.index] = ("tail", j, 0)
+        object.__setattr__(self, "_positions", pos)
+
+    def position(self, index: int) -> Tuple[str, int, int]:
+        """flat leaf index -> ('bucket', b, slot) | ('tail', j, 0)."""
+        return self._positions[index]
+
+    def proj_bucket_sizes(self) -> List[int]:
+        return [
+            len(b.indices) for b in self.buckets if b.kind == BUCKET_PROJECT
+        ]
+
+    def signature(self):
+        """Dtype-erased structural identity. The state layout depends on
+        shapes/specs only — gradients may legally stream in a different
+        dtype than the params the state was initialized from (bf16
+        training), so the hot-path compatibility check compares this, not
+        full equality."""
+        return (
+            self.version,
+            tuple(
+                (b.kind, b.spec, b.shape, b.indices, b.paths)
+                for b in self.buckets
+            ),
+            self.tail,
+            self.n_leaves,
+        )
+
+
+def build_layout(
+    spec_fn: Callable[[str, Sequence[int]], ProjSpec],
+    paths: Sequence[str],
+    shapes: Sequence[Sequence[int]],
+    dtypes: Sequence[str],
+    classify: Optional[Callable[[ProjSpec], str]] = None,
+) -> StackedLayout:
+    """THE bucket assignment, shared by every producer and consumer.
+
+    Identical grouping to ``scale_by_projected_adam.update_fn``: projected
+    leaves bucket by ``(spec, shape, dtype)``, dense leaves by
+    ``(shape, dtype)``, both in tree (insertion) order; ``classify`` maps a
+    spec to project/dense/tail (default: ``KIND_PROJECT`` projects,
+    ``KIND_CONV`` goes to the tail, everything else is dense).
+    Projected buckets come first in ``layout.buckets`` so stagger phases
+    line up with the per-leaf schedule.
+    """
+    if classify is None:
+        def classify(spec: ProjSpec) -> str:
+            if spec.kind == KIND_PROJECT:
+                return BUCKET_PROJECT
+            if spec.kind == KIND_CONV:
+                return BUCKET_TAIL
+            return BUCKET_DENSE
+
+    proj, dense = {}, {}
+    tail: List[TailInfo] = []
+    for idx, (path, shape, dtype) in enumerate(zip(paths, shapes, dtypes)):
+        shape = tuple(int(s) for s in shape)
+        spec = spec_fn(path, shape)
+        kind = classify(spec)
+        if kind == BUCKET_TAIL:
+            tail.append(TailInfo(index=idx, path=path, spec=spec))
+        elif kind == BUCKET_PROJECT:
+            key = (spec, shape, dtype)
+            proj.setdefault(key, []).append((idx, path))
+        else:
+            key = (spec, shape, dtype)
+            dense.setdefault(key, []).append((idx, path))
+
+    buckets: List[BucketInfo] = []
+    for kind, groups in ((BUCKET_PROJECT, proj), (BUCKET_DENSE, dense)):
+        for (spec, shape, dtype), members in groups.items():
+            buckets.append(
+                BucketInfo(
+                    kind=kind,
+                    spec=spec,
+                    shape=shape,
+                    dtype=dtype,
+                    indices=tuple(i for i, _ in members),
+                    paths=tuple(p for _, p in members),
+                )
+            )
+    return StackedLayout(
+        version=STACKED_STATE_VERSION,
+        buckets=tuple(buckets),
+        tail=tuple(tail),
+        n_leaves=len(paths),
+    )
+
+
+def layout_for_flat(
+    spec_fn, flat, classify: Optional[Callable[[ProjSpec], str]] = None
+) -> StackedLayout:
+    """``build_layout`` over an already path-flattened tree
+    (``tree_flatten_with_path`` output — what the optimizer transforms
+    hold at init/update time)."""
+    return build_layout(
+        spec_fn,
+        [path_str(kp) for kp, _ in flat],
+        [leaf.shape for _, leaf in flat],
+        [jnp.dtype(leaf.dtype).name for _, leaf in flat],
+        classify,
+    )
+
+
+def layout_for_tree(
+    spec_fn, tree, classify: Optional[Callable[[ProjSpec], str]] = None
+) -> StackedLayout:
+    """``build_layout`` over a concrete (or abstract) param/gradient tree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return layout_for_flat(spec_fn, flat, classify)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class StackedLeaves:
+    """Optimizer leaves stored pre-stacked by congruence bucket.
+
+    A pytree node: children are the stacked bucket states and the per-leaf
+    tail states; the :class:`StackedLayout` rides along as static aux data
+    (hashable, so jit caches on it like any other static argument).
+    """
+
+    __slots__ = ("buckets", "tail", "layout")
+
+    def __init__(self, buckets, tail, layout: StackedLayout):
+        self.buckets = tuple(buckets)
+        self.tail = tuple(tail)
+        self.layout = layout
+
+    def tree_flatten_with_keys(self):
+        return (
+            (
+                (jax.tree_util.GetAttrKey("buckets"), self.buckets),
+                (jax.tree_util.GetAttrKey("tail"), self.tail),
+            ),
+            self.layout,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        buckets, tail = children
+        return cls(buckets, tail, aux)
+
+    def __repr__(self):
+        return (
+            f"StackedLeaves(buckets={len(self.buckets)}, "
+            f"tail={len(self.tail)}, leaves={self.layout.n_leaves})"
+        )
+
+
+def encode(layout: StackedLayout, flat_states: Sequence[Any]) -> StackedLeaves:
+    """Per-leaf states (flat, tree order) -> pre-stacked buckets.
+
+    Stacking is ``jnp.stack`` per field, so encoded arrays are bit-exact
+    concatenations of the per-leaf arrays (int8 codes included).
+    """
+    if len(flat_states) != layout.n_leaves:
+        raise ValueError(
+            f"layout has {layout.n_leaves} leaves, got {len(flat_states)}"
+        )
+    buckets = [
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[flat_states[i] for i in info.indices]
+        )
+        for info in layout.buckets
+    ]
+    tail = [flat_states[t.index] for t in layout.tail]
+    return StackedLeaves(buckets, tail, layout)
+
+
+def decode(stacked: StackedLeaves) -> List[Any]:
+    """Inverse of :func:`encode`: flat per-leaf states in tree order."""
+    layout = stacked.layout
+    out: List[Any] = [None] * layout.n_leaves
+    for b, info in enumerate(layout.buckets):
+        for slot, idx in enumerate(info.indices):
+            out[idx] = jax.tree_util.tree_map(
+                lambda x, s=slot: x[s], stacked.buckets[b]
+            )
+    for j, t in enumerate(layout.tail):
+        out[t.index] = stacked.tail[j]
+    return out
+
+
+def leaf_view(stacked: StackedLeaves, index: int) -> Any:
+    """One leaf's state, addressed as a slice of its bucket.
+
+    The returned pytree has exactly the structure/dtypes the same leaf
+    would have under per-leaf storage; inside jit the slice is a view XLA
+    fuses into its consumer (this is how the cross-pod compression path
+    reads per-leaf moments out of stacked storage)."""
+    kind, b, slot = stacked.layout.position(index)
+    if kind == "tail":
+        return stacked.tail[b]
+    return jax.tree_util.tree_map(lambda x: x[slot], stacked.buckets[b])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint codec: manifest entries
+# ---------------------------------------------------------------------------
+class ManifestEntry(NamedTuple):
+    """One storable array of a state pytree.
+
+    ``kind`` is 'leaf' (ordinary array; ``path`` is its logical per-leaf
+    path) or 'stacked' (bucket array; ``path`` is its stacked tree path and
+    ``slots`` the per-leaf logical paths of its axis-0 slices, in order).
+    Entries are yielded in standard ``tree_flatten`` order of the walked
+    tree, so a position-aligned sharding-spec list stays valid.
+    """
+
+    kind: str
+    path: str
+    value: Any
+    slots: Optional[Tuple[str, ...]] = None
+
+
+def _join(*parts: str) -> str:
+    return "/".join(p for p in parts if p)
+
+
+def _stacked_entries(node: StackedLeaves, prefix: str) -> List[ManifestEntry]:
+    """Expand one StackedLeaves node in its own tree_flatten order."""
+    out: List[ManifestEntry] = []
+    layout = node.layout
+    for b, (info, bucket) in enumerate(zip(layout.buckets, node.buckets)):
+        flat, _ = jax.tree_util.tree_flatten_with_path(bucket)
+        for kp, arr in flat:
+            field = path_str(kp)
+            out.append(
+                ManifestEntry(
+                    kind="stacked",
+                    path=_join(prefix, "buckets", str(b), field),
+                    value=arr,
+                    slots=tuple(
+                        _join(prefix, lp, field) for lp in info.paths
+                    ),
+                )
+            )
+    for t, state in zip(layout.tail, node.tail):
+        flat, _ = jax.tree_util.tree_flatten_with_path(state)
+        for kp, arr in flat:
+            out.append(
+                ManifestEntry(
+                    kind="leaf",
+                    path=_join(prefix, t.path, path_str(kp)),
+                    value=arr,
+                )
+            )
+    return out
+
+
+def manifest_entries(tree: Any) -> List[ManifestEntry]:
+    """Walk any pytree; one entry per storable array, flatten-ordered.
+
+    Per-leaf states yield plain 'leaf' entries whose path IS the logical
+    path; stacked states yield 'stacked' entries carrying their slices'
+    logical paths — the shared namespace both checkpoint modes speak.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, StackedLeaves)
+    )
+    out: List[ManifestEntry] = []
+    for kp, node in flat:
+        prefix = path_str(kp)
+        if isinstance(node, StackedLeaves):
+            out.extend(_stacked_entries(node, prefix))
+        else:
+            out.append(ManifestEntry(kind="leaf", path=prefix, value=node))
+    return out

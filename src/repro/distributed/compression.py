@@ -20,6 +20,13 @@ in tests/test_distributed.py on a (2,2,2) host mesh).
 Implementation: ``shard_map`` manual over the 'pod' axis only (data/model
 stay auto inside), computing per-pod gradients, reducing the compressed
 tensors, and running the same leaf update the core transform uses.
+
+Stacked-state aware: when the optimizer state is stored pre-stacked
+(``stacked_state=True``; core/stacked_state.py), per-leaf moments are
+addressed as bucket slices through the codec's ``leaf_view`` — inside jit
+those slices fuse into their consumers, so the reduction schedule (r-rank
+every step, full G on refresh steps) is unchanged — and the new leaf states
+are re-encoded into the same stacked layout on the way out.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import correlation, projector, recalibrate
+from repro.core import stacked_state
 from repro.core.coap_adam import (
     DenseLeaf,
     ProjLeaf,
@@ -64,7 +72,23 @@ def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState
     count = state.count
     t = count + 1
     flat_u, treedef = jax.tree_util.tree_flatten_with_path(grads)
-    flat_s = treedef.flatten_up_to(state.leaves)
+    stacked = isinstance(state.leaves, stacked_state.StackedLeaves)
+    if stacked:
+        # Same structural check the core transform does: a congruent-but-
+        # reordered tree must raise, never silently pair moments with the
+        # wrong leaves (layout paths/indices are part of the signature).
+        layout = stacked_state.layout_for_flat(cfg.rules.spec_for, flat_u)
+        if state.leaves.layout.signature() != layout.signature():
+            raise ValueError(
+                "stacked optimizer state does not match the gradient tree "
+                "(optimizer rules / model structure changed since init?)"
+            )
+        flat_s = [
+            stacked_state.leaf_view(state.leaves, i)
+            for i in range(len(flat_u))
+        ]
+    else:
+        flat_s = treedef.flatten_up_to(state.leaves)
     new_updates, new_leaves = [], []
     for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
         spec = cfg.rules.spec_for(path_str(kp), g.shape)
@@ -113,12 +137,13 @@ def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState
             new_leaves.append(DenseLeaf(mu=new_mu, nu=new_nu,
                                         mu_scale=leaf.mu_scale,
                                         nu_scale=leaf.nu_scale))
+    if stacked:
+        leaves_out = stacked_state.encode(state.leaves.layout, new_leaves)
+    else:
+        leaves_out = jax.tree_util.tree_unflatten(treedef, new_leaves)
     return (
         jax.tree_util.tree_unflatten(treedef, new_updates),
-        ProjectedAdamState(
-            count=count + 1,
-            leaves=jax.tree_util.tree_unflatten(treedef, new_leaves),
-        ),
+        ProjectedAdamState(count=count + 1, leaves=leaves_out),
     )
 
 

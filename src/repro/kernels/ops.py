@@ -127,19 +127,43 @@ def quantized_adam_update(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "steps"))
-def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1):
+@functools.partial(jax.jit, static_argnames=("lr", "steps", "normalize"))
+def _eqn6_ref(p, g, m_proj, lr, steps, normalize):
+    return ref.eqn6_sgd_update(
+        p, g, m_proj, lr=lr, steps=steps, normalize=normalize
+    )[0]
+
+
+def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1, normalize=False):
     """Fused Eqn-6 projection refresh: ``steps`` SGD iterations on the
     paper's Eqn-6 objective with loss+grad computed in ONE tiled sweep over
     G per step (see ``eqn6.py``). Accepts bf16 ``g``/``m_proj`` (upcast
-    per-tile in VMEM). Returns the new P only (in ``p``'s dtype)."""
+    per-tile in VMEM). ``normalize=True`` fuses the scale-invariant
+    variant's ‖G‖ pre-pass as a first grid phase. Returns the new P only
+    (in ``p``'s dtype).
+
+    VMEM guard: when the kernel's trace-time footprint estimate cannot fit
+    at any row-tile size (wide layers; ``eqn6.plan_bm``), the dispatch
+    falls back to the unfused jnp oracle — identical numerics, no
+    uncompilable kernel."""
     if _mode() == "ref":
-        return ref.eqn6_sgd_update(p, g, m_proj, lr=lr, steps=steps)[0]
+        return _eqn6_ref(p, g, m_proj, lr, steps, normalize)
     from repro.kernels import eqn6
 
-    return eqn6.eqn6_sgd_update_pallas(
-        p, g, m_proj, lr=lr, steps=steps, interpret=_interpret_flag()
-    )[0]
+    try:
+        # Resolve the env budget HERE, outside the jit cache: the budget is
+        # a static argument of the kernel wrapper, so passing it concretely
+        # makes a changed REPRO_EQN6_VMEM_BUDGET a cache miss instead of a
+        # silently-ignored env read inside an already-cached trace.
+        return eqn6.eqn6_sgd_update_pallas(
+            p, g, m_proj, lr=lr, steps=steps, normalize=normalize,
+            interpret=_interpret_flag(), vmem_budget=eqn6._vmem_budget(),
+        )[0]
+    except eqn6.Eqn6VmemError as e:
+        import warnings
+
+        warnings.warn(f"{e}", RuntimeWarning)
+        return _eqn6_ref(p, g, m_proj, lr, steps, normalize)
 
 
 def rmsnorm(x, scale, eps=1e-6):

@@ -233,6 +233,7 @@ def eqn6_sgd_update(
     m_proj: jnp.ndarray,  # (..., m, r) projected first moment
     lr: float = 0.1,
     steps: int = 1,
+    normalize: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Oracle for the fused Eqn-6 kernel: ``steps`` SGD iterations on the
     paper's Eqn-6 objective. The closed-form math lives in
@@ -240,12 +241,21 @@ def eqn6_sgd_update(
     because core sits above the kernels layer); this wrapper only re-exposes
     it in the kernel's signature: returns ``(new_p, last_val, last_grad)``
     where val/grad belong to the last iteration's pre-update P.
+    ``normalize=True`` pre-scales G and M_proj by 1/rms(G) exactly as
+    ``correlation.sgd_update(normalize=True)`` does (the kernel's first
+    grid phase computes the same factor).
     """
     from repro.core import correlation  # lazy: avoids core<->kernels cycle
 
     p32 = p.astype(jnp.float32)
     g32 = g.astype(jnp.float32)
     mp32 = m_proj.astype(jnp.float32)
+    if normalize:
+        rms = jnp.sqrt(
+            jnp.mean(jnp.square(g32), axis=(-1, -2), keepdims=True)
+        ) + correlation._EPS
+        g32 = g32 / rms
+        mp32 = mp32 / rms
 
     def body(_, carry):
         p_cur, _, _ = carry

@@ -1,15 +1,37 @@
-"""Checkpointing: atomic, step-numbered, elastic reshard-on-restore.
+"""Checkpointing: atomic, step-numbered, elastic reshard-on-restore,
+stacked-state codec aware.
 
-Layout:  <dir>/ckpt_<step>/   manifest.json + <leaf_index>.npy per leaf
+Layout:  <dir>/ckpt_<step>/   manifest.json + <leaf_index>.npy per array
 Writes go to ``ckpt_<step>.tmp`` and are renamed only after every file is
-flushed — a crash mid-write can never corrupt the newest valid checkpoint.
-bfloat16 leaves are stored as uint16 views (numpy has no native bf16) with
-the logical dtype recorded in the manifest.
+flushed — a crash mid-write can never corrupt the newest valid checkpoint,
+and an async save only ever exposes a complete ``ckpt_<step>`` directory
+(``wait_pending`` joins outstanding writers). bfloat16 arrays are stored as
+uint16 views (numpy has no native bf16) with the logical dtype recorded in
+the manifest.
+
+MANIFEST FORMAT (``"version": 2``; version-1 manifests — no ``version`` /
+``stacked`` keys — restore unchanged):
+
+  * ``leaves``  — one entry per ordinary array: ``{path, file, dtype,
+    shape}``. ``path`` is the array's LOGICAL per-leaf tree path.
+  * ``stacked`` — one entry per pre-stacked bucket array
+    (``core/stacked_state.StackedLeaves`` fields): ``{path, file, dtype,
+    shape, codec, axis, slots}`` where ``codec`` is
+    ``stacked_state.STACKED_CODEC`` ("stacked-bucket/v1": axis-0 slices are
+    bit-exact per-leaf arrays), ``axis`` is the bucket axis (0) and
+    ``slots[j]`` is the logical per-leaf path of slice ``j``.
+
+Because stacked entries name their slices by the SAME logical paths a
+per-leaf state would use, the two storage modes are mutually restorable: a
+checkpoint saved in stacked mode restores into a per-leaf template (each
+leaf loads as a slice of its bucket file) and vice versa (each bucket
+assembles by stacking its slot arrays); matching stacked layouts take the
+whole-file fast path. Unknown codec versions fail loudly.
 
 Restore takes a *template* pytree (abstract TrainState) and, optionally, a
 mesh + sharding tree: leaves are device_put directly to their shards, so a
 checkpoint written on one mesh restores onto any other (elastic scaling —
-tested 4→8 devices in tests/test_distributed.py).
+tested 4→8 devices, per-leaf and stacked, in tests/test_distributed.py).
 """
 from __future__ import annotations
 
@@ -23,19 +45,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stacked_state
+
 _MANIFEST = "manifest.json"
+_FORMAT_VERSION = 2
+
+# Outstanding async writer threads (pruned on inspection).
+_PENDING: list = []
 
 
-def _leaf_paths(tree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    from repro.core.projector import path_str
+def _store_array(arr: np.ndarray):
+    """-> (storable array, logical dtype string). bf16 goes as uint16."""
+    logical = str(arr.dtype)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.view(np.uint16)
+    return arr, logical
 
-    return [(path_str(kp), leaf) for kp, leaf in flat], treedef
+
+def _load_logical(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    return arr.view(jnp.bfloat16) if logical_dtype == "bfloat16" else arr
+
+
+def wait_pending() -> None:
+    """Join all outstanding async checkpoint writers (tests / shutdown)."""
+    while _PENDING:
+        t = _PENDING.pop()
+        t.join()
 
 
 def save(directory: str, step: int, state: Any, keep: int = 3,
          async_: bool = False) -> str:
-    """Write ckpt_<step>; returns its final path."""
+    """Write ckpt_<step>; returns its final path.
+
+    ``async_=True`` snapshots the state to host synchronously, then writes
+    in a daemon thread; the step directory appears (atomic rename) only
+    after every file and the manifest are flushed, so a reader can never
+    observe a torn checkpoint.
+    """
     host_state = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
                                         state)
 
@@ -44,22 +90,25 @@ def save(directory: str, step: int, state: Any, keep: int = 3,
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
-        flat, _ = _leaf_paths(host_state)
-        manifest = {"step": step, "leaves": []}
-        for i, (path, leaf) in enumerate(flat):
-            arr = np.asarray(leaf)
-            logical_dtype = str(arr.dtype)
-            if arr.dtype == jnp.bfloat16:
-                arr = arr.view(np.uint16)
+        entries = stacked_state.manifest_entries(host_state)
+        manifest = {"step": step, "version": _FORMAT_VERSION,
+                    "leaves": [], "stacked": []}
+        for i, entry in enumerate(entries):
+            arr, logical_dtype = _store_array(np.asarray(entry.value))
             fname = f"{i:06d}.npy"
             with open(os.path.join(tmp, fname), "wb") as f:
                 np.save(f, arr)
                 f.flush()
                 os.fsync(f.fileno())
-            manifest["leaves"].append(
-                {"path": path, "file": fname, "dtype": logical_dtype,
-                 "shape": list(arr.shape)}
-            )
+            row = {"path": entry.path, "file": fname,
+                   "dtype": logical_dtype, "shape": list(arr.shape)}
+            if entry.kind == "stacked":
+                row["codec"] = stacked_state.STACKED_CODEC
+                row["axis"] = 0
+                row["slots"] = list(entry.slots)
+                manifest["stacked"].append(row)
+            else:
+                manifest["leaves"].append(row)
         mpath = os.path.join(tmp, _MANIFEST)
         with open(mpath, "w") as f:
             json.dump(manifest, f)
@@ -71,7 +120,9 @@ def save(directory: str, step: int, state: Any, keep: int = 3,
         return final
 
     if async_:
+        _PENDING[:] = [t for t in _PENDING if t.is_alive()]
         t = threading.Thread(target=_write, daemon=True)
+        _PENDING.append(t)
         t.start()
         return os.path.join(directory, f"ckpt_{step:08d}")
     return _write()
@@ -98,10 +149,62 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
+class _CkptIndex:
+    """Logical-path -> array resolver over a v1/v2 checkpoint directory."""
+
+    def __init__(self, cdir: str, manifest: dict):
+        self.cdir = cdir
+        self.direct = {e["path"]: e for e in manifest["leaves"]}
+        self.stacked = {}
+        self.slots = {}  # logical path -> (stacked entry, slot index)
+        for se in manifest.get("stacked", []):
+            if se.get("codec") != stacked_state.STACKED_CODEC:
+                raise ValueError(
+                    f"unknown stacked-state codec {se.get('codec')!r} in "
+                    f"{cdir} — this build reads {stacked_state.STACKED_CODEC}"
+                )
+            self.stacked[se["path"]] = se
+            for j, sp in enumerate(se["slots"]):
+                self.slots[sp] = (se, j)
+        self._files = {}
+
+    def _file(self, entry) -> np.ndarray:
+        fname = entry["file"]
+        if fname not in self._files:
+            arr = np.load(os.path.join(self.cdir, fname))
+            self._files[fname] = _load_logical(arr, entry["dtype"])
+        return self._files[fname]
+
+    def resolve(self, path: str) -> np.ndarray:
+        """An array by its logical per-leaf path, from either storage mode."""
+        if path in self.direct:
+            return self._file(self.direct[path])
+        if path in self.slots:
+            entry, slot = self.slots[path]
+            return self._file(entry)[slot]
+        raise ValueError(
+            f"checkpoint {self.cdir} has no leaf {path!r} — the run "
+            "configuration (optimizer/model structure) differs from the "
+            "one that wrote this checkpoint; use a fresh --ckpt-dir or "
+            "restore with the original config"
+        )
+
+    def resolve_stacked(self, path: str, slots) -> np.ndarray:
+        """A bucket array: whole-file fast path when the checkpoint was
+        written with the identical layout, else assembled slot-by-slot
+        (this is the cross-mode / re-bucketed restore path)."""
+        entry = self.stacked.get(path)
+        if entry is not None and tuple(entry["slots"]) == tuple(slots):
+            return self._file(entry)
+        return np.stack([self.resolve(sp) for sp in slots])
+
+
 def restore(directory: str, template: Any, step: Optional[int] = None,
             mesh=None, spec_tree: Any = None) -> Any:
     """Load into the structure of ``template``. With mesh+spec_tree, every
-    leaf is placed sharded (elastic: any mesh works)."""
+    leaf is placed sharded (elastic: any mesh works). The template may use
+    per-leaf or stacked state storage independently of what the checkpoint
+    was written with (see module docstring)."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -109,29 +212,22 @@ def restore(directory: str, template: Any, step: Optional[int] = None,
     cdir = os.path.join(directory, f"ckpt_{step:08d}")
     with open(os.path.join(cdir, _MANIFEST)) as f:
         manifest = json.load(f)
-    by_path = {e["path"]: e for e in manifest["leaves"]}
+    index = _CkptIndex(cdir, manifest)
 
-    flat, treedef = _leaf_paths(template)
+    entries = stacked_state.manifest_entries(template)
+    treedef = jax.tree_util.tree_structure(template)
     spec_flat = None
     if spec_tree is not None:
-        spec_list, _ = jax.tree_util.tree_flatten(
+        spec_flat, _ = jax.tree_util.tree_flatten(
             spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
         )
-        spec_flat = spec_list
 
     leaves = []
-    for i, (path, tmpl_leaf) in enumerate(flat):
-        if path not in by_path:
-            raise ValueError(
-                f"checkpoint {cdir} has no leaf {path!r} — the run "
-                "configuration (optimizer/model structure) differs from the "
-                "one that wrote this checkpoint; use a fresh --ckpt-dir or "
-                "restore with the original config"
-            )
-        entry = by_path[path]
-        arr = np.load(os.path.join(cdir, entry["file"]))
-        if entry["dtype"] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+    for i, entry in enumerate(entries):
+        if entry.kind == "stacked":
+            arr = index.resolve_stacked(entry.path, entry.slots)
+        else:
+            arr = index.resolve(entry.path)
         if mesh is not None and spec_flat is not None:
             sharding = jax.sharding.NamedSharding(mesh, spec_flat[i])
             leaves.append(jax.device_put(arr, sharding))

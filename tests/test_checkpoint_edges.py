@@ -1,0 +1,198 @@
+"""Checkpoint edge paths: async save ordering, keep= pruning, bf16 round
+trip — under both per-leaf and stacked-state manifests.
+
+The atomicity contract: a ``ckpt_<step>`` directory becomes visible ONLY
+via the final ``os.rename`` of a fully-flushed ``.tmp`` directory, so no
+reader (poller, restarted trainer, ``latest_step``) can ever observe a torn
+checkpoint — asynchronous saves included.
+"""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coap_adam import ProjectedAdamConfig, scale_by_projected_adam
+from repro.core.projector import ProjectionRules
+from repro.train import checkpoint as ckpt
+
+
+def _params():
+    p = {f"a{i}": {"w": jnp.zeros((64, 32))} for i in range(3)}
+    p["bias"] = jnp.zeros((5,))
+    return p
+
+
+def _state(stacked: bool, state_dtype=jnp.float32, seed=0):
+    params = _params()
+    tx = scale_by_projected_adam(
+        ProjectedAdamConfig(
+            rules=ProjectionRules(rank=8, min_dim=8), t_update=2, lam=2,
+            stacked_state=stacked, state_dtype=state_dtype,
+        )
+    )
+    state = tx.init(params)
+    key = jax.random.key(seed)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    g = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            0.1 * jax.random.normal(jax.random.fold_in(key, i), p.shape)
+            for i, p in enumerate(flat)
+        ],
+    )
+    _, state = jax.jit(lambda gg, s: tx.update(gg, s, None))(g, state)
+    return tx, params, state
+
+
+def _complete_dirs(d):
+    out = []
+    for name in sorted(os.listdir(d)):
+        if not name.startswith("ckpt_") or name.endswith(".tmp"):
+            continue
+        cdir = os.path.join(d, name)
+        mpath = os.path.join(cdir, "manifest.json")
+        assert os.path.exists(mpath), f"torn checkpoint visible: {name}"
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for entry in manifest["leaves"] + manifest.get("stacked", []):
+            assert os.path.exists(os.path.join(cdir, entry["file"])), (
+                f"manifest references missing file in {name}"
+            )
+        out.append(name)
+    return out
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_async_save_never_exposes_torn_checkpoint(tmp_path, stacked,
+                                                  monkeypatch):
+    """The rename that publishes ckpt_<step> must happen only after the
+    manifest and every referenced array file exist in the tmp dir; while
+    the async writer runs, any visible checkpoint must be complete."""
+    _, _, state = _state(stacked)
+    d = str(tmp_path)
+    real_rename = os.rename
+    renamed = []
+
+    def checked_rename(src, dst, *a, **k):
+        if str(dst).split(os.sep)[-1].startswith("ckpt_") and str(
+            src
+        ).endswith(".tmp"):
+            mpath = os.path.join(src, "manifest.json")
+            assert os.path.exists(mpath), "rename before manifest write"
+            with open(mpath) as f:
+                manifest = json.load(f)
+            entries = manifest["leaves"] + manifest.get("stacked", [])
+            assert entries
+            for entry in entries:
+                assert os.path.exists(os.path.join(src, entry["file"]))
+            renamed.append(dst)
+        return real_rename(src, dst, *a, **k)
+
+    monkeypatch.setattr(os, "rename", checked_rename)
+    try:
+        path = ckpt.save(d, 1, state, async_=True)
+        assert path.endswith("ckpt_00000001")
+        # While the writer runs, pollers may only ever see complete ckpts.
+        for _ in range(50):
+            _complete_dirs(d)
+    finally:
+        ckpt.wait_pending()
+    assert renamed, "atomic publish rename never happened"
+    assert _complete_dirs(d) == ["ckpt_00000001"]
+    assert ckpt.latest_step(d) == 1
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_async_save_ordering_and_wait(tmp_path, stacked):
+    tx, params, state = _state(stacked)
+    d = str(tmp_path)
+    for step in (1, 2, 3):
+        ckpt.save(d, step, state, keep=10, async_=True)
+    ckpt.wait_pending()
+    assert ckpt.latest_step(d) == 3
+    assert _complete_dirs(d) == [
+        "ckpt_00000001", "ckpt_00000002", "ckpt_00000003"
+    ]
+    template = jax.eval_shape(lambda: tx.init(params))
+    restored = ckpt.restore(d, template)  # newest, readable
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_keep_pruning(tmp_path, stacked):
+    """keep= retains only the newest N complete checkpoints; pruning never
+    touches the newest one and restore still works after GC."""
+    tx, params, state = _state(stacked)
+    d = str(tmp_path)
+    for step in range(1, 6):
+        ckpt.save(d, step, state, keep=2)
+    kept = _complete_dirs(d)
+    assert kept == ["ckpt_00000004", "ckpt_00000005"]
+    assert ckpt.latest_step(d) == 5
+    template = jax.eval_shape(lambda: tx.init(params))
+    restored = ckpt.restore(d, template, step=4)
+    np.testing.assert_array_equal(
+        np.asarray(restored.count), np.asarray(state.count)
+    )
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_bf16_as_uint16_roundtrip(tmp_path, stacked):
+    """bf16 arrays are stored as uint16 views with the logical dtype in the
+    manifest, for per-leaf AND stacked entries; restore recovers the exact
+    bf16 bits."""
+    tx, params, state = _state(stacked, state_dtype=jnp.bfloat16)
+    d = str(tmp_path)
+    ckpt.save(d, 1, state)
+    # the manifest records bfloat16 logical dtypes somewhere
+    with open(os.path.join(d, "ckpt_00000001", "manifest.json")) as f:
+        manifest = json.load(f)
+    entries = manifest["leaves"] + manifest.get("stacked", [])
+    assert any(e["dtype"] == "bfloat16" for e in entries)
+    if stacked:
+        assert any(
+            e["dtype"] == "bfloat16" for e in manifest["stacked"]
+        ), "stacked bf16 arrays must go through the uint16 view too"
+    # and the files on disk are uint16 (numpy has no bf16)
+    bf16_entry = next(e for e in entries if e["dtype"] == "bfloat16")
+    raw = np.load(os.path.join(d, "ckpt_00000001", bf16_entry["file"]))
+    assert raw.dtype == np.uint16
+    template = jax.eval_shape(lambda: tx.init(params))
+    restored = ckpt.restore(d, template)
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(state)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)),
+        )
+
+
+def test_v1_manifest_still_restores(tmp_path):
+    """Version-1 manifests (pre-codec: no version/stacked keys) keep
+    restoring — forward compatibility for old checkpoints."""
+    d = str(tmp_path)
+    state = {"w": jnp.arange(8, dtype=jnp.bfloat16), "c": jnp.asarray(3)}
+    ckpt.save(d, 1, state)
+    cdir = os.path.join(d, "ckpt_00000001")
+    with open(os.path.join(cdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    del manifest["version"]
+    del manifest["stacked"]
+    with open(os.path.join(cdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    restored = ckpt.restore(d, template)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"].astype(jnp.float32)),
+        np.asarray(state["w"].astype(jnp.float32)),
+    )

@@ -146,6 +146,23 @@ def test_crosspod_compression_matches_uncompressed():
                                        np.asarray(b, np.float32),
                                        rtol=2e-3, atol=2e-5)
         print("compression equivalence ok")
+
+        # Stacked state storage: same compressed schedule, moments
+        # addressed as bucket slices via the codec's leaf_view — must
+        # match the plain-update reference identically.
+        scfg = dataclasses.replace(pcfg, stacked_state=True)
+        stx = scale_by_projected_adam(scfg)
+        sstate = TrainState(step=jnp.zeros([], jnp.int32), params=params,
+                            opt_state=stx.init(params))
+        sstep_fn = make_compressed_train_step(model, scfg, mesh, lr)
+        with mesh:
+            snew_state, _ = jax.jit(sstep_fn)(sstate, bshard)
+        for a, b in zip(jax.tree_util.tree_leaves(ref_params),
+                        jax.tree_util.tree_leaves(snew_state.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-5)
+        print("stacked compression equivalence ok")
     """)
 
 
@@ -173,4 +190,66 @@ def test_elastic_checkpoint_reshard():
         np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
         assert restored["w"].sharding.mesh.shape["data"] == 4
         print("elastic reshard ok")
+    """)
+
+
+def test_elastic_checkpoint_reshard_stacked_cross_mode():
+    """Save a STACKED optimizer state sharded on a 4-device mesh, restore
+    onto an 8-device mesh into BOTH a per-leaf template and a stacked
+    template — the codec's logical-path namespace plus elastic device_put."""
+    run_sub("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import stacked_state as ss
+        from repro.core.coap_adam import (
+            ProjectedAdamConfig, scale_by_projected_adam)
+        from repro.core.projector import ProjectionRules
+        from repro.train import checkpoint as ckpt
+
+        params = {f"l{i}": {"w": jnp.zeros((64, 32))} for i in range(4)}
+        params["bias"] = jnp.zeros((8,))
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        key = jax.random.key(0)
+        g = jax.tree_util.tree_unflatten(treedef, [
+            0.1 * jax.random.normal(jax.random.fold_in(key, i), p.shape)
+            for i, p in enumerate(flat)])
+
+        def build(stacked):
+            tx = scale_by_projected_adam(ProjectedAdamConfig(
+                rules=ProjectionRules(rank=8, min_dim=8), t_update=2,
+                lam=2, stacked_state=stacked))
+            st = tx.init(params)
+            _, st = jax.jit(lambda gg, s: tx.update(gg, s, None))(g, st)
+            return tx, st
+
+        tx_s, st_s = build(True)
+        tx_p, st_p = build(False)
+
+        mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        st_sharded = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(mesh4, P())), st_s)
+        tmp = tempfile.mkdtemp()
+        ckpt.save(tmp, 1, st_sharded)
+
+        mesh8 = jax.make_mesh((8,), ("data",))
+        for tx_dst, want_state, label in [
+                (tx_p, st_p, "per-leaf"), (tx_s, st_s, "stacked")]:
+            template = jax.eval_shape(lambda: tx_dst.init(params))
+            specs = jax.tree_util.tree_map(
+                lambda _: P(), template,
+                is_leaf=lambda x: hasattr(x, "shape"))
+            restored = ckpt.restore(tmp, template, mesh=mesh8,
+                                    spec_tree=specs)
+            got = restored.leaves
+            want = want_state.leaves
+            if isinstance(got, ss.StackedLeaves):
+                got = ss.decode(got)
+                want = ss.decode(want)
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(want)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=1e-5, atol=2e-6)
+            print("reshard restore", label, "ok")
     """)

@@ -385,12 +385,127 @@ def test_eqn6_kernel_stacked_axes():
 
 def test_eqn6_ref_oracle_is_sgd_update():
     """ref.eqn6_sgd_update must be bit-identical to correlation.sgd_update
-    (it IS the same fori_loop, re-exposed in the kernel signature)."""
+    (it IS the same fori_loop, re-exposed in the kernel signature) — for
+    the plain AND the normalize variant."""
     g = _rand((64, 48), 7)
     p = _rand((48, 8), 8) / np.sqrt(8)
     mp = 0.1 * _rand((64, 8), 9)
-    got, _val, _grad = ref.eqn6_sgd_update(p, g, mp, lr=0.1, steps=3)
-    want = correlation.sgd_update(p, g, mp, lr=0.1, steps=3)
+    for normalize in (False, True):
+        got, _val, _grad = ref.eqn6_sgd_update(
+            p, g, mp, lr=0.1, steps=3, normalize=normalize
+        )
+        want = correlation.sgd_update(
+            p, g, mp, lr=0.1, steps=3, normalize=normalize
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(16, 400),
+    n=st.integers(24, 500),
+    r=st.sampled_from([8, 32, 100]),
+    steps=st.sampled_from([1, 3]),
+    seed=st.integers(0, 100),
+)
+def test_eqn6_kernel_normalize_matches_oracle(m, n, r, steps, seed):
+    """normalize=True is fused via a first-grid-phase ‖G‖ pre-pass; the
+    result must track the jnp oracle's pre-scaled SGD (including tiny
+    gradients, where normalization is the whole point)."""
+    r = min(r, n)
+    g = 1e-3 * _rand((m, n), seed)  # small G: inert without normalization
+    p = _rand((n, r), seed + 1) / np.sqrt(r)
+    mp = 1e-4 * _rand((m, r), seed + 2)
+    p_new, _val, _grad = eqn6_sgd_update_pallas(
+        p, g, mp, lr=0.1, steps=steps, interpret=True, bm=64, normalize=True
+    )
+    want = correlation.sgd_update(p, g, mp, lr=0.1, steps=steps,
+                                  normalize=True)
+    np.testing.assert_allclose(p_new, want, rtol=1e-4, atol=1e-6)
+    # normalization engaged: the un-normalized refresh would barely move P
+    frozen = correlation.sgd_update(p, g, mp, lr=0.1, steps=steps)
+    assert float(jnp.max(jnp.abs(p_new - p))) > 10 * float(
+        jnp.max(jnp.abs(frozen - p))
+    )
+
+
+def test_eqn6_kernel_normalize_bf16_and_stacked():
+    g = _rand((2, 130, 260), 0, jnp.bfloat16)
+    p = _rand((2, 260, 32), 1) / np.sqrt(32)
+    mp = (0.1 * _rand((2, 130, 32), 2)).astype(jnp.bfloat16)
+    p_new, _v, _g = eqn6_sgd_update_pallas(
+        p, g, mp, lr=0.1, steps=2, interpret=True, bm=64, normalize=True
+    )
+    want = correlation.sgd_update(p, g, mp, lr=0.1, steps=2, normalize=True)
+    np.testing.assert_allclose(p_new, want, rtol=1e-4, atol=1e-6)
+
+
+def test_sgd_update_normalize_routes_fused(monkeypatch):
+    """use_fused + normalize must dispatch the fused kernel — the unfused
+    fallback for normalize is gone (ROADMAP item closed)."""
+    from repro.kernels import ops as kops
+
+    calls = []
+    orig = kops.eqn6_sgd_update
+
+    def counting(*a, **k):
+        calls.append(k.get("normalize"))
+        return orig(*a, **k)
+
+    monkeypatch.setattr(kops, "eqn6_sgd_update", counting)
+    g = _rand((64, 48), 0)
+    p = _rand((48, 8), 1) / np.sqrt(8)
+    mp = 0.1 * _rand((64, 8), 2)
+    correlation.sgd_update(p, g, mp, use_fused=True, normalize=True)
+    assert calls == [True]
+
+
+# ---------------------------------------------------------------------------
+# eqn6 VMEM guard
+# ---------------------------------------------------------------------------
+def test_eqn6_plan_bm_shrinks_and_falls_back():
+    from repro.kernels.eqn6 import Eqn6VmemError, eqn6_vmem_bytes, plan_bm
+
+    # comfortable shapes keep the requested tile
+    assert plan_bm(4096, 256, 64) == 256
+    # tight budget: bm halves until the tile traffic fits
+    assert plan_bm(4096, 512, 128, bm=256, budget=2_500_000) == 128
+    # the resident (n, r) buffers are bm-independent: when they alone bust
+    # the budget no bm helps -> None (LLaMA-1B wide case at 16MB/core)
+    assert plan_bm(4096, 2048, 512, budget=16 * 1024 * 1024) is None
+    # estimate is monotone in bm and accounts bf16 tiles as smaller
+    assert eqn6_vmem_bytes(64, 512, 128) < eqn6_vmem_bytes(256, 512, 128)
+    assert eqn6_vmem_bytes(
+        64, 512, 128, g_itemsize=2, mp_itemsize=2
+    ) < eqn6_vmem_bytes(64, 512, 128)
+    # the kernel wrapper raises the typed error instead of compiling an
+    # unfittable kernel
+    g = _rand((64, 256), 0)
+    p = _rand((256, 64), 1) / 8.0
+    mp = 0.1 * _rand((64, 64), 2)
+    with pytest.raises(Eqn6VmemError):
+        eqn6_sgd_update_pallas(p, g, mp, interpret=True, vmem_budget=1024)
+
+
+def test_eqn6_ops_falls_back_unfused_on_vmem(monkeypatch):
+    """kernels/ops dispatch catches the VMEM error and falls back to the
+    jnp oracle (identical numerics) with a warning, instead of dying."""
+    import warnings
+
+    from repro.kernels import eqn6 as eqn6_mod
+    from repro.kernels import ops as kops
+
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    monkeypatch.setenv(eqn6_mod._VMEM_ENV, "1024")  # nothing fits
+    g = _rand((64, 48), 3)
+    p = _rand((48, 8), 4) / np.sqrt(8)
+    mp = 0.1 * _rand((64, 8), 5)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = kops.eqn6_sgd_update(p, g, mp, lr=0.1, steps=2)
+    assert any("VMEM" in str(w.message) or "Eqn-6" in str(w.message)
+               for w in caught)
+    want = correlation.sgd_update(p, g, mp, lr=0.1, steps=2)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -17,11 +17,12 @@ from repro.train.loop import TrainLoop, TrainLoopConfig
 from repro.train.train_state import TrainState
 
 
-def _setup(tmp, **loop_kw):
+def _setup(tmp, stacked_state=False, **loop_kw):
     cfg = get_smoke("tinyllama-1.1b")
     model = build_model(cfg)
     tx = make_optimizer(OptimizerConfig(name="coap-adamw", learning_rate=1e-3,
-                                        rank=8, t_update=4, lam=2, min_dim=16))
+                                        rank=8, t_update=4, lam=2, min_dim=16,
+                                        stacked_state=stacked_state))
     data = SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.2)
     batch_fn = lambda step, host: data.batch(step, batch=4, seq=16, host=host)
     loop_cfg = TrainLoopConfig(ckpt_dir=os.path.join(tmp, "ckpt"),
@@ -30,17 +31,20 @@ def _setup(tmp, **loop_kw):
     return TrainLoop(model, tx, batch_fn, loop_cfg), model, tx
 
 
-def test_checkpoint_restart_is_exact(tmp_path):
-    """Train 8 steps straight vs 4 + restart + 4: final params identical."""
+@pytest.mark.parametrize("stacked", [False, True])
+def test_checkpoint_restart_is_exact(tmp_path, stacked):
+    """Train 8 steps straight vs 4 + restart + 4: final params identical —
+    for per-leaf AND pre-stacked optimizer state (the restart restores a
+    stacked TrainState through the codec-aware manifest)."""
     loopA, _, _ = _setup(str(tmp_path / "a"), total_steps=8, ckpt_every=100,
-                         log_every=100)
+                         log_every=100, stacked_state=stacked)
     stateA = loopA.run()
 
     loopB1, _, _ = _setup(str(tmp_path / "b"), total_steps=4, ckpt_every=4,
-                          log_every=100)
+                          log_every=100, stacked_state=stacked)
     loopB1.run()
     loopB2, _, _ = _setup(str(tmp_path / "b"), total_steps=8, ckpt_every=100,
-                          log_every=100)
+                          log_every=100, stacked_state=stacked)
     stateB = loopB2.run()
 
     assert int(stateA.step) == int(stateB.step) == 8
