@@ -1,5 +1,5 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke bench-overhead bench-refresh bench-state
+.PHONY: test smoke bench-overhead bench-refresh bench-state bench-conv
 
 test:
 	./scripts/ci.sh
@@ -22,3 +22,9 @@ bench-refresh:
 # plus the measured whole-step cost_analysis comparison).
 bench-state:
 	PYTHONPATH=src:. python benchmarks/run.py --only state
+
+# Regenerates BENCH_conv.json (conv/Tucker-2 refresh: worst-step bytes and
+# per-step launch counts, bucketed+staggered vs the per-leaf synchronized
+# loop, on the conv-heavy reference tree).
+bench-conv:
+	PYTHONPATH=src:. python benchmarks/run.py --only conv

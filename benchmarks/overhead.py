@@ -195,6 +195,38 @@ LLAMA1B_REFRESH_BUCKETS = [
 ]
 
 
+def _staggered_schedule_stats(bucket_list, shape_cost, phase_lists, t_u, lam):
+    """THE schedule-cost accounting, shared by the matrix and conv refresh
+    reports: worst/total refresh cost of a phase schedule over the
+    steady-state ``[1, λ·T_u]`` window (step 0 is the one-time Eqn-7 init,
+    identical under every schedule by design). ``bucket_list`` rows are
+    ``(label, shape_key, leaf_count)``; ``shape_cost[shape_key]`` supplies
+    ``{eqn6,recal}_{bytes,s}`` per leaf; a leaf refreshes when
+    ``(count + phase) % T_u == 0`` and that refresh is an Eqn-7 recal when
+    ``(count + phase) % (λ·T_u) == 0``."""
+    from repro.core.coap_adam import _phase_groups
+
+    def step_cost(count):
+        bytes_, secs = 0.0, 0.0
+        for (_, shape, _cnt), phases in zip(bucket_list, phase_lists):
+            for _s0, sz, ph in _phase_groups(phases):
+                if (count + ph) % t_u == 0:
+                    kind = (
+                        "recal" if (count + ph) % (lam * t_u) == 0 else "eqn6"
+                    )
+                    bytes_ += sz * shape_cost[shape][f"{kind}_bytes"]
+                    secs += sz * shape_cost[shape][f"{kind}_s"]
+        return bytes_, secs
+
+    per_step = [step_cost(c) for c in range(1, lam * t_u + 1)]
+    return {
+        "worst_step_bytes": max(b for b, _ in per_step),
+        "worst_step_seconds": max(s for _, s in per_step),
+        "total_bytes_per_period": sum(b for b, _ in per_step),
+        "refresh_steps": sum(1 for b, _ in per_step if b > 0),
+    }
+
+
 def refresh_stagger_report(t_u=40, lam=5, rank=512, stagger_groups=8,
                            measure=True):
     """Worst-step refresh cost, synchronized vs staggered schedule.
@@ -208,7 +240,7 @@ def refresh_stagger_report(t_u=40, lam=5, rank=512, stagger_groups=8,
     identical under both schedules by design). Phases come from the real
     ``stagger_phases`` allocator, so this measures the shipped schedule.
     """
-    from repro.core.coap_adam import _phase_groups, stagger_phases
+    from repro.core.coap_adam import stagger_phases
 
     sizes = [cnt for _, _, cnt in LLAMA1B_REFRESH_BUCKETS]
     staggered = stagger_phases(sizes, t_u, stagger_groups)
@@ -240,34 +272,12 @@ def refresh_stagger_report(t_u=40, lam=5, rank=512, stagger_groups=8,
             )
         shape_cost[(m, n)] = row
 
-    def step_cost(count, phase_lists):
-        bytes_, secs = 0.0, 0.0
-        for (_, shape, _cnt), phases in zip(
-            LLAMA1B_REFRESH_BUCKETS, phase_lists
-        ):
-            for _s0, sz, ph in _phase_groups(phases):
-                if (count + ph) % t_u == 0:
-                    kind = (
-                        "recal" if (count + ph) % (lam * t_u) == 0 else "eqn6"
-                    )
-                    bytes_ += sz * shape_cost[shape][f"{kind}_bytes"]
-                    secs += sz * shape_cost[shape][f"{kind}_s"]
-        return bytes_, secs
-
-    def schedule_stats(phase_lists):
-        per_step = [step_cost(c, phase_lists) for c in range(1, lam * t_u + 1)]
-        worst_b = max(b for b, _ in per_step)
-        worst_s = max(s for _, s in per_step)
-        total_b = sum(b for b, _ in per_step)
-        return {
-            "worst_step_bytes": worst_b,
-            "worst_step_seconds": worst_s,
-            "total_bytes_per_period": total_b,
-            "refresh_steps": sum(1 for b, _ in per_step if b > 0),
-        }
-
-    sync = schedule_stats(synchronized)
-    stag = schedule_stats(staggered)
+    sync = _staggered_schedule_stats(
+        LLAMA1B_REFRESH_BUCKETS, shape_cost, synchronized, t_u, lam
+    )
+    stag = _staggered_schedule_stats(
+        LLAMA1B_REFRESH_BUCKETS, shape_cost, staggered, t_u, lam
+    )
     assert sync["total_bytes_per_period"] == stag["total_bytes_per_period"], (
         "stagger must not change the total refresh work per period"
     )
@@ -469,6 +479,179 @@ def run_refresh(csv: Csv, fast: bool = False):
         f"  wrote {out_path} (stagger {rb:.1f}x, eqn6 G-stream "
         f"{report['eqn6_g_stream_ratio_min']:.1f}x)"
     )
+
+
+# ---------------------------------------------------------------------------
+# Conv/Tucker-2 bucketing section (BENCH_conv.json)
+# ---------------------------------------------------------------------------
+# Conv-heavy reference tree (the vision/multimodal settings of paper §4.2):
+# three congruent conv buckets of a ConvNeXt/U-Net-scale tower, exactly as
+# ``scale_by_projected_adam`` buckets them under stacked-bucket/v2:
+# (label, (O, I, K1, K2), leaf count).
+CONV_REFRESH_BUCKETS = [
+    ("stage2_3x3", (256, 256, 3, 3), 8),
+    ("stage3_3x3", (512, 512, 3, 3), 16),
+    ("stage4_3x3", (1024, 1024, 3, 3), 4),
+]
+
+
+def conv_refresh_report(t_u=40, lam=5, stagger_groups=8, rank_ratio=4.0,
+                        measure=True):
+    """Worst-step Tucker-2 refresh cost + launch count: conv bucketed vs
+    per-leaf.
+
+    The v1 conv path was a per-leaf Python loop with a SYNCHRONIZED
+    refresh: every ``T_u`` steps every conv leaf pays both factor
+    refreshes at once (the stall PR 2 removed for matrices), and every
+    step dispatches one update per leaf. The v2 path buckets congruent
+    conv leaves and joins them to the staggered schedule: one launch per
+    bucket per step, and on a refresh step only the matching phase group's
+    slice recomputes its factors.
+
+    Accounting mirrors ``refresh_stagger_report``: a factor refresh must
+    stream the leaf's gradient — Eqn-6 sweeps each mode's canonical
+    unfolding once (2·numel·4 bytes per leaf for both factors), Eqn-7
+    recalibration twice per mode (4·numel·4) — and the worst step is taken
+    over the steady-state ``[1, λ·T_u]`` window with phases from the
+    shipped ``stagger_phases`` allocator. Optionally measures per-leaf
+    wall seconds of both refresh kinds at the true canonical shapes.
+    """
+    import math
+
+    from repro.core import conv as conv_mod
+    from repro.core.coap_adam import stagger_phases
+
+    sizes = [cnt for _, _, cnt in CONV_REFRESH_BUCKETS]
+    staggered = stagger_phases(sizes, t_u, stagger_groups)
+    synchronized = [(0,) * cnt for cnt in sizes]
+
+    shape_cost = {}
+    for _, shp, _cnt in CONV_REFRESH_BUCKETS:
+        if shp in shape_cost:
+            continue
+        o, i, k1, k2 = shp
+        numel = o * i * k1 * k2
+        row = {
+            "eqn6_bytes": float(2 * numel * 4),  # one G sweep per mode
+            "recal_bytes": float(4 * numel * 4),  # two sweeps per mode
+            "eqn6_s": 0.0,
+            "recal_s": 0.0,
+        }
+        if measure:
+            ro = max(1, int(o / math.sqrt(rank_ratio)))
+            ri = max(1, int(i / math.sqrt(rank_ratio)))
+            g = jax.random.normal(jax.random.key(0), shp)
+            p_o = jax.random.normal(jax.random.key(1), (o, ro)) / np.sqrt(ro)
+            p_i = jax.random.normal(jax.random.key(2), (i, ri)) / np.sqrt(ri)
+            g1 = conv_mod.mode1_canonical(g)
+            g2 = conv_mod.mode2_canonical(g)
+            m1 = 0.1 * jax.random.normal(jax.random.key(3), (g1.shape[0], ro))
+            m2 = 0.1 * jax.random.normal(jax.random.key(4), (g2.shape[0], ri))
+            eqn6_fn = jax.jit(
+                lambda po, pi, a, b2_, ma, mb: (
+                    correlation.sgd_update(po, a, ma),
+                    correlation.sgd_update(pi, b2_, mb),
+                )
+            )
+            row["eqn6_s"] = time_fn(eqn6_fn, p_o, p_i, g1, g2, m1, m2,
+                                    iters=1)
+            recal_fn = jax.jit(
+                lambda a, b2_, po, pi: (
+                    recalibrate.lowcost_svd(a, po),
+                    recalibrate.lowcost_svd(b2_, pi),
+                )
+            )
+            row["recal_s"] = time_fn(recal_fn, g1, g2, p_o, p_i, iters=1)
+        shape_cost[shp] = row
+
+    sync = _staggered_schedule_stats(
+        CONV_REFRESH_BUCKETS, shape_cost, synchronized, t_u, lam
+    )
+    stag = _staggered_schedule_stats(
+        CONV_REFRESH_BUCKETS, shape_cost, staggered, t_u, lam
+    )
+    assert sync["total_bytes_per_period"] == stag["total_bytes_per_period"], (
+        "stagger must not change the total refresh work per period"
+    )
+    n_leaves = sum(sizes)
+    report = {
+        "t_update": t_u,
+        "lam": lam,
+        "rank_ratio": rank_ratio,
+        "stagger_groups": stagger_groups,
+        "buckets": [
+            {"label": lbl, "shape": list(shp), "leaves": cnt,
+             "phases": list(ph)}
+            for (lbl, shp, cnt), ph in zip(CONV_REFRESH_BUCKETS, staggered)
+        ],
+        "synchronized_per_leaf": sync,
+        "staggered_bucketed": stag,
+        "worst_step_bytes_ratio": (
+            sync["worst_step_bytes"] / stag["worst_step_bytes"]
+        ),
+        "worst_step_seconds_ratio": (
+            sync["worst_step_seconds"] / stag["worst_step_seconds"]
+            if stag["worst_step_seconds"] else None
+        ),
+        # Per-step update dispatches: the per-leaf loop launches one
+        # Algorithm-3 update per conv leaf; the bucketed path launches one
+        # per congruence bucket.
+        "launches_per_step_per_leaf": n_leaves,
+        "launches_per_step_bucketed": len(CONV_REFRESH_BUCKETS),
+        "per_shape_leaf_cost": {
+            f"{o}x{i}x{k1}x{k2}": c
+            for (o, i, k1, k2), c in shape_cost.items()
+        },
+    }
+    return report
+
+
+def run_conv(csv: Csv, fast: bool = False):
+    """Conv/Tucker-2 bucketing section; writes ``BENCH_conv.json``."""
+    print("# conv/Tucker-2 refresh (conv-heavy tree, bucketed vs per-leaf)")
+    rep = conv_refresh_report(measure=not fast)
+    rb = rep["worst_step_bytes_ratio"]
+    rs = rep["worst_step_seconds_ratio"]
+    rs_str = f"{rs:.1f}x" if rs is not None else "n/a"
+    csv.add(
+        "conv/stagger_worst_step", 0.0,
+        f"bytes_ratio={rb:.1f}x;seconds_ratio={rs_str};launches="
+        f"{rep['launches_per_step_per_leaf']}->"
+        f"{rep['launches_per_step_bucketed']}",
+    )
+    print(
+        f"  worst-step conv refresh: per-leaf sync "
+        f"{rep['synchronized_per_leaf']['worst_step_bytes']/1e6:9.1f} MB -> "
+        f"bucketed staggered "
+        f"{rep['staggered_bucketed']['worst_step_bytes']/1e6:9.1f} MB "
+        f"({rb:.1f}x better; wall-time ratio {rs_str})"
+    )
+    print(
+        f"  per-step update launches: {rep['launches_per_step_per_leaf']} "
+        f"(per-leaf loop) -> {rep['launches_per_step_bucketed']} "
+        f"(one per bucket)"
+    )
+    report = {
+        "conv_refresh": rep,
+        "method": (
+            "per-leaf refresh cost = gradient bytes both Tucker factor "
+            "refreshes must stream (Eqn-6: one canonical-unfolding sweep "
+            "per mode = 2*numel*4 B; Eqn-7 recal: two per mode) and "
+            "optionally measured per-leaf wall seconds at the true "
+            "canonical shapes; worst step over the steady-state lam*T_u "
+            "window, phases from the shipped stagger_phases allocator over "
+            "the conv buckets. launch counts: per-leaf Algorithm-3 loop = "
+            "one update dispatch per conv leaf per step; bucketed = one "
+            "per (shape, spec, dtype) bucket."
+        ),
+    }
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_conv.json",
+    )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"  wrote {out_path} (worst-step bytes ratio {rb:.1f}x)")
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ def main() -> None:
                     help="trim the largest shapes / fewest steps")
     ap.add_argument("--only", default="",
                     help="comma list: memory,svd,overhead,refresh,state,"
-                         "fig3,table7,fig4,t5q")
+                         "conv,fig3,table7,fig4,t5q")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +40,8 @@ def main() -> None:
         overhead.run_refresh(csv, fast=args.fast)
     if want("state"):
         overhead.run_state(csv, fast=args.fast)
+    if want("conv"):
+        overhead.run_conv(csv, fast=args.fast)
     steps = 80 if args.fast else 200
     if want("fig3"):
         convergence.fig3_ceu(csv, steps=steps)

@@ -21,7 +21,10 @@ smoke() {
   # route and the quantized dense path end-to-end through pallas interpret;
   # the stacked-state picks run the pre-stacked bucket storage (A/B parity
   # vs per-leaf, int8 included, plus a cross-mode checkpoint restore)
-  # through the same interpret-mode kernels.
+  # through the same interpret-mode kernels; the conv-bucketing picks run
+  # the stacked-bucket/v2 conv path (one launch per conv bucket, staggered
+  # Tucker-2 refresh, per-leaf A/B parity incl. the int8 flat codec)
+  # through the interpret-mode quantizer bodies.
   REPRO_PALLAS=interpret python -m pytest -q \
     tests/test_kernels.py \
     tests/test_bucketing.py::test_mixed_tree_full_optimizer_runs \
@@ -30,7 +33,10 @@ smoke() {
     "tests/test_refresh.py::test_bf16_gradients_stream_without_numeric_drift" \
     "tests/test_stacked_state.py::test_stacked_matches_per_leaf" \
     tests/test_stacked_state.py::test_stacked_bf16_gradient_streaming_parity \
-    "tests/test_stacked_state.py::test_checkpoint_cross_mode_restore[True-float32]"
+    "tests/test_stacked_state.py::test_checkpoint_cross_mode_restore[True-float32]" \
+    "tests/test_conv_bucketing.py::test_conv_bucketed_matches_per_leaf" \
+    tests/test_conv_bucketing.py::test_conv_staggered_cadence_period_t_u \
+    "tests/test_conv_bucketing.py::test_conv_stacked_state_matches_per_leaf[True]"
 }
 
 if [[ "${1:-}" == "smoke" ]]; then

@@ -5,10 +5,11 @@ of the optimizer state; since our states are explicit pytrees we reproduce
 those columns by *arithmetic over the actual state*, not estimation.
 
 Stacked-state aware: a ``StackedLeaves`` node (core/stacked_state.py) is
-walked through its buckets and tail, so its stacked leaf-states land in the
-same categories as their per-leaf equivalents — stacking B equal-shape
-arrays is byte-neutral, and ``tests/test_stacked_state.py`` pins the byte
-tables of the two layouts equal.
+walked through its buckets and tail — projected, conv (Tucker-2,
+stacked-bucket/v2) and dense buckets alike — so its stacked leaf-states
+land in the same categories as their per-leaf equivalents: stacking B
+equal-shape arrays is byte-neutral, and ``tests/test_stacked_state.py`` /
+``tests/test_conv_bucketing.py`` pin the byte tables of the layouts equal.
 """
 from __future__ import annotations
 

@@ -29,8 +29,16 @@ checkpointing, accounting and compression use). The adafactor update still
 COMPUTES per leaf through ``leaf_view`` slices (bit-identical to the
 per-leaf mode by construction); porting the bucket+phase hot-path machinery
 from ``coap_adam.update_fn`` is the existing "staggered adafactor refresh"
-ROADMAP item. Every non-projected leaf (conv included) takes the dense
-Adafactor path, so the layout classifies only project/dense — no tail.
+ROADMAP item.
+
+CONV NOTE. Algorithm 2 has no Tucker-2 path: every non-projected leaf —
+conv ``(O,I,K1,K2)`` kernels included — takes the dense Adafactor path.
+``_af_classify`` therefore maps conv specs to ``BUCKET_DENSE``, never to
+the ``stacked-bucket/v2`` conv bucket class the Adam transform uses: the
+adafactor layout has no conv buckets and no tail, and the v1→v2 codec bump
+(which only changed where KIND_CONV leaves live under the DEFAULT
+classification) does not alter its bucket assignment
+(``tests/test_conv_bucketing.py::test_adafactor_layout_unaffected_by_v2``).
 """
 from __future__ import annotations
 

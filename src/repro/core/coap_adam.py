@@ -27,14 +27,15 @@ dequant, moment EMA, requant, back-project — runs as ONE fused kernel with
 no fp32 M/V or Δ_proj ever materialized in HBM. Dense and conv int8 states
 keep the flat (nblocks, 256) codec.
 
-``update_fn`` batches congruent leaves: all projected (or dense) leaves
+``update_fn`` batches congruent leaves: all projected, conv or dense leaves
 sharing a ``(shape, spec, dtype)`` signature are stacked along a new leading
 axis and updated by a single (vmapped) kernel launch — a transformer's
-dozens of per-layer matrices become a handful of dispatches per step instead
-of one per leaf. Bucketing is numerics-neutral: every code path broadcasts
-over leading axes, and flora's per-leaf RNG keys fold in the ORIGINAL flat
-leaf index, so bucketed and per-leaf execution produce identical bits
-(``bucket_leaves=False`` keeps the per-leaf loop for A/B checks).
+dozens of per-layer matrices, or a vision tower's per-block conv kernels,
+become a handful of dispatches per step instead of one per leaf. Bucketing
+is numerics-neutral: every code path broadcasts over leading axes, and
+flora's per-leaf RNG keys fold in the ORIGINAL flat leaf index, so bucketed
+and per-leaf execution produce identical bits (``bucket_leaves=False``
+keeps the per-leaf loop for A/B checks).
 
 STAGGERED REFRESH (``stagger=True``, default): the paper-faithful schedule
 refreshes EVERY projected leaf at ``count % T_u == 0`` — a synchronized
@@ -61,7 +62,11 @@ synchronized cost (U = total phase groups). Semantics preserved exactly:
 ``stagger=False`` restores the synchronized schedule bit-for-bit.
 Flora's per-step resample (T_u=1) degenerates to a single phase-0 group and
 is unchanged; with T_u>1 its resamples stagger for free. Conv (Tucker-2)
-leaves keep the synchronized per-leaf schedule (ROADMAP open item).
+leaves are on the SAME staggered schedule since stacked-bucket/v2: each
+conv bucket's phase units are allocated by ``stagger_phases`` right after
+the projected buckets' (``layout.staggerable_bucket_sizes()``), and both
+Tucker factors of a phase group refresh inside one ``lax.switch`` branch
+(``conv.update_conv_bucket``).
 
 PRE-STACKED STATE (``stacked_state=True``): with per-leaf state storage the
 stack/scatter round-trip at the bucket boundary is real copy traffic every
@@ -80,8 +85,9 @@ either mode restores into the other. ``stacked_state=False`` (the default)
 keeps today's per-leaf layout bit-for-bit, and the two modes produce
 bit-identical updates and states — fp32, bf16 streaming, int8 codes and
 flora RNG included (``tests/test_stacked_state.py``). Conv (Tucker-2)
-leaves stay per-leaf in the stacked layout's residual tail (ROADMAP open
-item: conv bucketing).
+leaves bucket and pre-stack like everything else under the
+``stacked-bucket/v2`` codec (``tests/test_conv_bucketing.py``); a custom
+``classify`` can still route leaves to the per-leaf residual tail.
 """
 from __future__ import annotations
 
@@ -234,11 +240,11 @@ def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
 
 
 def _layout_of(cfg: ProjectedAdamConfig, flat) -> stacked_state.StackedLayout:
-    """THE bucket assignment for this transform: projected/dense leaves
-    bucket by congruence signature, conv (Tucker-2) leaves go to the
-    per-leaf tail (the default classify). Shared with the stacked-state
-    codec so checkpoint / accounting / compression consumers see the
-    identical grouping."""
+    """THE bucket assignment for this transform: projected, conv (Tucker-2)
+    and dense leaves each bucket by congruence signature (the default
+    ``classify_default`` — the stacked-bucket/v2 layout). Shared with the
+    stacked-state codec so checkpoint / accounting / compression consumers
+    see the identical grouping."""
     return stacked_state.layout_for_flat(cfg.rules.spec_for, flat)
 
 
@@ -719,10 +725,11 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         new_updates = [None] * n_leaves
 
         # Bucket congruent leaves: one (vmapped) kernel launch per
-        # (shape, spec, dtype) group instead of one per leaf. Conv leaves
-        # keep the per-leaf Tucker-2 path (Algorithm 3) in the layout's
-        # residual tail. The layout is THE bucket assignment shared with
-        # the stacked-state codec (checkpoint/accounting/compression).
+        # (shape, spec, dtype) group instead of one per leaf — conv
+        # (Tucker-2) leaves included since stacked-bucket/v2 (Algorithm 3
+        # batched over the bucket axis; conv_mod.update_conv_bucket). The
+        # layout is THE bucket assignment shared with the stacked-state
+        # codec (checkpoint/accounting/compression).
         layout = _layout_of(cfg, flat_u)
 
         if cfg.stacked_state:
@@ -742,21 +749,26 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
             prev = None
             flat_s = treedef.flatten_up_to(state.leaves)
 
-        # Per-leaf refresh phases (staggered schedule): allocated per
-        # projected bucket in tree order, identically in every mode.
+        # Per-leaf refresh phases (staggered schedule): allocated over the
+        # staggerable buckets — projected then conv, in tree order —
+        # identically in every mode.
         if cfg.stagger and cfg.t_update > 1:
             phase_lists = stagger_phases(
-                layout.proj_bucket_sizes(), cfg.t_update, cfg.stagger_groups
+                layout.staggerable_bucket_sizes(), cfg.t_update,
+                cfg.stagger_groups,
             )
         else:
             phase_lists = [
-                (0,) * sz for sz in layout.proj_bucket_sizes()
+                (0,) * sz for sz in layout.staggerable_bucket_sizes()
             ]
 
         new_buckets = [None] * len(layout.buckets)
         new_tail = [None] * len(layout.tail)
         new_flat = [None] * n_leaves  # per-leaf mode only
 
+        # Residual tail (empty under the default v2 classification; a
+        # custom classify may still route conv leaves here — they keep the
+        # synchronized per-leaf Algorithm-3 path).
         for j, tinfo in enumerate(layout.tail):
             leaf = prev.tail[j] if cfg.stacked_state else flat_s[tinfo.index]
             u, nl = conv_mod.update_conv_leaf(
@@ -767,12 +779,13 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
             new_tail[j] = nl
             new_flat[tinfo.index] = nl
 
-        proj_i = 0
+        stag_i = 0
         for bi, info in enumerate(layout.buckets):
             is_proj = info.kind == stacked_state.BUCKET_PROJECT
-            phases = phase_lists[proj_i] if is_proj else None
-            if is_proj:
-                proj_i += 1
+            is_conv = info.kind == stacked_state.BUCKET_CONV
+            phases = phase_lists[stag_i] if (is_proj or is_conv) else None
+            if is_proj or is_conv:
+                stag_i += 1
             if cfg.bucket_leaves:
                 slot_groups = [tuple(range(len(info.indices)))]
             else:  # per-leaf A/B mode (stacked_state forbids this)
@@ -792,6 +805,12 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 if is_proj:
                     u_stack, nl_stack = _update_proj_bucket(
                         leaf_stack, g_stack, info.spec, count, t,
+                        jnp.asarray(idxs, jnp.int32),
+                        tuple(phases[k] for k in slots),
+                    )
+                elif is_conv:
+                    u_stack, nl_stack = conv_mod.update_conv_bucket(
+                        cfg, leaf_stack, g_stack, info.spec, count, t,
                         jnp.asarray(idxs, jnp.int32),
                         tuple(phases[k] for k in slots),
                     )

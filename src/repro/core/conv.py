@@ -12,6 +12,14 @@ Eqn-6 / Eqn-7 machinery as the matrix case applied to the mode-1 / mode-2
 unfoldings of G (appendix §1.5): for the ``P_O`` update the canonical matrix
 is ``unfold₁(G)ᵀ ∈ R^{(I·K1·K2)×O}`` so the half-restored first moment
 ``M_proj ×₂ P_I`` provides the direction term.
+
+Every primitive broadcasts over leading (bucket) axes — the same conv
+weight shape stacked ``(B, O, I, K1, K2)`` projects/restores with the
+identical pinned contraction order — which is what lets
+``scale_by_projected_adam`` run one Algorithm-3 launch per congruent conv
+bucket (:func:`update_conv_bucket`) instead of a per-leaf Python loop,
+with the staggered ``lax.switch`` phase-group refresh shared with the
+matrix path.
 """
 from __future__ import annotations
 
@@ -23,6 +31,8 @@ from jax import lax
 
 from repro.core import correlation, recalibrate
 from repro.core.projector import ProjSpec
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 def init_factors(key, w_shape, spec: ProjSpec):
@@ -42,16 +52,16 @@ def core_shape(w_shape, spec: ProjSpec) -> Tuple[int, ...]:
 
 
 def mode1_canonical(g: jnp.ndarray) -> jnp.ndarray:
-    """(O,I,K1,K2) -> unfold₁ᵀ = (I·K1·K2, O): canonical m≥n matrix whose
-    right-projection P is P_O."""
-    o = g.shape[0]
-    return jnp.moveaxis(g, 0, -1).reshape(-1, o)
+    """(...,O,I,K1,K2) -> unfold₁ᵀ = (...,I·K1·K2, O): canonical m≥n matrix
+    whose right-projection P is P_O. Leading (bucket) axes broadcast."""
+    o = g.shape[-4]
+    return jnp.moveaxis(g, -4, -1).reshape(g.shape[:-4] + (-1, o))
 
 
 def mode2_canonical(g: jnp.ndarray) -> jnp.ndarray:
-    """(O,I,K1,K2) -> (O·K1·K2, I): right-projection P is P_I."""
-    i = g.shape[1]
-    return jnp.moveaxis(g, 1, -1).reshape(-1, i)
+    """(...,O,I,K1,K2) -> (...,O·K1·K2, I): right-projection P is P_I."""
+    i = g.shape[-3]
+    return jnp.moveaxis(g, -3, -1).reshape(g.shape[:-4] + (-1, i))
 
 
 def project_core(g: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
@@ -62,25 +72,27 @@ def project_core(g: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndar
     (tests/test_core_conv.py) assume this order. A single three-operand
     einsum lets the contraction path vary by backend.
     """
-    half = jnp.einsum("oikl,ib->obkl", g, p_i)
-    return jnp.einsum("obkl,oa->abkl", half, p_o)
+    half = jnp.einsum("...oikl,...ib->...obkl", g, p_i)
+    return jnp.einsum("...obkl,...oa->...abkl", half, p_o)
 
 
 def restore_core(core: jnp.ndarray, p_o: jnp.ndarray, p_i: jnp.ndarray) -> jnp.ndarray:
     """ΔW = core ×₁ P_O ×₂ P_I (mode-1 first; adjoint of ``project_core``)."""
-    half = jnp.einsum("abkl,oa->obkl", core, p_o)
-    return jnp.einsum("obkl,ib->oikl", half, p_i)
+    half = jnp.einsum("...abkl,...oa->...obkl", core, p_o)
+    return jnp.einsum("...obkl,...ib->...oikl", half, p_i)
 
 
 def _half_restored_m(m_core, p_o, p_i, mode: int):
     """First moment restored on the *other* mode, reshaped to the canonical
-    projected layout for the Eqn-6 direction term of this mode's factor."""
-    if mode == 1:  # updating P_O: restore mode-2 -> (r_O, I, K1, K2)
-        half = jnp.einsum("abkl,ib->aikl", m_core, p_i)
-        # canonical m_proj: (I*K1*K2, r_O)
-        return jnp.moveaxis(half, 0, -1).reshape(-1, p_o.shape[1])
-    half = jnp.einsum("abkl,oa->obkl", m_core, p_o)  # (O, r_I, K1, K2)
-    return jnp.moveaxis(half, 1, -1).reshape(-1, p_i.shape[1])
+    projected layout for the Eqn-6 direction term of this mode's factor.
+    Leading (bucket) axes broadcast."""
+    lead = m_core.shape[:-4]
+    if mode == 1:  # updating P_O: restore mode-2 -> (..., r_O, I, K1, K2)
+        half = jnp.einsum("...abkl,...ib->...aikl", m_core, p_i)
+        # canonical m_proj: (..., I*K1*K2, r_O)
+        return jnp.moveaxis(half, -4, -1).reshape(lead + (-1, p_o.shape[-1]))
+    half = jnp.einsum("...abkl,...oa->...obkl", m_core, p_o)
+    return jnp.moveaxis(half, -3, -1).reshape(lead + (-1, p_i.shape[-1]))
 
 
 def _refresh_factor(cfg, p, g_canon, m_proj_canon, count, leaf_idx, rank, mode):
@@ -115,6 +127,199 @@ def _refresh_factor(cfg, p, g_canon, m_proj_canon, count, leaf_idx, rank, mode):
         do_ref,
         lambda: recalibrate.random_projection(key, g_canon.shape, rank, p.dtype),
         lambda: p,
+    )
+
+
+def refresh_factors(cfg, p_o, p_i, g1, g2, m_core, do_recal):
+    """THE coap-strategy Tucker-2 factor refresh, defined once: Eqn-7
+    low-cost SVD of both mode unfoldings when ``do_recal``, else one Eqn-6
+    SGD step per factor with the half-restored first moment as direction
+    term. ``g1``/``g2`` are the mode-1/mode-2 canonicals of the (averaged)
+    gradient; everything broadcasts over leading bucket axes. Shared by the
+    bucketed hot path (:func:`update_conv_bucket`) and the cross-pod
+    compression path so the two can never drift apart."""
+
+    def recal():
+        return (
+            recalibrate.lowcost_svd(g1, p_o),
+            recalibrate.lowcost_svd(g2, p_i),
+        )
+
+    def eqn6():
+        m1 = _half_restored_m(m_core, p_o, p_i, mode=1)
+        m2 = _half_restored_m(m_core, p_o, p_i, mode=2)
+        kw = dict(lr=cfg.eqn6_lr, steps=cfg.eqn6_steps,
+                  normalize=cfg.eqn6_normalize)
+        return (
+            correlation.sgd_update(p_o, g1, m1, **kw),
+            correlation.sgd_update(p_i, g2, m2, **kw),
+        )
+
+    return lax.cond(do_recal, recal, eqn6)
+
+
+def _load_stack(stored, scale, csh, cfg):
+    """Stacked conv moments -> fp32 (B, *csh), one dequant launch.
+
+    Quantized conv states keep the flat (nblocks, 256) codec per leaf; a
+    stacked bucket holds (B, nblocks, 256) codes + (B, nblocks) scales.
+    Blocks are PER-LEAF (each leaf zero-padded to a block multiple on its
+    own), so reshaping to (B·nblocks, 256) and dequantizing once yields the
+    bit-identical values per-leaf dequantization would."""
+    if not cfg.quantize:
+        return stored.astype(jnp.float32)
+    b, nblocks, blk = stored.shape
+    flat = kops.dequantize_blockwise(
+        stored.reshape(b * nblocks, blk), scale.reshape(b * nblocks),
+        (b * nblocks * blk,), block=blk,
+    )
+    numel = 1
+    for s in csh:
+        numel *= int(s)
+    return flat.reshape(b, nblocks * blk)[:, :numel].reshape((b,) + tuple(csh))
+
+
+def _store_stack(x, cfg):
+    """fp32 (B, *csh) -> stacked flat-codec storage, one quantize launch.
+
+    Pads each leaf row to a block multiple independently (matching the
+    per-leaf codec's zero padding) so the emitted int8 codes and scales are
+    bit-identical to quantizing each leaf separately."""
+    if not cfg.quantize:
+        return x.astype(cfg.state_dtype), jnp.zeros((x.shape[0], 1), jnp.float32)
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    pad = (-flat.shape[1]) % cfg.quant_block
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((b, pad), flat.dtype)], axis=1
+        )
+    q, s = kops.quantize_blockwise(flat, block=cfg.quant_block)
+    nblocks = flat.shape[1] // cfg.quant_block
+    return q.reshape(b, nblocks, cfg.quant_block), s.reshape(b, nblocks)
+
+
+def update_conv_bucket(cfg, leaf, g, spec: ProjSpec, count, t, idx_arr,
+                       phases=None):
+    """One Algorithm-3 step for a STACKED bucket of congruent conv leaves.
+
+    Every ``ConvLeaf`` field and ``g`` carry a leading ``(B,)`` bucket axis
+    (B == 1 for singleton buckets). Both Tucker modes refresh inside the
+    same staggered ``lax.switch`` group dispatch the matrix path uses —
+    leaf b refreshes when ``(count + phases[b]) % T_u == 0`` (recalibrates
+    at ``λ·T_u`` likewise) plus the mandatory Eqn-7 initialization for the
+    whole bucket at count == 0 — and the per-step Tucker-2 core projection
+    + Adam moment update run as ONE batched launch per bucket. ``idx_arr``
+    (B,) holds the ORIGINAL flat leaf indices: flora folds ``7919·idx +
+    mode`` into its per-leaf RNG keys, so bucketing never changes the
+    random stream. Returns (update (B,O,I,K1,K2), new_leaf).
+    """
+    from repro.core.coap_adam import (  # circular-safe
+        ConvLeaf,
+        _phase_groups,
+        _sched_preds,
+        _stagger_dispatch,
+    )
+
+    b = g.shape[0]
+    if phases is None:
+        phases = (0,) * b
+    groups = _phase_groups(phases)
+    t_u = cfg.t_update
+
+    g32 = g.astype(jnp.float32)
+    csh = core_shape(g.shape[1:], spec)
+    m = _load_stack(leaf.m, leaf.m_scale, csh, cfg)
+    v = _load_stack(leaf.v, leaf.v_scale, csh, cfg)
+
+    # Per-leaf canonical unfolding shapes (flora's resample target): the
+    # transposed copies themselves are built only inside refresh branches,
+    # so non-refresh steps never pay the two extra G-sized streams.
+    o, i = g.shape[1], g.shape[2]
+    k = 1
+    for s in g.shape[3:]:
+        k *= int(s)
+    g1_shape = (i * k, o)  # mode-1 canonical, per leaf
+    g2_shape = (o * k, i)  # mode-2 canonical, per leaf
+
+    def refresh_slice(sl, ph):
+        """New (p_o, p_i) for the bucket-axis slice ``sl`` (strategy-aware;
+        same schedule as the matrix _refresh_p, applied to both modes)."""
+        p_o_g, p_i_g = leaf.p_o[sl], leaf.p_i[sl]
+        g1_g = mode1_canonical(g32[sl])  # (B_g, I*K1*K2, O)
+        g2_g = mode2_canonical(g32[sl])  # (B_g, O*K1*K2, I)
+        if cfg.strategy == "coap":
+            _, do_recal = _sched_preds(count, ph, t_u, cfg.lam)
+            return refresh_factors(
+                cfg, p_o_g, p_i_g, g1_g, g2_g, m[sl], do_recal
+            )
+        if cfg.strategy == "galore":
+            return (
+                recalibrate.galore_svd(g1_g, spec.rank_o).astype(leaf.p_o.dtype),
+                recalibrate.galore_svd(g2_g, spec.rank_i).astype(leaf.p_i.dtype),
+            )
+
+        # flora: per-leaf keys fold in the ORIGINAL flat index and mode,
+        # exactly as the per-leaf path (update_conv_leaf._refresh_factor).
+        def resample(mode, canon_shape, rank, dtype):
+            def one(i):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(
+                        jax.random.key(cfg.seed), 7919 * i + mode
+                    ),
+                    count,
+                )
+                return recalibrate.random_projection(
+                    key, canon_shape, rank, dtype
+                )
+
+            return jax.vmap(one)(idx_arr[sl])
+
+        return (
+            resample(1, g1_shape, spec.rank_o, leaf.p_o.dtype),
+            resample(2, g2_shape, spec.rank_i, leaf.p_i.dtype),
+        )
+
+    if len(groups) == 1:
+        do_ref, _ = _sched_preds(count, groups[0][2], t_u, cfg.lam)
+        p_o, p_i = lax.cond(
+            do_ref,
+            lambda: refresh_slice(slice(None), groups[0][2]),
+            lambda: (leaf.p_o, leaf.p_i),
+        )
+    else:
+        def group_fn(s0, sz, ph):
+            po_g, pi_g = refresh_slice(slice(s0, s0 + sz), ph)
+            return (
+                leaf.p_o.at[s0:s0 + sz].set(po_g),
+                leaf.p_i.at[s0:s0 + sz].set(pi_g),
+            )
+
+        p_o, p_i = _stagger_dispatch(
+            groups, count, t_u,
+            noop=lambda: (leaf.p_o, leaf.p_i),
+            group_fn=group_fn,
+            # t=0: Eqn-7 initialization for the whole bucket regardless of
+            # phase (do_recal is True at count==0 inside refresh_slice).
+            full_fn=lambda: refresh_slice(slice(None), 0),
+        )
+
+    g_core = project_core(g32, p_o, p_i)
+    new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_core
+    new_v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g_core)
+    tf = t.astype(jnp.float32)
+    delta_core = (new_m / (1.0 - cfg.b1**tf)) / (
+        jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+    )
+    if cfg.quantize:  # int8-v underflow guard (see kernels/ref.py)
+        delta_core = jnp.clip(
+            delta_core, -kref.QUANT_DELTA_CLIP, kref.QUANT_DELTA_CLIP
+        )
+    update = restore_core(delta_core, p_o, p_i) * cfg.update_scale
+    sm, sms = _store_stack(new_m, cfg)
+    sv, svs = _store_stack(new_v, cfg)
+    return update.astype(g.dtype), ConvLeaf(
+        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs
     )
 
 

@@ -11,12 +11,14 @@ gradient stack and update scatter remain on the hot path.
 
 LAYOUT.  A stacked optimizer state is a :class:`StackedLeaves` pytree node:
 
-  * ``buckets`` — one stacked leaf-state (``ProjLeaf``/``DenseLeaf``/…,
-    every field carrying a leading ``(B,)`` bucket axis) per congruence
-    bucket, projected buckets first, then dense buckets, each in tree
-    (insertion) order;
-  * ``tail`` — a residual tuple of PER-LEAF states for leaves that do not
-    bucket (conv/Tucker-2 leaves keep the per-leaf Algorithm-3 path);
+  * ``buckets`` — one stacked leaf-state (``ProjLeaf``/``ConvLeaf``/
+    ``DenseLeaf``/…, every field carrying a leading ``(B,)`` bucket axis)
+    per congruence bucket: projected buckets first, then conv (Tucker-2)
+    buckets, then dense buckets, each in tree (insertion) order;
+  * ``tail`` — a residual tuple of PER-LEAF states for leaves that a
+    caller's ``classify`` routes to per-leaf storage (empty under the
+    default classification since v2 buckets conv; ``classify_v1``
+    reproduces the v1 conv-in-tail layout);
   * ``layout`` — static aux data (:class:`StackedLayout`): which original
     flat leaf index lives in which bucket slot, its tree path, and its
     ``ProjSpec``.  The layout is a pure function of the param tree and the
@@ -42,11 +44,25 @@ knowledge of which mode produced it:
     checkpoint written in either mode into a template of either mode.
 
 VERSIONING.  Stacked checkpoint entries are tagged ``codec:
-"stacked-bucket/v1"`` (:data:`STACKED_CODEC`).  v1 semantics: ``axis`` 0 is
-the bucket axis; ``slots[j]`` is the logical per-leaf path of slice ``j``;
-slices are bit-exact views (no transform is applied by the codec).  Any
-future layout change (e.g. conv/Tucker-2 bucketing) must bump the version
-string so old readers fail loudly instead of mis-slicing.
+"stacked-bucket/v2"`` (:data:`STACKED_CODEC`).  Shared slice semantics
+(v1 == v2 per entry): ``axis`` 0 is the bucket axis; ``slots[j]`` is the
+logical per-leaf path of slice ``j``; slices are bit-exact views (no
+transform is applied by the codec).  The version records the LAYOUT a
+writer produces:
+
+  * ``stacked-bucket/v1`` — conv (Tucker-2) leaves live in the per-leaf
+    TAIL (plain 'leaf' manifest entries); only matrix/dense leaves stack.
+  * ``stacked-bucket/v2`` — conv leaves bucket by ``(spec, shape, dtype)``
+    like everything else (:data:`BUCKET_CONV`) and their ``ConvLeaf``
+    fields stack along axis 0.
+
+Because per-entry semantics did not change, v2 readers decode v1 entries
+directly (:data:`DECODABLE_CODECS`) and assemble conv buckets slot-by-slot
+from the v1 tail's per-leaf entries through the shared logical-path
+namespace — and a v1-layout template restores from a v2 checkpoint by
+slicing the conv bucket entries.  Any future change to the slice semantics
+must bump the version string again so old readers fail loudly instead of
+mis-slicing; readers reject every codec outside ``DECODABLE_CODECS``.
 
 A/B GUARANTEE.  ``ProjectedAdamConfig(stacked_state=False)`` keeps today's
 per-leaf layout bit-for-bit; ``stacked_state=True`` must produce the same
@@ -63,19 +79,25 @@ import jax.numpy as jnp
 
 from repro.core.projector import KIND_CONV, KIND_PROJECT, ProjSpec, path_str
 
-STACKED_STATE_VERSION = 1
-STACKED_CODEC = "stacked-bucket/v1"
+STACKED_STATE_VERSION = 2
+STACKED_CODEC_V1 = "stacked-bucket/v1"
+STACKED_CODEC = "stacked-bucket/v2"
+# Codecs this build can read (slice semantics are identical; the version
+# names the writer's LAYOUT — see module docstring). Anything else fails
+# loudly at restore time.
+DECODABLE_CODECS = frozenset({STACKED_CODEC_V1, STACKED_CODEC})
 
 # build_layout classifications.
 BUCKET_PROJECT = "project"  # congruent low-rank leaves, stacked
+BUCKET_CONV = "conv"  # congruent Tucker-2 conv leaves, stacked (v2)
 BUCKET_DENSE = "dense"  # congruent dense leaves, stacked
-BUCKET_TAIL = "tail"  # per-leaf residual (conv/Tucker-2, …)
+BUCKET_TAIL = "tail"  # per-leaf residual (v1 conv layout, exotic leaves)
 
 
 class BucketInfo(NamedTuple):
     """Static description of one congruence bucket."""
 
-    kind: str  # BUCKET_PROJECT | BUCKET_DENSE
+    kind: str  # BUCKET_PROJECT | BUCKET_CONV | BUCKET_DENSE
     spec: ProjSpec
     shape: Tuple[int, ...]  # original leaf shape
     dtype: str  # original leaf dtype name
@@ -118,6 +140,17 @@ class StackedLayout:
             len(b.indices) for b in self.buckets if b.kind == BUCKET_PROJECT
         ]
 
+    def conv_bucket_sizes(self) -> List[int]:
+        return [
+            len(b.indices) for b in self.buckets if b.kind == BUCKET_CONV
+        ]
+
+    def staggerable_bucket_sizes(self) -> List[int]:
+        """Leaf counts of every bucket on the staggered refresh schedule —
+        projected buckets then conv buckets, in bucket order (the order
+        ``stagger_phases`` allocates phase units over)."""
+        return self.proj_bucket_sizes() + self.conv_bucket_sizes()
+
     def signature(self):
         """Dtype-erased structural identity. The state layout depends on
         shapes/specs only — gradients may legally stream in a different
@@ -135,6 +168,27 @@ class StackedLayout:
         )
 
 
+def classify_default(spec: ProjSpec) -> str:
+    """v2 classification: projected and conv leaves each bucket by their
+    congruence signature; everything else is dense."""
+    if spec.kind == KIND_PROJECT:
+        return BUCKET_PROJECT
+    if spec.kind == KIND_CONV:
+        return BUCKET_CONV
+    return BUCKET_DENSE
+
+
+def classify_v1(spec: ProjSpec) -> str:
+    """The ``stacked-bucket/v1`` classification: conv (Tucker-2) leaves go
+    to the per-leaf tail. Kept for cross-version checkpoint tests and for
+    re-encoding a state into the legacy layout."""
+    if spec.kind == KIND_PROJECT:
+        return BUCKET_PROJECT
+    if spec.kind == KIND_CONV:
+        return BUCKET_TAIL
+    return BUCKET_DENSE
+
+
 def build_layout(
     spec_fn: Callable[[str, Sequence[int]], ProjSpec],
     paths: Sequence[str],
@@ -144,23 +198,19 @@ def build_layout(
 ) -> StackedLayout:
     """THE bucket assignment, shared by every producer and consumer.
 
-    Identical grouping to ``scale_by_projected_adam.update_fn``: projected
-    leaves bucket by ``(spec, shape, dtype)``, dense leaves by
-    ``(shape, dtype)``, both in tree (insertion) order; ``classify`` maps a
-    spec to project/dense/tail (default: ``KIND_PROJECT`` projects,
-    ``KIND_CONV`` goes to the tail, everything else is dense).
-    Projected buckets come first in ``layout.buckets`` so stagger phases
-    line up with the per-leaf schedule.
+    Identical grouping to ``scale_by_projected_adam.update_fn``: projected,
+    conv and dense leaves each bucket by ``(spec, shape, dtype)`` in tree
+    (insertion) order; ``classify`` maps a spec to project/conv/dense/tail
+    (default :func:`classify_default`: ``KIND_PROJECT`` projects,
+    ``KIND_CONV`` buckets as conv — the v2 layout — everything else is
+    dense). Projected buckets come first in ``layout.buckets``, then conv
+    buckets, then dense, so stagger phases line up with the per-leaf
+    schedule (``staggerable_bucket_sizes``).
     """
     if classify is None:
-        def classify(spec: ProjSpec) -> str:
-            if spec.kind == KIND_PROJECT:
-                return BUCKET_PROJECT
-            if spec.kind == KIND_CONV:
-                return BUCKET_TAIL
-            return BUCKET_DENSE
+        classify = classify_default
 
-    proj, dense = {}, {}
+    proj, conv, dense = {}, {}, {}
     tail: List[TailInfo] = []
     for idx, (path, shape, dtype) in enumerate(zip(paths, shapes, dtypes)):
         shape = tuple(int(s) for s in shape)
@@ -169,14 +219,16 @@ def build_layout(
         if kind == BUCKET_TAIL:
             tail.append(TailInfo(index=idx, path=path, spec=spec))
         elif kind == BUCKET_PROJECT:
-            key = (spec, shape, dtype)
-            proj.setdefault(key, []).append((idx, path))
+            proj.setdefault((spec, shape, dtype), []).append((idx, path))
+        elif kind == BUCKET_CONV:
+            conv.setdefault((spec, shape, dtype), []).append((idx, path))
         else:
-            key = (spec, shape, dtype)
-            dense.setdefault(key, []).append((idx, path))
+            dense.setdefault((spec, shape, dtype), []).append((idx, path))
 
     buckets: List[BucketInfo] = []
-    for kind, groups in ((BUCKET_PROJECT, proj), (BUCKET_DENSE, dense)):
+    for kind, groups in (
+        (BUCKET_PROJECT, proj), (BUCKET_CONV, conv), (BUCKET_DENSE, dense)
+    ):
         for (spec, shape, dtype), members in groups.items():
             buckets.append(
                 BucketInfo(

@@ -13,6 +13,10 @@ only on refresh steps:
 
     cross-pod bytes/step = m·r + m·n/T_u      vs      m·n
 
+Conv (Tucker-2) leaves compress the same way: the n-mode products are
+linear, so the r_O·r_I·K1·K2 projected core is all-reduced each step and
+the full O·I·K1·K2 gradient only on factor-refresh steps.
+
 At paper ranks (n/r = 4–12, T_u = 40–200) that is a 3.8–11× cross-pod
 traffic cut with bitwise-identical optimizer semantics (equivalence proven
 in tests/test_distributed.py on a (2,2,2) host mesh).
@@ -39,15 +43,17 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import conv as conv_mod
 from repro.core import correlation, projector, recalibrate
 from repro.core import stacked_state
 from repro.core.coap_adam import (
+    ConvLeaf,
     DenseLeaf,
     ProjLeaf,
     ProjectedAdamConfig,
     ProjectedAdamState,
 )
-from repro.core.projector import KIND_PROJECT, path_str
+from repro.core.projector import KIND_CONV, KIND_PROJECT, path_str
 from repro.optim import apply_updates
 from repro.train.train_state import TrainState
 
@@ -122,6 +128,46 @@ def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState
             upd = projector.from_canonical(upd_c, spec) * cfg.update_scale
             new_updates.append(upd.astype(g.dtype))
             new_leaves.append(ProjLeaf(p=new_p, m=new_m, v=new_v,
+                                       m_scale=leaf.m_scale,
+                                       v_scale=leaf.v_scale))
+        elif spec.kind == KIND_CONV:
+            # Tucker-2 leaves: the n-mode products are linear, so only the
+            # r_O x r_I x K1 x K2 core is all-reduced each step; the full
+            # gradient crosses pods on factor-refresh steps only. Addressed
+            # through leaf_view, this reads conv bucket slices directly
+            # out of stacked storage.
+            g32_local = g.astype(jnp.float32)
+            do_ref = (count % cfg.t_update) == 0
+            do_recal = (count % (cfg.lam * cfg.t_update)) == 0
+            m = leaf.m  # fp32 (quantize rejected above)
+
+            def conv_refreshed():
+                g_full = lax.pmean(g32_local, axis_name)
+                return conv_mod.refresh_factors(
+                    cfg,
+                    leaf.p_o,
+                    leaf.p_i,
+                    conv_mod.mode1_canonical(g_full),
+                    conv_mod.mode2_canonical(g_full),
+                    m,
+                    do_recal,
+                )
+
+            p_o, p_i = lax.cond(
+                do_ref, conv_refreshed, lambda: (leaf.p_o, leaf.p_i)
+            )
+            g_core = lax.pmean(
+                conv_mod.project_core(g32_local, p_o, p_i), axis_name
+            )
+            new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_core
+            new_v = cfg.b2 * leaf.v + (1.0 - cfg.b2) * jnp.square(g_core)
+            tf = t.astype(jnp.float32)
+            delta = (new_m / (1.0 - cfg.b1**tf)) / (
+                jnp.sqrt(new_v / (1.0 - cfg.b2**tf)) + cfg.eps
+            )
+            upd = conv_mod.restore_core(delta, p_o, p_i) * cfg.update_scale
+            new_updates.append(upd.astype(g.dtype))
+            new_leaves.append(ConvLeaf(p_o=p_o, p_i=p_i, m=new_m, v=new_v,
                                        m_scale=leaf.m_scale,
                                        v_scale=leaf.v_scale))
         else:

@@ -17,16 +17,23 @@ MANIFEST FORMAT (``"version": 2``; version-1 manifests — no ``version`` /
   * ``stacked`` — one entry per pre-stacked bucket array
     (``core/stacked_state.StackedLeaves`` fields): ``{path, file, dtype,
     shape, codec, axis, slots}`` where ``codec`` is
-    ``stacked_state.STACKED_CODEC`` ("stacked-bucket/v1": axis-0 slices are
-    bit-exact per-leaf arrays), ``axis`` is the bucket axis (0) and
-    ``slots[j]`` is the logical per-leaf path of slice ``j``.
+    ``stacked_state.STACKED_CODEC`` ("stacked-bucket/v2": axis-0 slices are
+    bit-exact per-leaf arrays; conv/Tucker-2 leaves bucket like everything
+    else), ``axis`` is the bucket axis (0) and ``slots[j]`` is the logical
+    per-leaf path of slice ``j``.
 
 Because stacked entries name their slices by the SAME logical paths a
 per-leaf state would use, the two storage modes are mutually restorable: a
 checkpoint saved in stacked mode restores into a per-leaf template (each
 leaf loads as a slice of its bucket file) and vice versa (each bucket
 assembles by stacking its slot arrays); matching stacked layouts take the
-whole-file fast path. Unknown codec versions fail loudly.
+whole-file fast path. The reader accepts every codec in
+``stacked_state.DECODABLE_CODECS``: "stacked-bucket/v1" entries (written
+before conv bucketing; conv states were plain per-leaf 'leaves' entries)
+carry the identical per-entry slice semantics, so a v1 checkpoint restores
+under v2 code — conv buckets assemble slot-by-slot from its per-leaf
+entries — and a v2 checkpoint restores into a v1-layout template by
+slicing the conv bucket files. Unknown codec versions fail loudly.
 
 Restore takes a *template* pytree (abstract TrainState) and, optionally, a
 mesh + sharding tree: leaves are device_put directly to their shards, so a
@@ -158,10 +165,11 @@ class _CkptIndex:
         self.stacked = {}
         self.slots = {}  # logical path -> (stacked entry, slot index)
         for se in manifest.get("stacked", []):
-            if se.get("codec") != stacked_state.STACKED_CODEC:
+            if se.get("codec") not in stacked_state.DECODABLE_CODECS:
                 raise ValueError(
                     f"unknown stacked-state codec {se.get('codec')!r} in "
-                    f"{cdir} — this build reads {stacked_state.STACKED_CODEC}"
+                    f"{cdir} — this build reads "
+                    f"{sorted(stacked_state.DECODABLE_CODECS)}"
                 )
             self.stacked[se["path"]] = se
             for j, sp in enumerate(se["slots"]):

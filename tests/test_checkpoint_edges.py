@@ -1,5 +1,9 @@
 """Checkpoint edge paths: async save ordering, keep= pruning, bf16 round
-trip — under both per-leaf and stacked-state manifests.
+trip — under both per-leaf and stacked-state manifests — plus the
+cross-VERSION stacked-codec contract: a ``stacked-bucket/v1`` checkpoint
+(conv states in the per-leaf TAIL) restores under v2 code and a v2
+checkpoint (conv bucketed) restores into a v1-layout template, elastic
+reshard included; unknown future codec versions still fail loudly.
 
 The atomicity contract: a ``ckpt_<step>`` directory becomes visible ONLY
 via the final ``os.rename`` of a fully-flushed ``.tmp`` directory, so no
@@ -15,7 +19,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.coap_adam import ProjectedAdamConfig, scale_by_projected_adam
+from repro.core import stacked_state as ss
+from repro.core.coap_adam import (
+    ProjectedAdamConfig,
+    ProjectedAdamState,
+    scale_by_projected_adam,
+)
 from repro.core.projector import ProjectionRules
 from repro.train import checkpoint as ckpt
 
@@ -172,6 +181,221 @@ def test_bf16_as_uint16_roundtrip(tmp_path, stacked):
             np.asarray(a.astype(jnp.float32)),
             np.asarray(b.astype(jnp.float32)),
         )
+
+
+# ---------------------------------------------------------------------------
+# cross-version stacked codec (stacked-bucket/v1 <-> v2, conv leaves)
+# ---------------------------------------------------------------------------
+_RULES = ProjectionRules(rank=8, min_dim=8)
+
+
+def _conv_state(stacked: bool, quantize: bool = False):
+    """A mixed tree with a conv bucket (v2) and one jitted step of state."""
+    params = {f"c{i}": 0.01 * jnp.ones((16, 12, 3, 3)) for i in range(3)}
+    params["w"] = jnp.zeros((64, 32))
+    params["bias"] = jnp.zeros((5,))
+    tx = scale_by_projected_adam(
+        ProjectedAdamConfig(rules=_RULES, t_update=2, lam=2,
+                            quantize=quantize, stacked_state=stacked)
+    )
+    state = tx.init(params)
+    key = jax.random.key(0)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    g = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            0.1 * jax.random.normal(jax.random.fold_in(key, i), p.shape)
+            for i, p in enumerate(flat)
+        ],
+    )
+    _, state = jax.jit(lambda gg, s: tx.update(gg, s, None))(g, state)
+    return tx, params, state
+
+
+def _encode_v1(params, per_leaf_state):
+    """Re-express a per-leaf state in the LEGACY v1 stacked layout (conv in
+    the per-leaf tail) — what a v1 writer would have produced."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    layout_v1 = ss.layout_for_flat(
+        _RULES.spec_for, flat, classify=ss.classify_v1
+    )
+    assert layout_v1.tail, "v1 layout must keep conv per-leaf"
+    flat_states = jax.tree_util.tree_structure(params).flatten_up_to(
+        per_leaf_state.leaves
+    )
+    return ProjectedAdamState(
+        count=per_leaf_state.count,
+        leaves=ss.encode(layout_v1, flat_states),
+    )
+
+
+def _rewrite_stacked_codecs(cdir: str, codec: str):
+    mpath = os.path.join(cdir, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["stacked"]
+    for se in manifest["stacked"]:
+        se["codec"] = codec
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+def _leaves_equal(got, want, treedef):
+    if isinstance(got, ss.StackedLeaves):
+        got = jax.tree_util.tree_unflatten(treedef, ss.decode(got))
+    if isinstance(want, ss.StackedLeaves):
+        want = jax.tree_util.tree_unflatten(treedef, ss.decode(want))
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)),
+        )
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_v1_checkpoint_restores_under_v2(tmp_path, quantize):
+    """A faithful stacked-bucket/v1 checkpoint — conv states as plain
+    per-leaf entries, matrix buckets tagged with the v1 codec — restores
+    under v2 code into BOTH a v2 stacked template (conv buckets assemble
+    slot-by-slot via the logical-path namespace) and a per-leaf template."""
+    tx_p, params, state_p = _conv_state(stacked=False, quantize=quantize)
+    tx_s, _, _ = _conv_state(stacked=True, quantize=quantize)
+    treedef = jax.tree_util.tree_structure(params)
+    v1_state = _encode_v1(params, state_p)
+
+    d = str(tmp_path)
+    ckpt.save(d, 1, v1_state)
+    cdir = os.path.join(d, "ckpt_00000001")
+    _rewrite_stacked_codecs(cdir, ss.STACKED_CODEC_V1)
+    with open(os.path.join(cdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    # faithful v1 file: conv arrays are per-leaf 'leaves' entries
+    assert any("/p_o" in e["path"] for e in manifest["leaves"])
+    assert all(
+        se["codec"] == ss.STACKED_CODEC_V1 for se in manifest["stacked"]
+    )
+
+    for tx_dst in (tx_s, tx_p):
+        template = jax.eval_shape(lambda tx=tx_dst: tx.init(params))
+        restored = ckpt.restore(d, template)
+        _leaves_equal(restored.leaves, state_p.leaves, treedef)
+        np.testing.assert_array_equal(
+            np.asarray(restored.count), np.asarray(state_p.count)
+        )
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_v2_checkpoint_restores_into_v1_layout_template(tmp_path, quantize):
+    """The reverse direction: a v2 checkpoint (conv bucketed) restores into
+    a LEGACY v1-layout template (conv in the tail) — conv leaves load as
+    slices of their bucket files."""
+    tx_s, params, state_s = _conv_state(stacked=True, quantize=quantize)
+    _, _, state_p = _conv_state(stacked=False, quantize=quantize)
+    treedef = jax.tree_util.tree_structure(params)
+    d = str(tmp_path)
+    ckpt.save(d, 2, state_s)
+    with open(
+        os.path.join(d, "ckpt_00000002", "manifest.json")
+    ) as f:
+        manifest = json.load(f)
+    assert all(se["codec"] == ss.STACKED_CODEC for se in manifest["stacked"])
+    # v2 file: conv states live inside stacked bucket entries
+    assert any(
+        any("/p_o" in sp for sp in se["slots"]) for se in manifest["stacked"]
+    )
+
+    template = jax.eval_shape(lambda: _encode_v1(params, state_p))
+    restored = ckpt.restore(d, template)
+    assert isinstance(restored.leaves, ss.StackedLeaves)
+    assert restored.leaves.layout.tail, "template layout keeps conv per-leaf"
+    _leaves_equal(restored.leaves, state_s.leaves, treedef)
+
+
+def test_unknown_future_codec_fails_loudly(tmp_path):
+    """A stacked-bucket/v3 entry must raise, never mis-slice."""
+    tx_s, params, state_s = _conv_state(stacked=True)
+    d = str(tmp_path)
+    ckpt.save(d, 1, state_s)
+    _rewrite_stacked_codecs(
+        os.path.join(d, "ckpt_00000001"), "stacked-bucket/v3"
+    )
+    template = jax.eval_shape(lambda: tx_s.init(params))
+    with pytest.raises(ValueError, match="codec"):
+        ckpt.restore(d, template)
+
+
+def test_elastic_reshard_v1_checkpoint_to_v2_template():
+    """A v1-layout checkpoint saved on a 4-device mesh restores onto an
+    8-device mesh into a v2 stacked template — cross-version logical paths
+    plus elastic device_put in one motion."""
+    import test_distributed
+
+    test_distributed.run_sub("""
+        import json, os, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import stacked_state as ss
+        from repro.core.coap_adam import (
+            ProjectedAdamConfig, ProjectedAdamState, scale_by_projected_adam)
+        from repro.core.projector import ProjectionRules
+        from repro.train import checkpoint as ckpt
+
+        rules = ProjectionRules(rank=8, min_dim=8)
+        params = {f"c{i}": 0.01 * jnp.ones((16, 12, 3, 3)) for i in range(3)}
+        params["w"] = jnp.zeros((64, 32))
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        key = jax.random.key(0)
+        g = jax.tree_util.tree_unflatten(treedef, [
+            0.1 * jax.random.normal(jax.random.fold_in(key, i), p.shape)
+            for i, p in enumerate(flat)])
+
+        def build(stacked):
+            tx = scale_by_projected_adam(ProjectedAdamConfig(
+                rules=rules, t_update=2, lam=2, stacked_state=stacked))
+            st = tx.init(params)
+            _, st = jax.jit(lambda gg, s: tx.update(gg, s, None))(g, st)
+            return tx, st
+
+        tx_p, st_p = build(False)
+        tx_s, st_s = build(True)
+
+        # legacy v1 layout: conv in the per-leaf tail
+        fp, _ = jax.tree_util.tree_flatten_with_path(params)
+        layout_v1 = ss.layout_for_flat(rules.spec_for, fp,
+                                       classify=ss.classify_v1)
+        st_v1 = ProjectedAdamState(
+            count=st_p.count,
+            leaves=ss.encode(
+                layout_v1, treedef.flatten_up_to(st_p.leaves)),
+        )
+        mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+        st_sharded = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(mesh4, P())), st_v1)
+        tmp = tempfile.mkdtemp()
+        ckpt.save(tmp, 1, st_sharded)
+        cdir = os.path.join(tmp, "ckpt_00000001")
+        with open(os.path.join(cdir, "manifest.json")) as f:
+            manifest = json.load(f)
+        for se in manifest["stacked"]:
+            se["codec"] = ss.STACKED_CODEC_V1
+        with open(os.path.join(cdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+        mesh8 = jax.make_mesh((8,), ("data",))
+        template = jax.eval_shape(lambda: tx_s.init(params))
+        specs = jax.tree_util.tree_map(
+            lambda _: P(), template, is_leaf=lambda x: hasattr(x, "shape"))
+        restored = ckpt.restore(tmp, template, mesh=mesh8, spec_tree=specs)
+        got = ss.decode(restored.leaves)
+        want = ss.decode(st_s.leaves)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(restored.leaves.layout.conv_bucket_sizes()) == 1
+        print("elastic v1->v2 reshard ok")
+    """)
 
 
 def test_v1_manifest_still_restores(tmp_path):

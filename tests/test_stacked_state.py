@@ -49,7 +49,7 @@ def _cfg(**kw):
 
 
 def _params():
-    """Two projected buckets + odd projected + conv tail + dense leaves."""
+    """Two projected buckets + odd projected + conv bucket + dense leaves."""
     p = {f"a{i}": {"w": jnp.zeros((96, 64))} for i in range(4)}
     p.update({f"b{i}": {"w": jnp.zeros((128, 48))} for i in range(2)})
     p["c0"] = {"w": jnp.zeros((80, 72))}
@@ -123,7 +123,7 @@ def test_encode_decode_roundtrip_bitexact():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_layout_deterministic_and_conv_tail():
+def test_layout_deterministic_and_conv_buckets():
     params = _params()
     cfg = _cfg()
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
@@ -136,11 +136,26 @@ def test_layout_deterministic_and_conv_tail():
     la, lb = mk(), mk()
     assert la == lb  # pure function of the tree
     assert la.signature() == lb.signature()
-    # conv leaf lives in the per-leaf tail, not a bucket
-    assert [t.path for t in la.tail] == ["conv_k"]
+    # stacked-bucket/v2: the conv leaf BUCKETS (no residual tail) and
+    # joins the staggerable buckets after the projected ones
+    assert la.tail == ()
+    conv = [b for b in la.buckets if b.kind == ss.BUCKET_CONV]
+    assert [b.paths for b in conv] == [("conv_k",)]
+    assert la.staggerable_bucket_sizes() == la.proj_bucket_sizes() + [1]
     # projected buckets come first, with the multi-leaf buckets intact
     proj = [b for b in la.buckets if b.kind == ss.BUCKET_PROJECT]
     assert [len(b.indices) for b in proj] == [4, 2, 1]
+    assert [b.kind for b in la.buckets].index(ss.BUCKET_CONV) == len(proj)
+    # the legacy classification still reproduces the v1 conv-in-tail layout
+    lv1 = ss.build_layout(
+        cfg.rules.spec_for,
+        [ss.path_str(kp) for kp, _ in flat],
+        [leaf.shape for _, leaf in flat],
+        [jnp.dtype(leaf.dtype).name for _, leaf in flat],
+        classify=ss.classify_v1,
+    )
+    assert [t.path for t in lv1.tail] == ["conv_k"]
+    assert not [b for b in lv1.buckets if b.kind == ss.BUCKET_CONV]
     # every index appears exactly once across buckets + tail
     seen = sorted(
         i for b in la.buckets for i in b.indices
