@@ -1,11 +1,25 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke bench-overhead bench-refresh bench-state bench-conv
+.PHONY: test smoke plan plan-smoke bench-overhead bench-refresh bench-state \
+	bench-conv bench-plan
 
 test:
 	./scripts/ci.sh
 
 smoke:
 	./scripts/ci.sh smoke
+
+# Budget-driven memory planner (coap-plan/v1): table + artifact + exact
+# byte verification against the constructed optimizer. Override knobs:
+#   make plan ARCH=llama-1b BUDGET=40GB
+ARCH ?= llama-1b
+BUDGET ?= 40GB
+plan:
+	PYTHONPATH=src python -m repro.launch.plan --arch $(ARCH) \
+		--budget $(BUDGET) --verify
+
+# Plans all 11 registry archs under an auto budget and byte-verifies each.
+plan-smoke:
+	./scripts/ci.sh plan-smoke
 
 # Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
@@ -28,3 +42,8 @@ bench-state:
 # loop, on the conv-heavy reference tree).
 bench-conv:
 	PYTHONPATH=src:. python benchmarks/run.py --only conv
+
+# Regenerates BENCH_plan.json (planned LLaMA-1B paper vectors: fp32/q8
+# reductions vs the AdamW baseline + exact predicted-vs-accounted bytes).
+bench-plan:
+	PYTHONPATH=src:. python benchmarks/run.py --only plan

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 gate + interpret-mode kernel smoke.
+# Tier-1 gate + interpret-mode kernel smoke + plan smoke.
 #
-#   ./scripts/ci.sh          full tier-1 suite, then the Pallas smoke subset
-#   ./scripts/ci.sh smoke    smoke subset only (fast signal on kernel edits)
+#   ./scripts/ci.sh              full tier-1 suite, then both smokes
+#   ./scripts/ci.sh smoke        kernel smoke only (fast signal on kernel edits)
+#   ./scripts/ci.sh plan-smoke   plan smoke only (planner/accounting edits)
 #
 # The smoke subset re-runs the fused-kernel correctness tests with the
 # actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
@@ -39,11 +40,34 @@ smoke() {
     "tests/test_conv_bucketing.py::test_conv_stacked_state_matches_per_leaf[True]"
 }
 
+plan_smoke() {
+  echo "== plan smoke (all registry archs) =="
+  # Plans every registry architecture under an auto budget and verifies
+  # each plan's predicted optimizer-state bytes against
+  # accounting.abstract_state_bytes of the actually-constructed optimizer
+  # (must match EXACTLY; eval_shape only — no allocation even at 314B).
+  # interpret mode keeps the kernels/ops dispatch honest about which
+  # backend a planned run would use.
+  REPRO_PALLAS=interpret python -m repro.launch.plan \
+    --all --budget auto --verify --out ""
+  # The paper's budgeted vectors: 40GB fp32 and a q8-forcing 12.5GB budget
+  # on LLaMA-1B, both byte-verified.
+  REPRO_PALLAS=interpret python -m repro.launch.plan \
+    --arch llama-1b --budget 40GB --verify
+  REPRO_PALLAS=interpret python -m repro.launch.plan \
+    --arch llama-1b --budget 12.5GB --verify
+}
+
 if [[ "${1:-}" == "smoke" ]]; then
   smoke
+  exit 0
+fi
+if [[ "${1:-}" == "plan-smoke" ]]; then
+  plan_smoke
   exit 0
 fi
 
 echo "== tier-1 suite =="
 python -m pytest -x -q
 smoke
+plan_smoke

@@ -43,6 +43,11 @@ class OptimizerConfig:
     stacked_state: bool = False  # pre-stacked bucket state (coap_adam doc)
     seed: int = 0
     state_dtype: Any = jnp.float32
+    # A coap-plan/v1 artifact (repro.plan.Plan, dict, or JSON path). When
+    # set, the projection rules, per-bucket quantize/T_u/stagger_groups and
+    # the storage layout all come from the plan; the per-knob fields above
+    # keep governing run-level knobs only (lr, betas, clip, weight decay).
+    plan: Optional[Any] = None
 
     def rules(self) -> ProjectionRules:
         return ProjectionRules(
@@ -53,6 +58,17 @@ class OptimizerConfig:
 
 
 def make_optimizer(cfg: OptimizerConfig) -> optim.GradientTransformation:
+    if cfg.plan is not None:
+        # Budget-planned optimizer: the coap-plan/v1 artifact drives rules,
+        # storage layout and per-bucket knobs (repro/plan/apply.py).
+        from repro.plan import apply as plan_apply
+
+        txs = []
+        if cfg.grad_clip:
+            txs.append(optim.clip_by_global_norm(cfg.grad_clip))
+        txs.append(plan_apply.transform(plan_apply.resolve(cfg.plan), cfg))
+        return optim.chain(*txs)
+
     name = cfg.name.lower()
     quantize = name.startswith("8bit-")
     if quantize:

@@ -159,6 +159,40 @@ class ProjectedAdamState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class LeafOverrides:
+    """Per-leaf knob overrides a memory plan may pin (``None`` = inherit the
+    global :class:`ProjectedAdamConfig` value). Rank overrides do NOT live
+    here — they ride in the rules (``projector.PlannedRules``) because the
+    rank is part of the ProjSpec and therefore of the bucket identity."""
+
+    quantize: Optional[bool] = None
+    t_update: Optional[int] = None
+    stagger_groups: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanOverrides:
+    """Exact-path -> :class:`LeafOverrides` map (hashable; plan-driven).
+
+    Congruence buckets group leaves by ``(spec, shape, dtype)``; storage
+    codec and refresh cadence are bucket-level properties, so every path of
+    a bucket must resolve to the SAME overrides — ``update_fn`` enforces
+    this and raises on a mixed bucket (a plan assigns knobs per bucket, so
+    this only triggers on hand-edited plans)."""
+
+    entries: Tuple[Tuple[str, LeafOverrides], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "_map", dict(self.entries))
+
+    def for_path(self, path: str) -> Optional[LeafOverrides]:
+        return self._map.get(path)
+
+    def any_quantized(self) -> bool:
+        return any(ov.quantize for _, ov in self.entries)
+
+
+@dataclasses.dataclass(frozen=True)
 class ProjectedAdamConfig:
     rules: ProjectionRules
     strategy: str = "coap"
@@ -181,6 +215,9 @@ class ProjectedAdamConfig:
     stagger: bool = True  # phase-staggered refresh schedule (module docstring)
     stagger_groups: int = 8  # max phase groups per congruent bucket
     stacked_state: bool = False  # store state pre-stacked (module docstring)
+    # Plan-driven per-bucket knob overrides (quantize / T_u / stagger_groups;
+    # repro/plan consumes coap-plan/v1 artifacts into this field).
+    overrides: Optional[PlanOverrides] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -190,6 +227,14 @@ class ProjectedAdamConfig:
                 "stacked_state=True stores the state along the bucket axis "
                 "and requires bucket_leaves=True"
             )
+
+    def any_quantized(self) -> bool:
+        """True when ANY leaf stores int8 state (global flag or a per-leaf
+        plan override) — the conservative check for consumers that cannot
+        handle quantized states (e.g. compressed cross-pod sync)."""
+        if self.quantize:
+            return True
+        return self.overrides is not None and self.overrides.any_quantized()
 
 
 def _zeros_scales(shape_numel: int, block: int):
@@ -239,6 +284,46 @@ def _leaf_spec(cfg: ProjectedAdamConfig, path: str, shape) -> ProjSpec:
     return cfg.rules.spec_for(path, shape)
 
 
+def _apply_overrides(
+    cfg: ProjectedAdamConfig, ov: Optional[LeafOverrides]
+) -> ProjectedAdamConfig:
+    if ov is None:
+        return cfg
+    kw = {}
+    if ov.quantize is not None and ov.quantize != cfg.quantize:
+        kw["quantize"] = ov.quantize
+    if ov.t_update is not None and ov.t_update != cfg.t_update:
+        kw["t_update"] = ov.t_update
+    if ov.stagger_groups is not None and ov.stagger_groups != cfg.stagger_groups:
+        kw["stagger_groups"] = ov.stagger_groups
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _leaf_cfg(cfg: ProjectedAdamConfig, path: str) -> ProjectedAdamConfig:
+    """The effective config for one leaf: plan overrides layered over the
+    global knobs. With no overrides this is ``cfg`` itself."""
+    if cfg.overrides is None:
+        return cfg
+    return _apply_overrides(cfg, cfg.overrides.for_path(path))
+
+
+def _bucket_cfg(cfg: ProjectedAdamConfig, info) -> ProjectedAdamConfig:
+    """The effective config for a congruence bucket. Storage codec and
+    refresh cadence are bucket-level properties, so every member path must
+    resolve to identical overrides."""
+    if cfg.overrides is None:
+        return cfg
+    ovs = {cfg.overrides.for_path(p) for p in info.paths}
+    if len(ovs) > 1:
+        raise ValueError(
+            f"plan overrides disagree within bucket {info.shape}/{info.dtype}"
+            f" (paths {info.paths[:3]}...): a bucket's quantize/T_u/"
+            "stagger_groups must be uniform — assign overrides per bucket, "
+            "not per leaf"
+        )
+    return _apply_overrides(cfg, next(iter(ovs)))
+
+
 def _layout_of(cfg: ProjectedAdamConfig, flat) -> stacked_state.StackedLayout:
     """THE bucket assignment for this transform: projected, conv (Tucker-2)
     and dense leaves each bucket by congruence signature (the default
@@ -255,15 +340,21 @@ def stagger_phases(
 
     ``bucket_sizes`` lists the projected buckets' leaf counts in tree
     (insertion) order. Each bucket is split into at most ``stagger_groups``
-    contiguous near-equal groups; the resulting units are spread uniformly
+    contiguous near-equal groups (``stagger_groups`` may be a sequence of
+    per-bucket caps — how plan overrides stagger a bucket differently);
+    the resulting units are spread uniformly
     over ``[0, t_update)`` so the worst refresh step carries ~1/U of the
     synchronized cost. Pure function of the tree structure — phases are
     identical across restarts and between bucketed and per-leaf execution.
     Returns one tuple of per-leaf-position phases per bucket.
     """
     t_u = max(1, int(t_update))
+    if isinstance(stagger_groups, (list, tuple)):
+        caps = [int(s) for s in stagger_groups]
+    else:
+        caps = [int(stagger_groups)] * len(bucket_sizes)
     n_groups = [
-        max(1, min(int(b), int(stagger_groups), t_u)) for b in bucket_sizes
+        max(1, min(int(b), cap, t_u)) for b, cap in zip(bucket_sizes, caps)
     ]
     total = sum(n_groups) or 1
     out = []
@@ -525,33 +616,39 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
 
     def init_fn(params):
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        if cfg.overrides is not None:
+            # Fail at init, not first update: a mixed-quantize bucket would
+            # otherwise stack int8 codes with fp32 moments silently.
+            for info in _layout_of(cfg, flat).buckets:
+                _bucket_cfg(cfg, info)
         key = jax.random.key(cfg.seed)
         leaves = []
         for idx, (kp, leaf) in enumerate(flat):
             path = path_str(kp)
             spec = _leaf_spec(cfg, path, leaf.shape)
+            lcfg = _leaf_cfg(cfg, path)  # plan overrides (storage codec)
             if spec.kind == KIND_PROJECT:
                 p0 = projector.init_p(
                     jax.random.fold_in(key, idx), leaf.shape, spec,
                     cfg.state_dtype,
                 )
                 msh = projector.moment_shape(leaf.shape, spec)
-                m0, ms0 = _init_stored_proj(msh, cfg)
-                v0, vs0 = _init_stored_proj(msh, cfg)
+                m0, ms0 = _init_stored_proj(msh, lcfg)
+                v0, vs0 = _init_stored_proj(msh, lcfg)
                 leaves.append(ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0))
             elif spec.kind == KIND_CONV:
                 po, pi = conv_mod.init_factors(
                     jax.random.fold_in(key, idx), leaf.shape, spec
                 )
                 msh = conv_mod.core_shape(leaf.shape, spec)
-                m0, ms0 = _init_stored(msh, cfg)
-                v0, vs0 = _init_stored(msh, cfg)
+                m0, ms0 = _init_stored(msh, lcfg)
+                v0, vs0 = _init_stored(msh, lcfg)
                 leaves.append(
                     ConvLeaf(p_o=po, p_i=pi, m=m0, v=v0, m_scale=ms0, v_scale=vs0)
                 )
             else:
-                m0, ms0 = _init_stored(leaf.shape, cfg)
-                v0, vs0 = _init_stored(leaf.shape, cfg)
+                m0, ms0 = _init_stored(leaf.shape, lcfg)
+                v0, vs0 = _init_stored(leaf.shape, lcfg)
                 leaves.append(DenseLeaf(mu=m0, nu=v0, mu_scale=ms0, nu_scale=vs0))
         if cfg.stacked_state:
             # Same per-leaf states (identical RNG keys per flat index),
@@ -565,10 +662,12 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
             leaves=jax.tree_util.tree_unflatten(treedef, leaves),
         )
 
-    def _update_proj_bucket(leaf: ProjLeaf, g, spec: ProjSpec, count, t,
+    def _update_proj_bucket(cfg, leaf: ProjLeaf, g, spec: ProjSpec, count, t,
                             idx_arr, phases=None):
         """One step for a stacked bucket of congruent projected leaves (all
         arrays carry a leading (B,) axis; B == 1 for singleton buckets).
+        ``cfg`` is the BUCKET-effective config (plan overrides applied —
+        shadows the transform's global config on purpose).
         ``gc`` keeps the gradient's dtype — bf16 gradients stream into the
         fused kernels as bf16 (upcast per-tile in VMEM, halving per-step G
         traffic); only the unfused jnp fallbacks materialize fp32."""
@@ -686,7 +785,7 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         update = projector.from_canonical(update_c, spec) * cfg.update_scale
         return update.astype(g.dtype), new_leaf
 
-    def _update_dense_leaf(leaf: DenseLeaf, g, count, t):
+    def _update_dense_leaf(cfg, leaf: DenseLeaf, g, count, t):
         g32 = g.astype(jnp.float32)
         if cfg.quantize and cfg.use_fused_kernel:
             # 8-bit dense Adam as ONE fused dispatch (dequant -> EMA ->
@@ -749,18 +848,37 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
             prev = None
             flat_s = treedef.flatten_up_to(state.leaves)
 
+        # Bucket-effective configs (plan overrides: quantize / T_u /
+        # stagger_groups per bucket; identity when no overrides are set).
+        bucket_cfgs = [_bucket_cfg(cfg, info) for info in layout.buckets]
+
         # Per-leaf refresh phases (staggered schedule): allocated over the
         # staggerable buckets — projected then conv, in tree order —
-        # identically in every mode.
-        if cfg.stagger and cfg.t_update > 1:
-            phase_lists = stagger_phases(
-                layout.staggerable_bucket_sizes(), cfg.t_update,
-                cfg.stagger_groups,
+        # identically in every mode. Buckets sharing an effective T_u are
+        # allocated jointly (phases spread uniformly over [0, T_u) across
+        # all of them); buckets a plan pins to a different T_u get their
+        # own allocation over their own interval. With no overrides this
+        # is exactly the single joint allocation of the global schedule.
+        stag_bis = [
+            bi for bi, info in enumerate(layout.buckets)
+            if info.kind in (
+                stacked_state.BUCKET_PROJECT, stacked_state.BUCKET_CONV
             )
-        else:
-            phase_lists = [
-                (0,) * sz for sz in layout.staggerable_bucket_sizes()
-            ]
+        ]
+        by_tu = {}
+        for bi in stag_bis:
+            by_tu.setdefault(bucket_cfgs[bi].t_update, []).append(bi)
+        phase_by_bucket = {}
+        for t_u, bis in by_tu.items():
+            sizes = [len(layout.buckets[bi].indices) for bi in bis]
+            if cfg.stagger and t_u > 1:
+                pls = stagger_phases(
+                    sizes, t_u, [bucket_cfgs[bi].stagger_groups for bi in bis]
+                )
+            else:
+                pls = [(0,) * sz for sz in sizes]
+            for bi, pl in zip(bis, pls):
+                phase_by_bucket[bi] = pl
 
         new_buckets = [None] * len(layout.buckets)
         new_tail = [None] * len(layout.tail)
@@ -772,20 +890,18 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         for j, tinfo in enumerate(layout.tail):
             leaf = prev.tail[j] if cfg.stacked_state else flat_s[tinfo.index]
             u, nl = conv_mod.update_conv_leaf(
-                cfg, leaf, flat_u[tinfo.index][1], tinfo.spec, count, t,
-                tinfo.index,
+                _leaf_cfg(cfg, tinfo.path), leaf, flat_u[tinfo.index][1],
+                tinfo.spec, count, t, tinfo.index,
             )
             new_updates[tinfo.index] = u
             new_tail[j] = nl
             new_flat[tinfo.index] = nl
 
-        stag_i = 0
         for bi, info in enumerate(layout.buckets):
             is_proj = info.kind == stacked_state.BUCKET_PROJECT
             is_conv = info.kind == stacked_state.BUCKET_CONV
-            phases = phase_lists[stag_i] if (is_proj or is_conv) else None
-            if is_proj or is_conv:
-                stag_i += 1
+            bcfg = bucket_cfgs[bi]
+            phases = phase_by_bucket[bi] if (is_proj or is_conv) else None
             if cfg.bucket_leaves:
                 slot_groups = [tuple(range(len(info.indices)))]
             else:  # per-leaf A/B mode (stacked_state forbids this)
@@ -804,19 +920,19 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                     )
                 if is_proj:
                     u_stack, nl_stack = _update_proj_bucket(
-                        leaf_stack, g_stack, info.spec, count, t,
+                        bcfg, leaf_stack, g_stack, info.spec, count, t,
                         jnp.asarray(idxs, jnp.int32),
                         tuple(phases[k] for k in slots),
                     )
                 elif is_conv:
                     u_stack, nl_stack = conv_mod.update_conv_bucket(
-                        cfg, leaf_stack, g_stack, info.spec, count, t,
+                        bcfg, leaf_stack, g_stack, info.spec, count, t,
                         jnp.asarray(idxs, jnp.int32),
                         tuple(phases[k] for k in slots),
                     )
                 else:
                     u_stack, nl_stack = jax.vmap(
-                        lambda lf, gg: _update_dense_leaf(lf, gg, count, t)
+                        lambda lf, gg: _update_dense_leaf(bcfg, lf, gg, count, t)
                     )(leaf_stack, g_stack)
                 for b, i in enumerate(idxs):
                     new_updates[i] = u_stack[b]
@@ -865,6 +981,8 @@ def _projected_adamw(
     stagger=True,
     stagger_groups=8,
     stacked_state=False,
+    overrides=None,
+    quant_block=kref.QUANT_BLOCK,
     mask=None,
 ) -> GradientTransformation:
     cfg = ProjectedAdamConfig(
@@ -885,6 +1003,8 @@ def _projected_adamw(
         stagger=stagger,
         stagger_groups=stagger_groups,
         stacked_state=stacked_state,
+        overrides=overrides,
+        quant_block=quant_block,
     )
     txs = [scale_by_projected_adam(cfg)]
     if weight_decay:

@@ -105,6 +105,32 @@ class ProjectionRules:
         return ProjSpec(KIND_PROJECT, m < n, r)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlannedRules(ProjectionRules):
+    """Per-path spec overrides layered over a base :class:`ProjectionRules`.
+
+    This is how a memory plan (``repro/plan``, ``coap-plan/v1``) drives the
+    optimizer: the planner decides one :class:`ProjSpec` per bucket and pins
+    it here for every member path; any path without an override falls back
+    to the base policy. Overrides are EXACT path matches (the planner and
+    the optimizer flatten the same tree, so paths agree by construction) and
+    the tuple storage keeps the rules hashable — layouts built from planned
+    rules stay valid jit-static aux data.
+    """
+
+    spec_overrides: Tuple[Tuple[str, ProjSpec], ...] = ()
+
+    def __post_init__(self):
+        super().__post_init__()
+        object.__setattr__(self, "_spec_map", dict(self.spec_overrides))
+
+    def spec_for(self, path: str, shape: Sequence[int]) -> ProjSpec:
+        spec = self._spec_map.get(path)
+        if spec is not None:
+            return spec
+        return super().spec_for(path, shape)
+
+
 def path_str(key_path) -> str:
     """jax tree key-path -> 'a/b/0/c' string for regex policies."""
     parts = []

@@ -65,7 +65,21 @@ def compressed_update(cfg: ProjectedAdamConfig, grads, state: ProjectedAdamState
 
     Semantics == all-reduce(grads) then core update (linearity; the full-G
     all-reduce still happens on refresh steps, under the same lax.cond)."""
-    if cfg.quantize:
+    if cfg.overrides is not None and any(
+        ov.t_update is not None and ov.t_update != cfg.t_update
+        for _, ov in cfg.overrides.entries
+    ):
+        # This path computes the refresh schedule from the GLOBAL
+        # cfg.t_update below; silently ignoring a bucket pinned to a
+        # DIFFERENT cadence would desync it from the single-pod planned
+        # optimizer. Overrides that merely restate the global T_u (what
+        # the v1 solver emits) are fine; stagger_groups is irrelevant
+        # here — this path has always refreshed synchronized.
+        raise NotImplementedError(
+            "compressed_update does not support per-bucket t_update "
+            "overrides that differ from the global schedule"
+        )
+    if cfg.any_quantized():
         # This path does fp32 moment arithmetic directly on leaf.m/leaf.v.
         # Under the shape-preserving row-block int8 codec those arrays are
         # quantization CODES — using them here would corrupt silently (the

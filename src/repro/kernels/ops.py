@@ -134,6 +134,42 @@ def _eqn6_ref(p, g, m_proj, lr, steps, normalize):
     )[0]
 
 
+# Fused-Eqn-6 fallback telemetry: plans that land a bucket on the slow
+# unfused path must be VISIBLE (launch/dryrun and launch/plan surface
+# these counts), not buried in one warning per trace. Counters key on the
+# 2-D dispatch shape (m, n, r) and increment once per TRACE that fell
+# back; the RuntimeWarning is deduplicated per unique (n, r, budget) —
+# the footprint that decides the fallback is bm-independent in (n, r), so
+# repeated traces of the same layer shape add no information.
+_EQN6_FALLBACK_COUNTS = {}
+_EQN6_WARNED = set()
+
+
+def eqn6_fallback_counts() -> dict:
+    """{(m, n, r): traces-that-fell-back} since the last reset."""
+    return dict(_EQN6_FALLBACK_COUNTS)
+
+
+def reset_eqn6_fallbacks() -> None:
+    """Clear fallback counters AND the warning dedup set (test isolation /
+    per-dryrun-cell accounting)."""
+    _EQN6_FALLBACK_COUNTS.clear()
+    _EQN6_WARNED.clear()
+
+
+def _record_eqn6_fallback(g, p, budget: int, err) -> None:
+    import warnings
+
+    m_dim, n_dim = int(g.shape[-2]), int(g.shape[-1])
+    r = int(p.shape[-1])
+    key = (m_dim, n_dim, r)
+    _EQN6_FALLBACK_COUNTS[key] = _EQN6_FALLBACK_COUNTS.get(key, 0) + 1
+    warn_key = (n_dim, r, int(budget))
+    if warn_key not in _EQN6_WARNED:
+        _EQN6_WARNED.add(warn_key)
+        warnings.warn(f"{err}", RuntimeWarning)
+
+
 def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1, normalize=False):
     """Fused Eqn-6 projection refresh: ``steps`` SGD iterations on the
     paper's Eqn-6 objective with loss+grad computed in ONE tiled sweep over
@@ -150,6 +186,7 @@ def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1, normalize=False):
         return _eqn6_ref(p, g, m_proj, lr, steps, normalize)
     from repro.kernels import eqn6
 
+    budget = eqn6._vmem_budget()
     try:
         # Resolve the env budget HERE, outside the jit cache: the budget is
         # a static argument of the kernel wrapper, so passing it concretely
@@ -157,12 +194,10 @@ def eqn6_sgd_update(p, g, m_proj, lr=0.1, steps=1, normalize=False):
         # silently-ignored env read inside an already-cached trace.
         return eqn6.eqn6_sgd_update_pallas(
             p, g, m_proj, lr=lr, steps=steps, normalize=normalize,
-            interpret=_interpret_flag(), vmem_budget=eqn6._vmem_budget(),
+            interpret=_interpret_flag(), vmem_budget=budget,
         )[0]
     except eqn6.Eqn6VmemError as e:
-        import warnings
-
-        warnings.warn(f"{e}", RuntimeWarning)
+        _record_eqn6_fallback(g, p, budget, e)
         return _eqn6_ref(p, g, m_proj, lr, steps, normalize)
 
 

@@ -84,7 +84,8 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
                optimizer: str = "coap-adamw", rules=shd.PARAM_RULES,
                extra_opt: Optional[dict] = None,
                arch_overrides: Optional[dict] = None,
-               grad_accum_override: Optional[int] = None):
+               grad_accum_override: Optional[int] = None,
+               plan=None):
     """Returns (step_fn, in_shardings, abstract_args, mesh, meta)."""
     import dataclasses as _dc
     cfg = get_config(arch)
@@ -106,6 +107,12 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         ocfg.name = optimizer
         for k, v in (extra_opt or {}).items():
             setattr(ocfg, k, v)
+        if plan is not None:
+            # Budget-planned cell: the coap-plan/v1 artifact owns rules,
+            # layout and per-bucket knobs; run-level knobs stay on ocfg.
+            ocfg.plan = plan
+            meta["plan_codec"] = plan.codec
+            meta["plan_budget_bytes"] = plan.budget_bytes
         tx = make_optimizer(ocfg)
         state_abs = abstract_train_state(model, tx)
         pspecs = model.param_specs(mesh, rules)
@@ -122,8 +129,16 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         step = make_train_step(model, tx, grad_accum=grad_accum)
         in_shardings = (_named(mesh, state_spec), _named(mesh, batch_spec))
         args = (state_abs, batch_abs)
-        meta["rank"] = ocfg.rank
-        meta["t_update"] = ocfg.t_update
+        if plan is not None:
+            # Describe the PLANNED knobs, not default_opt's: t_update feeds
+            # the roofline's refresh amortization, rank the artifact reader.
+            meta["rank"] = sorted({
+                b.spec.rank for b in plan.buckets if b.kind == "project"
+            })
+            meta["t_update"] = plan.globals_.t_update
+        else:
+            meta["rank"] = ocfg.rank
+            meta["t_update"] = ocfg.t_update
         return step, in_shardings, args, mesh, meta
 
     pspecs = model.param_specs(mesh, rules)
@@ -159,7 +174,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              optimizer: str = "coap-adamw", tag: str = "",
              rules=shd.PARAM_RULES, extra_opt: Optional[dict] = None,
              save: bool = True, arch_overrides: Optional[dict] = None,
-             grad_accum_override: Optional[int] = None) -> dict:
+             grad_accum_override: Optional[int] = None, plan=None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = supports_shape(cfg, shape)
@@ -172,13 +187,42 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     t0 = time.time()
+    plan_rec = None
+    if plan is not None and shape.kind == "train":
+        # Exactness gate BEFORE any compile: the plan's predicted bytes
+        # must equal accounting.abstract_state_bytes of the optimizer the
+        # plan actually constructs (eval_shape — no allocation). A
+        # mismatch fails the cell; a drifted byte model must never launch.
+        from repro import plan as plan_mod
+
+        try:
+            vrep = plan_mod.verify(
+                plan, build_model(cfg).abstract_params(),
+                learning_rate=default_opt(cfg).learning_rate,
+            )
+        except plan_mod.PlanMismatchError as e:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "status": "error",
+                   "error": f"PlanMismatchError: {e}"}
+            _save(out_name, rec, save)
+            return rec
+        plan_rec = {
+            "predicted_state_bytes": vrep["predicted_total"],
+            "accounted_state_bytes": vrep["accounted_total"],
+            "match": vrep["match"],
+            "eqn6_fallback_buckets_predicted": vrep["eqn6_fallback_buckets"],
+        }
+
     step, in_shardings, args, mesh, meta = build_cell(
         arch, shape_name, multi_pod, optimizer, rules, extra_opt,
-        arch_overrides, grad_accum_override,
+        arch_overrides, grad_accum_override, plan,
     )
     if arch_overrides:
         meta["arch_overrides"] = {k: str(v) for k, v in arch_overrides.items()}
     try:
+        from repro.kernels import ops as kops
+
+        kops.reset_eqn6_fallbacks()
         with mesh:
             jitted = jax.jit(step, in_shardings=in_shardings)
             lowered = jitted.lower(*args)
@@ -222,13 +266,27 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "n_active_params": cfg.n_active_params(),
             "seq_len": shape.seq_len,
             "global_batch": shape.global_batch,
+            # Counted fused-Eqn-6 fallback telemetry (per traced (m, n, r),
+            # kernels/ops): plans that land a bucket on the slow unfused
+            # refresh are visible here, not just as a one-shot warning.
+            "eqn6_fallbacks": _live_eqn6_fallbacks(),
         })
+        if plan_rec is not None:
+            rec["plan"] = plan_rec
     except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
         rec = dict(meta)
         rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()[-4000:]})
     _save(out_name, rec, save)
     return rec
+
+
+def _live_eqn6_fallbacks() -> dict:
+    # THE telemetry formatter (shared with repro.plan.validate) — one
+    # definition of the '(m, n, r)' artifact key shape.
+    from repro.plan.validate import live_eqn6_fallbacks
+
+    return live_eqn6_fallbacks()
 
 
 def _save(name: str, rec: dict, save: bool):
@@ -265,6 +323,10 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--optimizer", default="coap-adamw")
+    ap.add_argument("--plan", default="",
+                    help="coap-plan/v1 artifact: drive the train cells from "
+                         "the planned knobs and cross-check predicted vs "
+                         "accounted state bytes before compiling")
     ap.add_argument("--tag", default="")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the §Perf beyond-paper overrides")
@@ -274,6 +336,15 @@ def main():
     args = ap.parse_args()
     if args.optimized and not args.tag:
         args.tag = "opt"
+    plan = None
+    if args.plan:
+        from repro.plan.artifact import load_plan
+
+        plan = load_plan(args.plan)
+        if not args.tag:
+            args.tag = "plan"
+        if plan.arch and not args.arch:
+            args.arch = plan.arch
 
     archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
@@ -296,8 +367,11 @@ def main():
                         continue
                 t0 = time.time()
                 overrides = optimized_overrides(arch) if args.optimized else None
+                if plan is not None and plan.arch and plan.arch != arch:
+                    print(f"[skip] {out}: plan is for {plan.arch}")
+                    continue
                 rec = run_cell(arch, shape, mp, args.optimizer, args.tag,
-                               arch_overrides=overrides)
+                               arch_overrides=overrides, plan=plan)
                 dt = time.time() - t0
                 status = rec["status"]
                 extra = rec.get("reason", rec.get("error", ""))[:90]

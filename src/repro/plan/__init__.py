@@ -1,0 +1,57 @@
+"""Budget-driven memory planner (``coap-plan/v1``).
+
+The planner closes the loop the paper leaves to the user: instead of
+hand-picking rank / ``T_u`` / ``quantize`` per config (the GaLore failure
+mode — pay for a too-high rank in SVD cost or a too-low one in quality),
+``repro.plan`` takes an architecture plus an HBM budget and emits a
+versioned plan artifact assigning per-bucket knobs, chosen by a solver that
+minimizes predicted step cost subject to the budget.
+
+The subsystem has four layers:
+
+  * :mod:`repro.plan.bytes` — the EXACT optimizer-state byte model, built
+    directly on ``stacked_state.build_layout`` and the storage-codec rules
+    of ``core/coap_adam`` so predictions match
+    ``accounting.abstract_state_bytes`` byte-for-byte by construction;
+  * :mod:`repro.plan.cost` — the per-step cost model, calibrated from the
+    measured ``BENCH_overhead/refresh/state/conv`` ratios and the
+    ``launch/roofline`` hardware terms; it also predicts per-bucket fused
+    Eqn-6 feasibility via the kernel's own ``plan_bm`` VMEM guard;
+  * :mod:`repro.plan.solver` — rank floor (the paper's compression ratio
+    ``c``), candidate enumeration, and the greedy per-bucket quantize
+    knapsack that engages int8 storage only when fp32 cannot fit;
+  * :mod:`repro.plan.artifact` / :mod:`repro.plan.apply` /
+    :mod:`repro.plan.validate` — the ``coap-plan/v1`` JSON codec (unknown
+    versions fail loudly), consumption into the optimizer
+    (``OptimizerConfig.plan`` -> ``PlannedRules`` + per-bucket
+    ``PlanOverrides``), and the exactness cross-check against the real
+    constructed optimizer.
+
+Entry points: ``python -m repro.launch.plan --arch llama-1b --budget 40GB``
+(also ``make plan``), ``launch/dryrun.py --plan``, and
+:func:`plan_for_arch` / :func:`repro.plan.solver.solve` from code.
+"""
+from __future__ import annotations
+
+from repro.plan.artifact import (  # noqa: F401
+    PLAN_CODEC,
+    BucketPlan,
+    Plan,
+    PlanVersionError,
+    load_plan,
+    save_plan,
+)
+from repro.plan.solver import PlanInfeasibleError, solve  # noqa: F401
+from repro.plan.validate import PlanMismatchError, verify  # noqa: F401
+
+
+def plan_for_arch(arch: str, budget_bytes: int, **kw):
+    """Plan a registry architecture: builds the abstract param tree (no
+    allocation) and solves under the budget. Returns a :class:`Plan`."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config(arch)
+    params = build_model(cfg).abstract_params()
+    kw.setdefault("big_model", cfg.n_params() > 3e9)
+    return solve(params, budget_bytes, arch=arch, **kw)

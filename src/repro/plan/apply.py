@@ -1,0 +1,99 @@
+"""Plan consumption: ``coap-plan/v1`` -> a configured optimizer.
+
+The plan's per-bucket decisions map onto two existing mechanisms:
+
+  * ranks/kinds pin the per-path :class:`ProjSpec` via
+    ``projector.PlannedRules`` (override rules layered over the base
+    policy), so ``build_layout`` reproduces the planner's buckets exactly;
+  * ``quantize`` / ``t_update`` / ``stagger_groups`` ride per-path in
+    ``coap_adam.PlanOverrides`` (the optimizer enforces bucket uniformity).
+
+``core/api.make_optimizer`` routes here when ``OptimizerConfig.plan`` is
+set; this module deliberately does NOT import ``core.api`` (no cycle).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.coap_adam import LeafOverrides, PlanOverrides, _projected_adamw
+from repro.core.projector import PlannedRules, ProjSpec
+from repro.optim.transform import GradientTransformation
+from repro.plan.artifact import Plan, resolve  # noqa: F401  (re-export)
+
+_SUPPORTED_OPTIMIZERS = ("coap-adamw",)
+
+
+def planned_rules(plan: Plan, min_dim: Optional[int] = None) -> PlannedRules:
+    overrides: Tuple[Tuple[str, ProjSpec], ...] = tuple(
+        (path, b.spec) for b in plan.buckets for path in b.paths
+    )
+    return PlannedRules(
+        rank_ratio=plan.globals_.rank_compression,
+        min_dim=plan.globals_.min_dim if min_dim is None else min_dim,
+        spec_overrides=overrides,
+    )
+
+
+def plan_overrides(plan: Plan) -> PlanOverrides:
+    return PlanOverrides(
+        entries=tuple(
+            (
+                path,
+                LeafOverrides(
+                    quantize=b.quantize,
+                    t_update=b.t_update,
+                    stagger_groups=b.stagger_groups,
+                ),
+            )
+            for b in plan.buckets
+            for path in b.paths
+        )
+    )
+
+
+def transform(plan: Plan, ocfg) -> GradientTransformation:
+    """The planned ``scale_by_projected_adam`` chain member (no grad clip /
+    lr — ``make_optimizer`` owns those). ``ocfg`` is the
+    ``core.api.OptimizerConfig`` carrying the run-level knobs the plan does
+    not own (lr, betas, weight decay)."""
+    if plan.optimizer not in _SUPPORTED_OPTIMIZERS:
+        raise ValueError(
+            f"plan optimizer {plan.optimizer!r} not supported by this build "
+            f"(supported: {_SUPPORTED_OPTIMIZERS})"
+        )
+    if ocfg.name not in ("coap-adamw", plan.optimizer):
+        raise ValueError(
+            f"OptimizerConfig.name={ocfg.name!r} conflicts with the plan's "
+            f"optimizer {plan.optimizer!r}"
+        )
+    g = plan.globals_
+    return _projected_adamw(
+        "coap",
+        ocfg.learning_rate,
+        planned_rules(plan),
+        b1=ocfg.b1,
+        b2=ocfg.b2,
+        eps=ocfg.eps,
+        weight_decay=ocfg.weight_decay,
+        t_update=g.t_update,
+        lam=g.lam,
+        eqn6_lr=g.eqn6_lr,
+        eqn6_steps=g.eqn6_steps,
+        # Run-level knobs stay on the OptimizerConfig (api.py contract):
+        # seed drives init RNG, update_scale / moment_transplant are
+        # training-dynamics choices the plan does not own.
+        # plan.globals_.seed records what the solver assumed (the
+        # OptimizerConfig default) for artifact reproducibility.
+        seed=ocfg.seed,
+        update_scale=ocfg.update_scale,
+        moment_transplant=ocfg.moment_transplant,
+        quantize=False,  # per-bucket via overrides, never globally
+        quant_block=g.quant_block,
+        state_dtype=jnp.dtype(g.state_dtype).type,
+        stagger=True,
+        stagger_groups=g.stagger_groups,
+        stacked_state=g.stacked_state,
+        overrides=plan_overrides(plan),
+    )

@@ -1,0 +1,193 @@
+"""The ``coap-plan/v1`` artifact: a versioned, portable plan codec.
+
+A plan is the contract between the solver and every consumer — the
+optimizer factory (``core/api.make_optimizer`` via ``OptimizerConfig.plan``),
+the dry-run byte cross-check (``launch/dryrun --plan``) and the CLI table
+(``launch/plan.py``). Like ``stacked-bucket/v2``, the codec string names the
+schema; readers reject anything outside :data:`DECODABLE_PLAN_CODECS`
+loudly instead of mis-applying knobs.
+
+Schema (v1):
+
+  * ``optimizer`` — the planned family (v1: ``coap-adamw``);
+  * ``globals`` — tree-wide knobs (``t_update``, ``lam``,
+    ``stagger_groups``, ``stacked_state``, ``state_dtype``, ``quant_block``,
+    ``seed``, ``eqn6_steps``, ``eqn6_lr``, the rank-compression quality
+    floor ``rank_compression`` and ``min_dim``);
+  * ``buckets`` — one entry per congruence bucket of the planned layout
+    (``stacked_state.build_layout`` under the planned rules): member
+    ``paths``, the pinned ``ProjSpec``, and the per-bucket knobs
+    ``quantize`` / ``t_update`` / ``stagger_groups``, plus the predicted
+    byte/cost/fused-Eqn-6 columns;
+  * ``predicted`` — by-category state bytes (must match
+    ``accounting.abstract_state_bytes`` of the constructed optimizer
+    EXACTLY — ``repro.plan.validate`` enforces it), the AdamW baseline,
+    both reduction ratios (the paper's moments-only denominator and the
+    everything-included one), and the budget decomposition;
+  * ``cost`` — predicted optimizer step seconds + the calibration ratios
+    (and which ``BENCH_*.json`` files supplied them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.projector import ProjSpec
+
+PLAN_CODEC_V1 = "coap-plan/v1"
+PLAN_CODEC = PLAN_CODEC_V1
+DECODABLE_PLAN_CODECS = frozenset({PLAN_CODEC_V1})
+
+
+class PlanVersionError(ValueError):
+    """Unknown/incompatible plan codec — fail loudly, never guess knobs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGlobals:
+    t_update: int = 40
+    lam: int = 5
+    stagger_groups: int = 8
+    stacked_state: bool = True
+    state_dtype: str = "float32"
+    quant_block: int = 256
+    seed: int = 0
+    eqn6_steps: int = 1
+    eqn6_lr: float = 0.1
+    rank_compression: float = 4.0  # quality floor: r >= min(m,n)/c
+    min_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    kind: str  # project | conv | dense
+    shape: Tuple[int, ...]
+    dtype: str
+    paths: Tuple[str, ...]
+    spec: ProjSpec
+    quantize: bool
+    t_update: int
+    stagger_groups: int
+    predicted_bytes: Dict[str, int]
+    baseline_adamw_bytes: int
+    predicted_step_cost_s: float
+    eqn6_fused: Optional[bool]
+
+    @property
+    def count(self) -> int:
+        return len(self.paths)
+
+    @property
+    def predicted_bytes_total(self) -> int:
+        return sum(self.predicted_bytes.values())
+
+
+@dataclasses.dataclass
+class Plan:
+    arch: Optional[str]
+    optimizer: str
+    budget_bytes: int
+    globals_: PlanGlobals
+    buckets: List[BucketPlan]
+    predicted: Dict[str, Any]
+    cost: Dict[str, Any]
+    codec: str = PLAN_CODEC_V1
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "codec": self.codec,
+            "arch": self.arch,
+            "optimizer": self.optimizer,
+            "budget_bytes": int(self.budget_bytes),
+            "globals": dataclasses.asdict(self.globals_),
+            "buckets": [
+                {
+                    "kind": b.kind,
+                    "shape": list(b.shape),
+                    "dtype": b.dtype,
+                    "count": b.count,
+                    "paths": list(b.paths),
+                    "spec": b.spec._asdict(),
+                    "quantize": b.quantize,
+                    "t_update": b.t_update,
+                    "stagger_groups": b.stagger_groups,
+                    "predicted_bytes": {
+                        k: int(v) for k, v in b.predicted_bytes.items()
+                    },
+                    "predicted_bytes_total": int(b.predicted_bytes_total),
+                    "baseline_adamw_bytes": int(b.baseline_adamw_bytes),
+                    "predicted_step_cost_s": b.predicted_step_cost_s,
+                    "eqn6_fused": b.eqn6_fused,
+                }
+                for b in self.buckets
+            ],
+            "predicted": self.predicted,
+            "cost": self.cost,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Plan":
+        codec = d.get("codec")
+        if codec not in DECODABLE_PLAN_CODECS:
+            raise PlanVersionError(
+                f"unknown plan codec {codec!r}: this build reads "
+                f"{sorted(DECODABLE_PLAN_CODECS)} — refusing to guess what "
+                "a newer/older schema means"
+            )
+        buckets = [
+            BucketPlan(
+                kind=b["kind"],
+                shape=tuple(int(s) for s in b["shape"]),
+                dtype=b["dtype"],
+                paths=tuple(b["paths"]),
+                spec=ProjSpec(**b["spec"]),
+                quantize=bool(b["quantize"]),
+                t_update=int(b["t_update"]),
+                stagger_groups=int(b["stagger_groups"]),
+                predicted_bytes={
+                    k: int(v) for k, v in b["predicted_bytes"].items()
+                },
+                baseline_adamw_bytes=int(b["baseline_adamw_bytes"]),
+                predicted_step_cost_s=float(b["predicted_step_cost_s"]),
+                eqn6_fused=b.get("eqn6_fused"),
+            )
+            for b in d["buckets"]
+        ]
+        return cls(
+            codec=codec,
+            arch=d.get("arch"),
+            optimizer=d["optimizer"],
+            budget_bytes=int(d["budget_bytes"]),
+            globals_=PlanGlobals(**d["globals"]),
+            buckets=buckets,
+            predicted=d["predicted"],
+            cost=d["cost"],
+        )
+
+
+def save_plan(plan: Plan, path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(plan.to_dict(), f, indent=1, sort_keys=True)
+    return path
+
+
+def load_plan(path: str) -> Plan:
+    with open(path) as f:
+        return Plan.from_dict(json.load(f))
+
+
+def resolve(plan_or_path) -> Plan:
+    """Accept a Plan, a dict, or a JSON path — everything a config field or
+    CLI flag might carry."""
+    if isinstance(plan_or_path, Plan):
+        return plan_or_path
+    if isinstance(plan_or_path, dict):
+        return Plan.from_dict(plan_or_path)
+    if isinstance(plan_or_path, (str, os.PathLike)):
+        return load_plan(os.fspath(plan_or_path))
+    raise TypeError(
+        f"cannot resolve a plan from {type(plan_or_path).__name__}"
+    )

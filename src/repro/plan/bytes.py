@@ -1,0 +1,172 @@
+"""Exact optimizer-state byte model — the planner's memory ground truth.
+
+Every formula here restates a storage rule of ``core/coap_adam`` /
+``core/conv`` in closed form:
+
+  * ``ProjLeaf``  — P from ``projector.init_p`` (state dtype), moments from
+    ``moment_shape`` stored via ``_init_stored_proj`` (state dtype, or the
+    shape-preserving row-block int8 codec + per-row-block fp32 scales);
+  * ``ConvLeaf``  — Tucker-2 factors from ``conv.init_factors`` (always
+    fp32), core moments from ``conv.core_shape`` stored via ``_init_stored``
+    (state dtype, or the flat ``(nblocks, block)`` int8 codec);
+  * ``DenseLeaf`` — full-shape moments via ``_init_stored``;
+  * unquantized leaves carry two ``(1,)`` fp32 scale placeholders
+    ("counted for honesty", accounting.py).
+
+Categories match ``accounting._CATEGORY_FIELDS`` verbatim, so a predicted
+report compares against ``accounting.abstract_state_bytes`` per category —
+and ``tests/test_plan.py`` property-checks the equality EXACTLY on
+randomized trees. Stacking is byte-neutral (a bucket stacks B equal-shape
+arrays), so one model covers ``stacked_state`` True and False.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.core.projector import KIND_CONV, KIND_PROJECT, ProjSpec
+from repro.core.stacked_state import StackedLayout
+from repro.kernels import ref as kref
+
+# accounting.CATEGORY_GROUPS is the authoritative grouping; imported there.
+CAT_PROJECTION = "projection"
+CAT_MOMENTS = "moments"
+CAT_DENSE_MOMENTS = "dense_moments"
+CAT_SCALES = "quant_scales"
+CAT_OTHER = "other"
+
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _canonical_mn(shape, spec: ProjSpec) -> Tuple[int, int, int]:
+    """(lead numel, canonical m, canonical n) of a projected leaf."""
+    lead = _numel(shape[:-2])
+    m, n = int(shape[-2]), int(shape[-1])
+    if spec.transpose:
+        m, n = n, m
+    return lead, m, n
+
+
+def _merge(into: Dict[str, int], add: Dict[str, int], times: int = 1) -> None:
+    for k, v in add.items():
+        into[k] = into.get(k, 0) + v * times
+
+
+def proj_leaf_bytes(
+    shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
+    block: int = kref.QUANT_BLOCK,
+) -> Dict[str, int]:
+    """One ``ProjLeaf``: P ``lead+(n, r)``; moments ``lead+(m, r)``."""
+    lead, m, n = _canonical_mn(shape, spec)
+    r = int(spec.rank)
+    out = {CAT_PROJECTION: lead * n * r * state_itemsize}
+    if quantize:
+        nblk = kref.rowblock_nblocks(r, block)
+        out[CAT_MOMENTS] = 2 * lead * m * r  # int8, shape-preserving
+        out[CAT_SCALES] = 2 * lead * m * nblk * 4
+    else:
+        out[CAT_MOMENTS] = 2 * lead * m * r * state_itemsize
+        out[CAT_SCALES] = 2 * 4  # (1,) fp32 placeholders
+    return out
+
+
+def conv_leaf_bytes(
+    shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
+    block: int = kref.QUANT_BLOCK,
+) -> Dict[str, int]:
+    """One ``ConvLeaf``: factors ``(O, r_O)``/``(I, r_I)`` fp32; core
+    moments ``(r_O, r_I, K1, K2)`` under the flat int8 codec when
+    quantized."""
+    o, i = int(shape[0]), int(shape[1])
+    core = int(spec.rank_o) * int(spec.rank_i) * _numel(shape[2:])
+    out = {CAT_PROJECTION: (o * spec.rank_o + i * spec.rank_i) * 4}
+    if quantize:
+        nblocks = -(-core // block)
+        out[CAT_MOMENTS] = 2 * nblocks * block  # int8 codes, zero-padded
+        out[CAT_SCALES] = 2 * nblocks * 4
+    else:
+        out[CAT_MOMENTS] = 2 * core * state_itemsize
+        out[CAT_SCALES] = 2 * 4
+    return out
+
+
+def dense_leaf_bytes(
+    shape, quantize: bool, state_itemsize: int = 4,
+    block: int = kref.QUANT_BLOCK,
+) -> Dict[str, int]:
+    """One ``DenseLeaf``: full-shape Adam moments."""
+    nel = _numel(shape)
+    if quantize:
+        nblocks = -(-nel // block)
+        return {CAT_DENSE_MOMENTS: 2 * nblocks * block,
+                CAT_SCALES: 2 * nblocks * 4}
+    return {CAT_DENSE_MOMENTS: 2 * nel * state_itemsize, CAT_SCALES: 2 * 4}
+
+
+def leaf_state_bytes(
+    shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
+    block: int = kref.QUANT_BLOCK,
+) -> Dict[str, int]:
+    if spec.kind == KIND_PROJECT:
+        return proj_leaf_bytes(shape, spec, quantize, state_itemsize, block)
+    if spec.kind == KIND_CONV:
+        return conv_leaf_bytes(shape, spec, quantize, state_itemsize, block)
+    return dense_leaf_bytes(shape, quantize, state_itemsize, block)
+
+
+def layout_state_report(
+    layout: StackedLayout,
+    shapes: List[Tuple[int, ...]],
+    quantize_for: Callable[[str], bool],
+    state_itemsize: int = 4,
+    block: int = kref.QUANT_BLOCK,
+) -> Tuple[Dict[str, int], List[Dict[str, int]]]:
+    """Predicted ``scale_by_projected_adam`` state bytes for a layout.
+
+    ``shapes[i]`` is the i-th flat leaf's shape; ``quantize_for(path)``
+    resolves the per-leaf storage codec (a plan's per-bucket knob). Returns
+    ``(by_category_total, per_bucket)`` where ``per_bucket`` aligns with
+    ``layout.buckets`` followed by ``layout.tail``. The total includes the
+    transform's own step counter (4 bytes, 'other') — chain-level scalars
+    (e.g. a schedule count) are the caller's to add.
+    """
+    total: Dict[str, int] = {}
+    per_bucket: List[Dict[str, int]] = []
+    for info in layout.buckets:
+        q = quantize_for(info.paths[0])
+        one = leaf_state_bytes(
+            shapes[info.indices[0]], info.spec, q, state_itemsize, block
+        )
+        mine: Dict[str, int] = {}
+        _merge(mine, one, times=len(info.indices))
+        per_bucket.append(mine)
+        _merge(total, mine)
+    for t in layout.tail:
+        one = leaf_state_bytes(
+            shapes[t.index], t.spec, quantize_for(t.path), state_itemsize,
+            block,
+        )
+        per_bucket.append(dict(one))
+        _merge(total, one)
+    _merge(total, {CAT_OTHER: 4})  # ProjectedAdamState.count (int32)
+    return total, per_bucket
+
+
+def adamw_baseline_report(
+    shapes: List[Tuple[int, ...]], moment_itemsize: int = 4
+) -> Dict[str, int]:
+    """The dense-AdamW denominator: two full moments per param leaf (api
+    passes ``mu_dtype=state_dtype``) plus the step counter."""
+    nel = sum(_numel(s) for s in shapes)
+    return {CAT_DENSE_MOMENTS: 2 * nel * moment_itemsize, CAT_OTHER: 4}
+
+
+def params_grads_bytes(shapes, itemsizes) -> Tuple[int, int]:
+    """(params, grads) resident bytes — the budget's fixed terms. Gradients
+    are materialized in the parameter dtype."""
+    b = sum(_numel(s) * int(i) for s, i in zip(shapes, itemsizes))
+    return b, b

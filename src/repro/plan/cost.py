@@ -1,0 +1,189 @@
+"""Per-step cost model for the planner — calibrated, roofline-shaped.
+
+A bucket's per-step cost is ``max(bytes/HBM_BW, flops/PEAK_FLOPS)`` (the
+``launch/roofline`` terms and hardware constants), summed over buckets:
+
+  * hot path — gradient in + update out, optimizer state read+written at
+    its STORED width (int8 states stream 1/4 the fp32 bytes + sidecar),
+    P read; with per-leaf (non-stacked) storage the state traffic is
+    multiplied by the measured stack/scatter copy factor from
+    ``BENCH_state.json`` (analytic 6S vs 2S = 3x);
+  * refresh — amortized by the schedule: Eqn-6 at rate ``1/T_u − 1/(λT_u)``
+    streams G once per SGD step when the fused kernel fits VMEM
+    (``kernels.eqn6.plan_bm`` — the kernel's OWN trace-time guard, so the
+    planner predicts exactly what the dispatch will decide), and the
+    measured unfused multiplier from ``BENCH_refresh.json`` (11 G-sized
+    streams) when it does not; Eqn-7 recalibration at ``1/(λT_u)`` streams
+    G twice (``BENCH_refresh`` / ``BENCH_conv`` accounting: two sweeps per
+    mode for conv).
+
+Calibration ratios are read from the ``BENCH_*.json`` files at the repo
+root when present and fall back to their shipped values otherwise — the
+plan artifact records which sources were live.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.core.projector import KIND_CONV, KIND_PROJECT, ProjSpec
+from repro.kernels import eqn6 as eqn6_mod
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.plan import bytes as pbytes
+
+_BENCH_DEFAULTS = {
+    # BENCH_refresh.json: eqn6_g_stream_ratio_min — G-sized streams of the
+    # unfused Eqn-6 chain per fused-kernel stream.
+    "eqn6_unfused_g_streams": 11.0,
+    # BENCH_state.json: analytic per-leaf/stacked state-traffic ratio
+    # (6S stack+kernel+scatter vs 2S in-place).
+    "state_copy_factor": 3.0,
+    # BENCH_overhead.json: fused q8 bytes win over the 8-dispatch schedule
+    # (conservative, incl. P re-stream) — the penalty an unfused q8 path
+    # would pay.
+    "q8_unfused_ratio": 1.75,
+    # BENCH_conv.json: per-step launches per conv leaf vs per bucket
+    # (recorded for the report; launch overhead itself is not modeled).
+    "conv_launch_ratio": 9.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    eqn6_unfused_g_streams: float = _BENCH_DEFAULTS["eqn6_unfused_g_streams"]
+    state_copy_factor: float = _BENCH_DEFAULTS["state_copy_factor"]
+    q8_unfused_ratio: float = _BENCH_DEFAULTS["q8_unfused_ratio"]
+    conv_launch_ratio: float = _BENCH_DEFAULTS["conv_launch_ratio"]
+    sources: Tuple[Tuple[str, str], ...] = ()  # (ratio, file) actually loaded
+
+    @classmethod
+    def load(cls, root: Optional[str] = None) -> "Calibration":
+        if root is None:
+            root = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__)))))
+        vals = dict(_BENCH_DEFAULTS)
+        sources = []
+
+        def pull(fname, extract):
+            path = os.path.join(root, fname)
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+                for key, value in extract(data).items():
+                    if value and value > 0:
+                        vals[key] = float(value)
+                        sources.append((key, fname))
+            except (OSError, ValueError, KeyError, TypeError,
+                    AttributeError, ZeroDivisionError):
+                pass  # malformed/partial bench file -> shipped default
+
+        pull("BENCH_refresh.json", lambda d: {
+            "eqn6_unfused_g_streams": d.get("eqn6_g_stream_ratio_min")})
+        pull("BENCH_state.json", lambda d: {
+            "state_copy_factor":
+                d.get("analytic", {}).get("int8", {}).get("ratio")})
+        pull("BENCH_overhead.json", lambda d: {
+            "q8_unfused_ratio": d.get("ratio_min_conservative")})
+        pull("BENCH_conv.json", lambda d: {
+            "conv_launch_ratio": (
+                d.get("conv_refresh", {}).get("launches_per_step_per_leaf", 0)
+                / max(1, d.get("conv_refresh", {})
+                      .get("launches_per_step_bucketed", 1)))})
+        return cls(sources=tuple(sources), **vals)
+
+
+def eqn6_fused_ok(m: int, n: int, r: int, g_itemsize: int = 4,
+                  vmem_budget: Optional[int] = None) -> bool:
+    """Will the fused Eqn-6 kernel fit VMEM at this (m, n, r)? Asks the
+    kernel's own trace-time planner, so plan-time prediction and dispatch
+    behavior cannot drift."""
+    return eqn6_mod.plan_bm(
+        m, n, r, g_itemsize=g_itemsize, budget=vmem_budget
+    ) is not None
+
+
+def _roofline_seconds(bytes_: float, flops: float) -> float:
+    return max(bytes_ / HBM_BW, flops / PEAK_FLOPS)
+
+
+def bucket_step_cost(
+    kind: str,
+    shape,
+    spec: ProjSpec,
+    count: int,
+    *,
+    quantize: bool,
+    t_update: int,
+    lam: int,
+    eqn6_steps: int = 1,
+    stacked_state: bool = True,
+    state_itemsize: int = 4,
+    grad_itemsize: int = 4,
+    calib: Calibration,
+    vmem_budget: Optional[int] = None,
+) -> Dict[str, float]:
+    """Predicted amortized per-step cost of one bucket (``count`` leaves).
+
+    Returns ``{seconds, bytes_per_step, flops_per_step, eqn6_fused}`` —
+    ``eqn6_fused`` is None for buckets with no Eqn-6 refresh (dense, or
+    non-coap paths).
+    """
+    state = pbytes.leaf_state_bytes(shape, spec, quantize, state_itemsize)
+    state_total = sum(state.values())
+    moments = state_total - state.get(pbytes.CAT_PROJECTION, 0)
+    numel = pbytes._numel(shape)
+    g_bytes = numel * grad_itemsize
+
+    copy_f = 1.0 if stacked_state else calib.state_copy_factor
+    # hot path: G in + update out + moments read/written at stored width
+    # (+ sidecar) + P read.
+    hot_bytes = 2.0 * g_bytes + copy_f * (
+        2.0 * moments + state.get(pbytes.CAT_PROJECTION, 0)
+    )
+    eqn6_fused = None
+    if kind == KIND_PROJECT:
+        lead, m, n = pbytes._canonical_mn(shape, spec)
+        r = int(spec.rank)
+        hot_flops = 4.0 * lead * m * n * r + 8.0 * lead * m * r
+        eqn6_fused = eqn6_fused_ok(m, n, r, grad_itemsize, vmem_budget)
+        g_mult = 1.0 if eqn6_fused else calib.eqn6_unfused_g_streams
+        eqn6_bytes = g_bytes * eqn6_steps * g_mult
+        eqn6_flops = 6.0 * lead * m * n * r * eqn6_steps
+        recal_bytes = 2.0 * g_bytes
+        recal_flops = 2.0 * lead * m * n * r + 4.0 * lead * m * r * r
+    elif kind == KIND_CONV:
+        o, i = int(shape[0]), int(shape[1])
+        k = pbytes._numel(shape[2:])
+        ro, ri = int(spec.rank_o), int(spec.rank_i)
+        # project_core + restore_core: two einsum pairs over the core chain.
+        pair = 2.0 * o * i * k * ri + 2.0 * o * ri * k * ro
+        hot_flops = 2.0 * pair + 8.0 * ro * ri * k
+        fused1 = eqn6_fused_ok(i * k, o, ro, grad_itemsize, vmem_budget)
+        fused2 = eqn6_fused_ok(o * k, i, ri, grad_itemsize, vmem_budget)
+        eqn6_fused = fused1 and fused2
+        g_mult = 1.0 if eqn6_fused else calib.eqn6_unfused_g_streams
+        # one canonical-unfolding sweep per mode (BENCH_conv accounting)
+        eqn6_bytes = 2.0 * g_bytes * eqn6_steps * g_mult
+        eqn6_flops = (2.0 * i * k * o * ro + 2.0 * o * k * i * ri) * eqn6_steps
+        recal_bytes = 4.0 * g_bytes  # two sweeps per mode
+        recal_flops = 2.0 * eqn6_flops
+    else:  # dense Adam
+        hot_flops = 8.0 * numel
+        eqn6_bytes = eqn6_flops = recal_bytes = recal_flops = 0.0
+
+    t_u = max(1, int(t_update))
+    lam_tu = max(1, int(lam)) * t_u
+    eqn6_rate = max(0.0, 1.0 / t_u - 1.0 / lam_tu)
+    recal_rate = 1.0 / lam_tu
+    bytes_step = hot_bytes + eqn6_rate * eqn6_bytes + recal_rate * recal_bytes
+    flops_step = hot_flops + eqn6_rate * eqn6_flops + recal_rate * recal_flops
+    bytes_step *= count
+    flops_step *= count
+    return {
+        "seconds": _roofline_seconds(bytes_step, flops_step),
+        "bytes_per_step": bytes_step,
+        "flops_per_step": flops_step,
+        "eqn6_fused": eqn6_fused,
+    }

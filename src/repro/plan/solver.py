@@ -1,0 +1,339 @@
+"""The budget solver: per-bucket knobs under an HBM budget.
+
+Budget semantics: the budget covers the resident TRAINING STATE — params +
+gradients (fixed terms, parameter dtype) + optimizer state (the planner's
+controlled term). Activation working set is out of scope (it is a
+batch/remat decision, not an optimizer-state one).
+
+Knob selection:
+
+  * **rank** — quality-floored cost minimization. The paper's matched-PPL
+    recipe is a compression ratio ``c`` (rank = min(m, n)/c; Tucker-2
+    splits √c per mode), so ranks below ``min(m,n)/c`` are inadmissible;
+    among admissible candidates (the floor and power-of-two steps above
+    it) the solver keeps the predicted-cheapest, which under the roofline
+    model is the floor — higher ranks only buy quality the floor already
+    guarantees. Leaves the base policy excludes (embeddings, norms,
+    sub-``min_dim``) stay dense.
+  * **quantize** — quality-lexicographic: fp32 states are preferred
+    whenever they fit the budget (int8 is quality-neutral per the paper
+    but not free); when fp32 does not fit, buckets flip to the int8 codec
+    GREEDILY by bytes saved until the plan fits — so intermediate budgets
+    yield genuinely mixed per-bucket plans. ``quantize='force'``/``'off'``
+    override. Still over budget with everything int8 -> loud
+    :class:`PlanInfeasibleError` (never a silently-broken plan).
+  * **T_u / λ / stagger_groups** — the paper's scale recipe (T_u 40, λ 5
+    up to ~3B; T_u 100, λ 1 above), ``stagger_groups`` capped at the
+    bucket's leaf count; recorded per bucket (the optimizer honors
+    per-bucket values — ``coap_adam.PlanOverrides``).
+  * **stacked_state** — on whenever the measured stack/scatter copy factor
+    (``BENCH_state.json``) says pre-stacked storage is cheaper (it always
+    is; the knob exists so a calibration could turn it off).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projector import (
+    KIND_CONV,
+    KIND_PROJECT,
+    ProjSpec,
+    ProjectionRules,
+    path_str,
+)
+from repro.core import stacked_state
+from repro.kernels import ref as kref
+from repro.plan import bytes as pbytes
+from repro.plan import cost as pcost
+from repro.plan.artifact import (
+    PLAN_CODEC_V1,
+    BucketPlan,
+    Plan,
+    PlanGlobals,
+)
+
+
+class PlanInfeasibleError(ValueError):
+    """No admissible knob assignment fits the budget."""
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _rank_candidates(floor: int, cap: int) -> List[int]:
+    """The quality-admissible rank ladder: the floor, then power-of-two
+    steps up to (excl.) the dense cap."""
+    out = [floor]
+    p = _next_pow2(floor + 1)
+    while p < cap:
+        out.append(p)
+        p *= 2
+    return out
+
+
+def _flatten(tree) -> Tuple[List[str], List[Tuple[int, ...]], List[str]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [path_str(kp) for kp, _ in flat]
+    shapes = [tuple(int(s) for s in leaf.shape) for _, leaf in flat]
+    dtypes = [jnp.dtype(leaf.dtype).name for _, leaf in flat]
+    return paths, shapes, dtypes
+
+
+def solve(
+    params,
+    budget_bytes: Optional[int],
+    *,
+    arch: Optional[str] = None,
+    optimizer: str = "coap-adamw",
+    rank_compression: float = 4.0,
+    min_dim: int = 128,
+    quantize: str = "auto",  # 'auto' | 'force' | 'off'
+    t_update: Optional[int] = None,
+    lam: Optional[int] = None,
+    stagger_groups: int = 8,
+    state_dtype: str = "float32",
+    quant_block: int = kref.QUANT_BLOCK,
+    seed: int = 0,
+    eqn6_steps: int = 1,
+    eqn6_lr: float = 0.1,
+    big_model: Optional[bool] = None,
+    calib: Optional[pcost.Calibration] = None,
+    vmem_budget: Optional[int] = None,
+) -> Plan:
+    """Plan ``params`` (a concrete or abstract pytree) under
+    ``budget_bytes`` (``None`` = unconstrained: keep the quality-preferred
+    fp32 codec everywhere and record the resulting resident total as the
+    budget). Returns a validated-schema :class:`Plan`."""
+    if quantize not in ("auto", "force", "off"):
+        raise ValueError("quantize must be 'auto', 'force' or 'off'")
+    calib = calib or pcost.Calibration.load()
+    paths, shapes, dtypes = _flatten(params)
+    state_itemsize = jnp.dtype(state_dtype).itemsize
+
+    n_params = sum(pbytes._numel(s) for s in shapes)
+    if big_model is None:
+        big_model = n_params > 3e9
+    # Paper scale recipe (Table 5 / appendix): rank via c, T_u 40 λ 5 for
+    # ~1B; T_u 100 λ 1 for 7B+ (same defaults launch/dryrun uses).
+    t_u = int(t_update) if t_update is not None else (100 if big_model else 40)
+    lam_ = int(lam) if lam is not None else (1 if big_model else 5)
+
+    base_rules = ProjectionRules(rank_ratio=rank_compression, min_dim=min_dim)
+    stacked = calib.state_copy_factor > 1.0
+
+    # ---- rank selection per leaf (identical across congruent leaves) ----
+    dtype_of = dict(zip(paths, dtypes))
+
+    def cost_of(kind: str, shape, spec: ProjSpec, q: bool,
+                g_itemsize: int = 4) -> Dict[str, float]:
+        return pcost.bucket_step_cost(
+            kind, shape, spec, 1, quantize=q, t_update=t_u, lam=lam_,
+            eqn6_steps=eqn6_steps, stacked_state=stacked,
+            state_itemsize=state_itemsize, grad_itemsize=g_itemsize,
+            calib=calib, vmem_budget=vmem_budget,
+        )
+
+    def choose_spec(path: str, shape) -> ProjSpec:
+        base = base_rules.spec_for(path, shape)
+        if base.kind == KIND_PROJECT:
+            mn = min(shape[-2], shape[-1])
+            cands = [
+                base._replace(rank=r)
+                for r in _rank_candidates(base.rank, mn)
+            ]
+        elif base.kind == KIND_CONV:
+            o, i = int(shape[0]), int(shape[1])
+            pairs = {(base.rank_o, base.rank_i)}
+            ro, ri = base.rank_o, base.rank_i
+            while _next_pow2(ro + 1) < o and _next_pow2(ri + 1) < i:
+                ro, ri = _next_pow2(ro + 1), _next_pow2(ri + 1)
+                pairs.add((ro, ri))
+            cands = [
+                base._replace(rank_o=ro, rank_i=ri)
+                for ro, ri in sorted(pairs)
+            ]
+        else:
+            return base
+        return min(
+            cands,
+            key=lambda sp: cost_of(
+                base.kind, shape, sp, False,
+                jnp.dtype(dtype_of[path]).itemsize,
+            )["seconds"],
+        )
+
+    chosen = {p: choose_spec(p, s) for p, s in zip(paths, shapes)}
+    layout = stacked_state.build_layout(
+        lambda p, s: chosen[p], paths, shapes, dtypes
+    )
+    if layout.tail:  # classify_default never tails; guard custom futures
+        raise ValueError(
+            "planner requires the default bucket classification "
+            "(no per-leaf tail); got tail leaves "
+            f"{[t.path for t in layout.tail]}"
+        )
+
+    # ---- budget: fixed terms + fp32 state, then the quantize knapsack ----
+    itemsizes = [jnp.dtype(d).itemsize for d in dtypes]
+    params_b, grads_b = pbytes.params_grads_bytes(shapes, itemsizes)
+    fixed = params_b + grads_b
+
+    def bucket_bytes(info, q: bool) -> Dict[str, int]:
+        one = pbytes.leaf_state_bytes(
+            shapes[info.indices[0]], info.spec, q, state_itemsize, quant_block
+        )
+        return {k: v * len(info.indices) for k, v in one.items()}
+
+    fp32_b = [sum(bucket_bytes(i, False).values()) for i in layout.buckets]
+    q8_b = [sum(bucket_bytes(i, True).values()) for i in layout.buckets]
+
+    quantized = [quantize == "force"] * len(layout.buckets)
+    if quantize == "auto" and budget_bytes is not None:
+        total = fixed + sum(fp32_b) + 4  # + step counter
+        if total > budget_bytes:
+            order = sorted(
+                range(len(layout.buckets)),
+                key=lambda i: q8_b[i] - fp32_b[i],  # biggest saving first
+            )
+            for i in order:
+                if total <= budget_bytes:
+                    break
+                if q8_b[i] < fp32_b[i]:
+                    quantized[i] = True
+                    total += q8_b[i] - fp32_b[i]
+    state_total = 4 + sum(
+        (q8_b[i] if q else fp32_b[i]) for i, q in enumerate(quantized)
+    )
+    hbm_total = fixed + state_total
+    if budget_bytes is None:
+        budget_bytes = hbm_total
+    if hbm_total > budget_bytes:
+        raise PlanInfeasibleError(
+            f"budget {budget_bytes/1e9:.2f} GB cannot hold params+grads "
+            f"({fixed/1e9:.2f} GB) plus the smallest admissible optimizer "
+            f"state ({state_total/1e9:.2f} GB) at rank compression "
+            f"c={rank_compression}; raise the budget or relax c"
+        )
+
+    # ---- assemble the artifact ----
+    # THE byte roll-up: layout_state_report (also what the parity property
+    # test exercises) — per-bucket tables + the by-category total incl.
+    # the step counter, one definition for solver and verifier alike.
+    quantize_by_path = {
+        p: quantized[i]
+        for i, info in enumerate(layout.buckets)
+        for p in info.paths
+    }
+    by_cat, per_bucket = pbytes.layout_state_report(
+        layout, shapes, lambda p: quantize_by_path[p], state_itemsize,
+        quant_block,
+    )
+    bucket_plans: List[BucketPlan] = []
+    step_seconds = 0.0
+    for i, info in enumerate(layout.buckets):
+        q = quantized[i]
+        bb = per_bucket[i]
+        # Gradients materialize in the LEAF's dtype — the fused-Eqn-6
+        # feasibility check must see the same itemsize the real dispatch
+        # will (bf16 streaming halves the tile footprint), or the plan's
+        # FALLBACK column drifts from the live kernel decision.
+        c = pcost.bucket_step_cost(
+            info.kind, shapes[info.indices[0]], info.spec, len(info.indices),
+            quantize=q, t_update=t_u, lam=lam_, eqn6_steps=eqn6_steps,
+            stacked_state=stacked, state_itemsize=state_itemsize,
+            grad_itemsize=jnp.dtype(info.dtype).itemsize,
+            calib=calib, vmem_budget=vmem_budget,
+        )
+        step_seconds += c["seconds"]
+        base_b = 2 * pbytes._numel(shapes[info.indices[0]]) * 4 * len(
+            info.indices
+        )
+        bucket_plans.append(
+            BucketPlan(
+                kind=info.kind,
+                shape=info.shape,
+                dtype=info.dtype,
+                paths=info.paths,
+                spec=info.spec,
+                quantize=q,
+                t_update=t_u,
+                stagger_groups=min(stagger_groups, len(info.indices)),
+                predicted_bytes=bb,
+                baseline_adamw_bytes=base_b,
+                predicted_step_cost_s=c["seconds"],
+                eqn6_fused=c["eqn6_fused"],
+            )
+        )
+
+    baseline = pbytes.adamw_baseline_report(shapes, 4)
+    base_total = sum(baseline.values())
+    state_sum = sum(by_cat.values())
+    groups = _grouped(by_cat)
+    bgroups = _grouped(baseline)
+    # Paper denominator: moment state (+ int8 sidecar) — P excluded from
+    # BOTH sides (the paper's 'Optimizer Mem.' counts moments).
+    red_moments = 1.0 - (
+        (groups["moment_state"] + groups["quant_sidecar"])
+        / max(1, bgroups["moment_state"])
+    )
+    red_total = 1.0 - state_sum / max(1, base_total)
+
+    predicted = {
+        "by_category": {k: int(v) for k, v in sorted(by_cat.items())},
+        "state_bytes_total": int(state_sum),
+        "baseline": {
+            "by_category": {k: int(v) for k, v in sorted(baseline.items())},
+            "state_bytes_total": int(base_total),
+        },
+        "reduction_vs_adamw": red_moments,
+        "reduction_vs_adamw_total": red_total,
+        "params_bytes": int(params_b),
+        "grads_bytes": int(grads_b),
+        "hbm_total_bytes": int(fixed + state_sum),
+        "n_quantized_buckets": int(sum(quantized)),
+    }
+    cost = {
+        "step_seconds": step_seconds,
+        "calibration": {
+            "eqn6_unfused_g_streams": calib.eqn6_unfused_g_streams,
+            "state_copy_factor": calib.state_copy_factor,
+            "q8_unfused_ratio": calib.q8_unfused_ratio,
+            "conv_launch_ratio": calib.conv_launch_ratio,
+        },
+        "calibration_sources": [list(s) for s in calib.sources],
+    }
+    return Plan(
+        codec=PLAN_CODEC_V1,
+        arch=arch,
+        optimizer=optimizer,
+        budget_bytes=int(budget_bytes),
+        globals_=PlanGlobals(
+            t_update=t_u,
+            lam=lam_,
+            stagger_groups=stagger_groups,
+            stacked_state=stacked,
+            state_dtype=state_dtype,
+            quant_block=quant_block,
+            seed=seed,
+            eqn6_steps=eqn6_steps,
+            eqn6_lr=eqn6_lr,
+            rank_compression=rank_compression,
+            min_dim=min_dim,
+        ),
+        buckets=bucket_plans,
+        predicted=predicted,
+        cost=cost,
+    )
+
+
+def _grouped(by_cat: Dict[str, int]) -> Dict[str, int]:
+    from repro.core.accounting import group_categories
+
+    return group_categories(by_cat)

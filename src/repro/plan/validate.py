@@ -1,0 +1,99 @@
+"""Exactness cross-check: planner-predicted bytes vs the real optimizer.
+
+``verify(plan, params)`` constructs the optimizer the plan configures
+(through ``core.api.make_optimizer`` — the same path training uses), runs
+``accounting.abstract_state_bytes`` over it (eval_shape: no allocation,
+works at grok-314B scale), and compares against the plan's predicted
+by-category bytes. The match must be EXACT — a single byte of drift means
+the byte model and the storage codec have diverged and the plan's budget
+math can no longer be trusted.
+
+Also surfaces the fused-Eqn-6 feasibility telemetry: the per-bucket
+fallback prediction recorded in the plan, and (when the caller traced a
+step) the live fallback counters from ``kernels.ops``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.plan.artifact import Plan
+
+
+class PlanMismatchError(AssertionError):
+    """Predicted bytes do not match the constructed optimizer's state."""
+
+
+def optimizer_config(plan: Plan, learning_rate: float = 1e-3, **kw):
+    """The ``OptimizerConfig`` that consumes this plan (float lr by
+    default — a schedule adds one count scalar the plan does not model)."""
+    from repro.core.api import OptimizerConfig
+
+    return OptimizerConfig(
+        name=plan.optimizer, learning_rate=learning_rate, plan=plan, **kw
+    )
+
+
+def verify(
+    plan: Plan,
+    params: Any,
+    learning_rate: float = 1e-3,
+    raise_on_mismatch: bool = True,
+) -> Dict[str, Any]:
+    """Build the planned optimizer and check predicted == accounted bytes.
+
+    ``params`` may be concrete arrays or ShapeDtypeStructs. Returns a
+    report dict; raises :class:`PlanMismatchError` on any byte drift unless
+    ``raise_on_mismatch=False``.
+    """
+    from repro.core.accounting import abstract_state_bytes
+    from repro.core.api import make_optimizer
+
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params
+    )
+    tx = make_optimizer(optimizer_config(plan, learning_rate))
+    rep = abstract_state_bytes(tx, shapes)
+
+    want = dict(plan.predicted["by_category"])
+    if callable(learning_rate):  # schedule: one extra count scalar
+        want["other"] = want.get("other", 0) + 4
+    got = {k: int(v) for k, v in rep.by_category.items()}
+    match = got == want and rep.total_bytes == sum(want.values())
+
+    report = {
+        "match": match,
+        "predicted_by_category": want,
+        "accounted_by_category": got,
+        "predicted_total": sum(want.values()),
+        "accounted_total": int(rep.total_bytes),
+        "eqn6_fallback_buckets": [
+            {"shape": list(b.shape), "rank": b.spec.rank, "count": b.count}
+            for b in plan.buckets
+            if b.eqn6_fused is False
+        ],
+    }
+    if not match and raise_on_mismatch:
+        diffs = {
+            k: (want.get(k, 0), got.get(k, 0))
+            for k in sorted(set(want) | set(got))
+            if want.get(k, 0) != got.get(k, 0)
+        }
+        raise PlanMismatchError(
+            "planner-predicted bytes do not match "
+            "accounting.abstract_state_bytes of the constructed optimizer: "
+            f"per-category (predicted, accounted) diffs = {diffs}"
+        )
+    return report
+
+
+def live_eqn6_fallbacks() -> Dict[str, int]:
+    """The per-shape fused-Eqn-6 fallback counters accumulated since the
+    last reset (``kernels.ops`` telemetry) — keyed '(m, n, r)' for JSON."""
+    from repro.kernels import ops as kops
+
+    return {
+        f"({m}, {n}, {r})": c
+        for (m, n, r), c in sorted(kops.eqn6_fallback_counts().items())
+    }

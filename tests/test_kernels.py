@@ -497,6 +497,7 @@ def test_eqn6_ops_falls_back_unfused_on_vmem(monkeypatch):
 
     monkeypatch.setenv("REPRO_PALLAS", "interpret")
     monkeypatch.setenv(eqn6_mod._VMEM_ENV, "1024")  # nothing fits
+    kops.reset_eqn6_fallbacks()  # the warning dedupes per (n, r, budget)
     g = _rand((64, 48), 3)
     p = _rand((48, 8), 4) / np.sqrt(8)
     mp = 0.1 * _rand((64, 8), 5)
@@ -505,6 +506,8 @@ def test_eqn6_ops_falls_back_unfused_on_vmem(monkeypatch):
         got = kops.eqn6_sgd_update(p, g, mp, lr=0.1, steps=2)
     assert any("VMEM" in str(w.message) or "Eqn-6" in str(w.message)
                for w in caught)
+    # ...and the fallback is COUNTED (plan/dryrun telemetry satellite)
+    assert kops.eqn6_fallback_counts()[(64, 48, 8)] == 1
     want = correlation.sgd_update(p, g, mp, lr=0.1, steps=2)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
