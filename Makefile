@@ -1,6 +1,6 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke plan plan-smoke bench-overhead bench-refresh bench-state \
-	bench-conv bench-plan
+.PHONY: test smoke plan plan-smoke fault-smoke bench-overhead bench-refresh \
+	bench-state bench-conv bench-plan bench-elastic
 
 test:
 	./scripts/ci.sh
@@ -20,6 +20,12 @@ plan:
 # Plans all 11 registry archs under an auto budget and byte-verifies each.
 plan-smoke:
 	./scripts/ci.sh plan-smoke
+
+# Elastic/fault-injection smoke: the replan->migrate->resume control loop
+# (supervisor kill/shrink/torn-checkpoint scenarios) under interpret-mode
+# kernels. Part of the default `make test` path via scripts/ci.sh.
+fault-smoke:
+	./scripts/ci.sh fault-smoke
 
 # Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
@@ -47,3 +53,9 @@ bench-conv:
 # reductions vs the AdamW baseline + exact predicted-vs-accounted bytes).
 bench-plan:
 	PYTHONPATH=src:. python benchmarks/run.py --only plan
+
+# Regenerates BENCH_elastic.json (preempted-resume latency breakdown for
+# the 8->4 shrink scenario: checkpoint restore vs stacked_state.migrate vs
+# train-step recompile under the replanned layout).
+bench-elastic:
+	PYTHONPATH=src:. python benchmarks/run.py --only elastic

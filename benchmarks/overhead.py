@@ -1013,3 +1013,118 @@ def run(csv: Csv, fast: bool = False):
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"  wrote {out_path} (min ratio {report['ratio_min']:.2f}x)")
+
+
+# ---------------------------------------------------------------------------
+# Elastic resume-latency section (BENCH_elastic.json)
+# ---------------------------------------------------------------------------
+def run_elastic(csv: Csv, fast: bool = False):
+    """Resume-latency breakdown for the elastic supervisor's 8→4 shrink
+    scenario (train/elastic.py): restore the newest checkpoint, MIGRATE
+    its optimizer state into the replanned (quantizing) layout
+    (stacked_state.migrate), and recompile the train step under the new
+    plan — each phase timed cold, the way a real preempted resume pays
+    it. Writes ``BENCH_elastic.json``.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    from repro.configs import get_smoke
+    from repro.core.api import OptimizerConfig
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.model import build_model
+    from repro.plan.solver import solve_for_topology
+    from repro.train import checkpoint as ckpt_mod
+    from repro.train.elastic import (
+        ElasticConfig, ElasticSupervisor, Topology, migrate_opt_state,
+    )
+    from repro.train.step import make_train_step
+
+    print("# elastic resume latency (8→4 shrink: restore/migrate/recompile)")
+    kw = dict(min_dim=16, t_update=4, lam=2, stagger_groups=2)
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params_abs = model.abstract_params()
+    h32 = solve_for_topology(params_abs, 1, 10**12, quantize="off",
+                             **kw).predicted["hbm_total_bytes"]
+    h8 = solve_for_topology(params_abs, 1, 10**12, quantize="force",
+                            **kw).predicted["hbm_total_bytes"]
+    per_dev = (h32 + h8) // 2 // 4  # 8 devs fit fp32; 4 devs force int8
+
+    data = SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.2)
+    batch_fn = lambda step, host: data.batch(step, batch=4, seq=16, host=host)
+    ocfg = OptimizerConfig(name="coap-adamw", learning_rate=1e-3)
+    tmp = tempfile.mkdtemp(prefix="bench_elastic_")
+    try:
+        steps = 4 if fast else 6
+        ecfg = ElasticConfig(
+            ckpt_dir=os.path.join(tmp, "ckpt"), total_steps=steps,
+            topology=(Topology(8, per_dev),), solve_kw=kw,
+            ckpt_every=2, log_every=100,
+        )
+        sup = ElasticSupervisor(model, batch_fn, ecfg, ocfg=ocfg)
+        sup.run()
+
+        plan8 = sup.plan_for(Topology(8, per_dev))
+        plan4 = solve_for_topology(params_abs, 4, per_dev, **kw)
+        tx8 = sup._tx_for(plan8)
+        tx4 = sup._tx_for(plan4)
+
+        t0 = _time.perf_counter()
+        state8 = ckpt_mod.restore(ecfg.ckpt_dir, sup._template(tx8))
+        restore_s = _time.perf_counter() - t0
+
+        t0 = _time.perf_counter()
+        opt4 = migrate_opt_state(
+            state8.opt_state, plan8, plan4, params_abs, ocfg
+        )
+        opt4 = jax.tree_util.tree_map(jnp.asarray, opt4)
+        jax.block_until_ready(jax.tree_util.tree_leaves(opt4))
+        migrate_s = _time.perf_counter() - t0
+        state4 = state8._replace(opt_state=opt4)
+
+        batch = batch_fn(steps, 0)
+        t0 = _time.perf_counter()
+        jax.jit(make_train_step(model, tx4, donate=False)).lower(
+            state4, batch
+        ).compile()
+        recompile_s = _time.perf_counter() - t0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    total = restore_s + migrate_s + recompile_s
+    report = {
+        "scenario": {
+            "arch": "tinyllama-1.1b (smoke)",
+            "shrink": "8 -> 4 devices, same per-device HBM",
+            "hbm_per_device": int(per_dev),
+            "src_quantized_buckets": sum(b.quantize for b in plan8.buckets),
+            "dst_quantized_buckets": sum(b.quantize for b in plan4.buckets),
+            "n_buckets": len(plan4.buckets),
+        },
+        "restore_s": restore_s,
+        "migrate_s": migrate_s,
+        "recompile_s": recompile_s,
+        "total_resume_s": total,
+        "method": (
+            "cold timings, one pass each (a preempted resume pays every "
+            "phase uncached): restore = checkpoint.restore of the newest "
+            "ckpt into the source-plan template; migrate = "
+            "elastic.migrate_opt_state (stacked_state.migrate: rank "
+            "resize + fp32->int8 requant into the 4-device plan's "
+            "layout) materialized; recompile = AOT lower+compile of the "
+            "train step under the new plan."
+        ),
+    }
+    for k in ("restore_s", "migrate_s", "recompile_s"):
+        csv.add(f"elastic/{k[:-2]}", report[k] * 1e6, "resume phase")
+        print(f"  {k[:-2]:>9}: {report[k]*1e3:8.1f} ms "
+              f"({report[k]/total:5.1%} of resume)")
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_elastic.json",
+    )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"  wrote {out_path} (total resume {total:.2f}s)")

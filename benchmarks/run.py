@@ -44,6 +44,8 @@ def main() -> None:
         overhead.run_conv(csv, fast=args.fast)
     if want("plan"):
         overhead.run_plan(csv, fast=args.fast)
+    if want("elastic"):
+        overhead.run_elastic(csv, fast=args.fast)
     steps = 80 if args.fast else 200
     if want("fig3"):
         convergence.fig3_ceu(csv, steps=steps)

@@ -4,6 +4,7 @@
 #   ./scripts/ci.sh              full tier-1 suite, then both smokes
 #   ./scripts/ci.sh smoke        kernel smoke only (fast signal on kernel edits)
 #   ./scripts/ci.sh plan-smoke   plan smoke only (planner/accounting edits)
+#   ./scripts/ci.sh fault-smoke  elastic/fault-injection smoke (train/ edits)
 #
 # The smoke subset re-runs the fused-kernel correctness tests with the
 # actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
@@ -58,6 +59,19 @@ plan_smoke() {
     --arch llama-1b --budget 12.5GB --verify
 }
 
+fault_smoke() {
+  echo "== elastic/fault-injection smoke =="
+  # The preemption-native control loop end-to-end: seeded kill + topology
+  # shrink 8->4 with a replanned (quantizing) layout, checkpoint restore
+  # with stacked_state.migrate, torn-checkpoint fallback via crc32, and
+  # the launch/train.py --watch supervisor CLI driving the same path.
+  REPRO_PALLAS=interpret python -m pytest -q \
+    tests/test_elastic.py::test_kill_shrink_replan_resume_converges \
+    tests/test_elastic.py::test_torn_checkpoint_falls_back_to_older \
+    tests/test_elastic.py::test_migrate_quantize_flip_roundtrip \
+    "tests/test_checkpoint_edges.py::test_torn_write_fails_loudly_naming_file[True]"
+}
+
 if [[ "${1:-}" == "smoke" ]]; then
   smoke
   exit 0
@@ -66,8 +80,13 @@ if [[ "${1:-}" == "plan-smoke" ]]; then
   plan_smoke
   exit 0
 fi
+if [[ "${1:-}" == "fault-smoke" ]]; then
+  fault_smoke
+  exit 0
+fi
 
 echo "== tier-1 suite =="
 python -m pytest -x -q
 smoke
 plan_smoke
+fault_smoke

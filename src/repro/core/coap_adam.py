@@ -366,6 +366,47 @@ def stagger_phases(
     return out
 
 
+def bucket_phases(
+    cfg: ProjectedAdamConfig, layout: stacked_state.StackedLayout
+) -> dict:
+    """THE staggered phase allocation, bucket-indexed: maps every
+    staggerable bucket (projected then conv, in layout order) to its
+    per-slot refresh phases.
+
+    A pure function of ``(layout, cfg)`` — no step, no RNG, no state — so
+    phases re-derive identically across restarts, resumes and replans that
+    preserve the layout; ``update_fn`` calls this every trace and the
+    elastic supervisor (``train/elastic.py``) calls it to pin down the
+    schedule a resumed run will follow. Buckets sharing an effective T_u
+    are allocated jointly (phases spread uniformly over [0, T_u) across
+    all of them); buckets a plan pins to a different T_u get their own
+    allocation over their own interval. With no overrides this is exactly
+    the single joint allocation of the global schedule.
+    """
+    bucket_cfgs = [_bucket_cfg(cfg, info) for info in layout.buckets]
+    stag_bis = [
+        bi for bi, info in enumerate(layout.buckets)
+        if info.kind in (
+            stacked_state.BUCKET_PROJECT, stacked_state.BUCKET_CONV
+        )
+    ]
+    by_tu = {}
+    for bi in stag_bis:
+        by_tu.setdefault(bucket_cfgs[bi].t_update, []).append(bi)
+    phase_by_bucket = {}
+    for t_u, bis in by_tu.items():
+        sizes = [len(layout.buckets[bi].indices) for bi in bis]
+        if cfg.stagger and t_u > 1:
+            pls = stagger_phases(
+                sizes, t_u, [bucket_cfgs[bi].stagger_groups for bi in bis]
+            )
+        else:
+            pls = [(0,) * sz for sz in sizes]
+        for bi, pl in zip(bis, pls):
+            phase_by_bucket[bi] = pl
+    return phase_by_bucket
+
+
 def _phase_groups(phases) -> list:
     """Maximal runs of equal phase -> [(start, size, phase)]. Phases are
     non-decreasing within a bucket (``stagger_phases`` allocates monotone
@@ -852,33 +893,11 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
         # stagger_groups per bucket; identity when no overrides are set).
         bucket_cfgs = [_bucket_cfg(cfg, info) for info in layout.buckets]
 
-        # Per-leaf refresh phases (staggered schedule): allocated over the
-        # staggerable buckets — projected then conv, in tree order —
-        # identically in every mode. Buckets sharing an effective T_u are
-        # allocated jointly (phases spread uniformly over [0, T_u) across
-        # all of them); buckets a plan pins to a different T_u get their
-        # own allocation over their own interval. With no overrides this
-        # is exactly the single joint allocation of the global schedule.
-        stag_bis = [
-            bi for bi, info in enumerate(layout.buckets)
-            if info.kind in (
-                stacked_state.BUCKET_PROJECT, stacked_state.BUCKET_CONV
-            )
-        ]
-        by_tu = {}
-        for bi in stag_bis:
-            by_tu.setdefault(bucket_cfgs[bi].t_update, []).append(bi)
-        phase_by_bucket = {}
-        for t_u, bis in by_tu.items():
-            sizes = [len(layout.buckets[bi].indices) for bi in bis]
-            if cfg.stagger and t_u > 1:
-                pls = stagger_phases(
-                    sizes, t_u, [bucket_cfgs[bi].stagger_groups for bi in bis]
-                )
-            else:
-                pls = [(0,) * sz for sz in sizes]
-            for bi, pl in zip(bis, pls):
-                phase_by_bucket[bi] = pl
+        # Per-leaf refresh phases (staggered schedule): THE allocation,
+        # shared with the elastic supervisor (``bucket_phases`` — a pure
+        # function of (layout, cfg), so phases re-derive identically on
+        # every restart/resume).
+        phase_by_bucket = bucket_phases(cfg, layout)
 
         new_buckets = [None] * len(layout.buckets)
         new_tail = [None] * len(layout.tail)
@@ -1006,6 +1025,17 @@ def _projected_adamw(
         overrides=overrides,
         quant_block=quant_block,
     )
+    return projected_adamw_from_config(
+        cfg, learning_rate, weight_decay=weight_decay, mask=mask
+    )
+
+
+def projected_adamw_from_config(
+    cfg: ProjectedAdamConfig, learning_rate, *, weight_decay=0.0, mask=None
+) -> GradientTransformation:
+    """AdamW chain around an explicit :class:`ProjectedAdamConfig` — the
+    entry plan consumers use so the config object driving the optimizer is
+    the SAME one schedule consumers (``bucket_phases``) introspect."""
     txs = [scale_by_projected_adam(cfg)]
     if weight_decay:
         txs.append(add_decayed_weights(weight_decay, mask=mask))

@@ -427,3 +427,346 @@ def manifest_entries(tree: Any) -> List[ManifestEntry]:
         else:
             out.append(ManifestEntry(kind="leaf", path=prefix, value=node))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Plan migration: stacked-bucket/v2 -> stacked-bucket/v2
+# ---------------------------------------------------------------------------
+# When the elastic supervisor replans a run (topology shrink/grow, budget
+# change), the new coap-plan/v1 artifact may pin different ranks, flip a
+# bucket's quantize codec, or regroup leaves into different buckets.
+# ``migrate`` expresses that change as a codec transform: decode the source
+# state per leaf through the shared logical-path namespace, transform each
+# leaf to the target spec/codec, re-encode under the target layout.
+#
+# Preservation contract (documented in README "Preemption-native training"):
+#   * EXACT  — same spec + same codec: arrays pass through bit-for-bit
+#     (int8 codes included — no dequant/requant round-trip is inserted);
+#   * EXACT  — rank truncation keeps the LEADING r_new columns of P and of
+#     both moments bit-for-bit (correlation-aware P orders energy by Eqn-7
+#     recalibration, so leading columns are the ones worth keeping);
+#   * EXACT  — rank expansion keeps all r_old existing columns of P and of
+#     the moments; the NEW columns of P are fresh ``init_p``-style Gaussian
+#     directions orthogonalized against the preserved subspace (the same
+#     completion Eqn-7 applies at the next recalibration), and the new
+#     moment columns start at zero (cold, like t=0);
+#   * APPROX — quantize flips pay exactly one codec rounding
+#     (dequantize→requantize); fp32→int8→fp32 round-trips land within
+#     block-absmax rounding of the original;
+#   * RESET  — a kind change (project↔conv↔dense) or a transposed
+#     canonicalization re-initializes that leaf's state from scratch
+#     (there is no meaningful moment mapping across kinds).
+#
+# Byte exactness: migrated storage reproduces the target optimizer's init
+# storage shapes/dtypes exactly, so ``accounting.optimizer_state_bytes`` of
+# the migrated state equals ``accounting.abstract_state_bytes`` of the
+# target optimizer — ``tests/test_elastic.py`` enforces this per category.
+
+
+def _resize_last(x: jnp.ndarray, r_new: int) -> jnp.ndarray:
+    """Truncate or zero-pad the last axis to ``r_new`` (moment columns)."""
+    r_old = x.shape[-1]
+    if r_new == r_old:
+        return x
+    if r_new < r_old:
+        return x[..., :r_new]
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, r_new - r_old)]
+    return jnp.pad(x, pad)
+
+
+def _resize_axis(x: jnp.ndarray, axis: int, n_new: int) -> jnp.ndarray:
+    n_old = x.shape[axis]
+    if n_new == n_old:
+        return x
+    if n_new < n_old:
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, n_new)
+        return x[tuple(sl)]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n_new - n_old)
+    return jnp.pad(x, pad)
+
+
+def _resize_p(p: jnp.ndarray, r_new: int, key, dtype) -> jnp.ndarray:
+    """Rank change on a projection matrix (..., n, r_old) -> (..., n, r_new).
+
+    Truncation keeps the leading columns bit-for-bit. Expansion keeps every
+    existing column and appends fresh N(0, 1/r_new) directions (``init_p``
+    magnitude) orthogonalized against the span of the kept columns — the
+    Eqn-7-style completion: the preserved subspace is untouched and the new
+    directions carry no redundant energy, so the next recalibration refines
+    rather than restarts them.
+    """
+    p = p.astype(dtype)
+    r_old = p.shape[-1]
+    if r_new == r_old:
+        return p
+    if r_new < r_old:
+        return p[..., :r_new]
+    extra = jax.random.normal(
+        key, p.shape[:-1] + (r_new - r_old,), dtype
+    ) / jnp.sqrt(jnp.asarray(r_new, dtype))
+    q, _ = jnp.linalg.qr(p.astype(jnp.float32))
+    e32 = extra.astype(jnp.float32)
+    e_perp = e32 - q @ (jnp.swapaxes(q, -1, -2) @ e32)
+    return jnp.concatenate([p, e_perp.astype(dtype)], axis=-1)
+
+
+def _is_quantized(moment: jnp.ndarray) -> bool:
+    return jnp.dtype(moment.dtype) == jnp.int8
+
+
+def _load_flat(stored, scale, shape, block):
+    """Flat-codec moment -> fp32 at its logical shape."""
+    from repro.kernels import ref as kref
+
+    if _is_quantized(stored):
+        # The flat codec's block size rides in the stored shape
+        # ([nblocks, block]); the ``block`` argument only matters on store.
+        del block
+        return kref.dequantize_blockwise(stored, scale, tuple(shape))
+    return stored.astype(jnp.float32)
+
+
+def _store_flat(x32, quantize, block, state_dtype):
+    from repro.kernels import ref as kref
+
+    if quantize:
+        return kref.quantize_blockwise(x32, block=block)
+    return x32.astype(state_dtype), jnp.zeros((1,), jnp.float32)
+
+
+def _load_rowblock(stored, scale, block):
+    """Row-block-codec projected moment -> fp32 (shape-preserving)."""
+    from repro.kernels import ref as kref
+
+    if _is_quantized(stored):
+        return kref.dequantize_rowblock(stored, scale, block=block)
+    return stored.astype(jnp.float32)
+
+
+def _store_rowblock(x32, quantize, block, state_dtype):
+    from repro.kernels import ref as kref
+
+    if quantize:
+        return kref.quantize_rowblock(x32, block=block)
+    return x32.astype(state_dtype), jnp.zeros((1,), jnp.float32)
+
+
+def _fresh_leaf_state(spec: ProjSpec, shape, quantize, key, block, state_dtype):
+    """A from-scratch leaf state with exactly the init storage layout of
+    ``scale_by_projected_adam.init_fn`` (the RESET path of migration)."""
+    from repro.core import coap_adam as _ca
+    from repro.core import conv as _conv
+    from repro.core import projector as _proj
+    from repro.kernels import ref as kref
+
+    def zeros_flat(msh):
+        if not quantize:
+            return jnp.zeros(msh, state_dtype), jnp.zeros((1,), jnp.float32)
+        numel = 1
+        for s in msh:
+            numel *= int(s)
+        nblocks = -(-numel // block)
+        return (jnp.zeros((nblocks, block), jnp.int8),
+                jnp.zeros((nblocks,), jnp.float32))
+
+    def zeros_proj(msh):
+        if not quantize:
+            return jnp.zeros(msh, state_dtype), jnp.zeros((1,), jnp.float32)
+        nblk = kref.rowblock_nblocks(int(msh[-1]), block)
+        return (jnp.zeros(msh, jnp.int8),
+                jnp.zeros(tuple(msh[:-1]) + (nblk,), jnp.float32))
+
+    if spec.kind == KIND_PROJECT:
+        p0 = _proj.init_p(key, shape, spec, state_dtype)
+        msh = _proj.moment_shape(shape, spec)
+        m0, ms0 = zeros_proj(msh)
+        v0, vs0 = zeros_proj(msh)
+        return _ca.ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0)
+    if spec.kind == KIND_CONV:
+        po, pi = _conv.init_factors(key, shape, spec)
+        msh = _conv.core_shape(shape, spec)
+        m0, ms0 = zeros_flat(msh)
+        v0, vs0 = zeros_flat(msh)
+        return _ca.ConvLeaf(p_o=po, p_i=pi, m=m0, v=v0,
+                            m_scale=ms0, v_scale=vs0)
+    m0, ms0 = zeros_flat(shape)
+    v0, vs0 = zeros_flat(shape)
+    return _ca.DenseLeaf(mu=m0, nu=v0, mu_scale=ms0, nu_scale=vs0)
+
+
+def _migrate_proj(state, src_spec, dst_spec, shape, dst_q, key,
+                  block, src_block, state_dtype):
+    from repro.core import coap_adam as _ca
+    from repro.core import projector as _proj
+
+    src_q = _is_quantized(state.m)
+    same_codec = (src_q == dst_q) and (not src_q or src_block == block)
+    p = _resize_p(state.p, dst_spec.rank, key, state_dtype)
+    if src_spec.rank == dst_spec.rank and same_codec:
+        # Same storage codec, same shape: bit-exact pass-through (int8
+        # codes are NOT round-tripped).
+        if dst_q:
+            return state._replace(p=p)
+        return state._replace(p=p, m=state.m.astype(state_dtype),
+                              v=state.v.astype(state_dtype))
+    msh = _proj.moment_shape(shape, dst_spec)
+    m32 = _resize_last(_load_rowblock(state.m, state.m_scale, src_block),
+                       msh[-1])
+    v32 = _resize_last(_load_rowblock(state.v, state.v_scale, src_block),
+                       msh[-1])
+    m, ms = _store_rowblock(m32, dst_q, block, state_dtype)
+    v, vs = _store_rowblock(v32, dst_q, block, state_dtype)
+    return _ca.ProjLeaf(p=p, m=m, v=v, m_scale=ms, v_scale=vs)
+
+
+def _migrate_conv(state, src_spec, dst_spec, shape, dst_q, key,
+                  block, src_block, state_dtype):
+    from repro.core import coap_adam as _ca
+    from repro.core import conv as _conv
+
+    src_q = _is_quantized(state.m)
+    same_codec = (src_q == dst_q) and (not src_q or src_block == block)
+    ko, ki = jax.random.split(key)
+    p_o = _resize_p(state.p_o, dst_spec.rank_o, ko, jnp.float32)
+    p_i = _resize_p(state.p_i, dst_spec.rank_i, ki, jnp.float32)
+    same_rank = (src_spec.rank_o == dst_spec.rank_o
+                 and src_spec.rank_i == dst_spec.rank_i)
+    if same_rank and same_codec:
+        if dst_q:
+            return state._replace(p_o=p_o, p_i=p_i)
+        return state._replace(p_o=p_o, p_i=p_i,
+                              m=state.m.astype(state_dtype),
+                              v=state.v.astype(state_dtype))
+    src_core = _conv.core_shape(shape, src_spec)
+    dst_core = _conv.core_shape(shape, dst_spec)
+
+    def move(stored, scale):
+        x32 = _load_flat(stored, scale, src_core, src_block)
+        x32 = _resize_axis(_resize_axis(x32, 0, dst_core[0]), 1, dst_core[1])
+        return _store_flat(x32, dst_q, block, state_dtype)
+
+    m, ms = move(state.m, state.m_scale)
+    v, vs = move(state.v, state.v_scale)
+    return _ca.ConvLeaf(p_o=p_o, p_i=p_i, m=m, v=v, m_scale=ms, v_scale=vs)
+
+
+def _migrate_dense(state, shape, dst_q, block, src_block, state_dtype):
+    from repro.core import coap_adam as _ca
+
+    src_q = _is_quantized(state.mu)
+    if (src_q == dst_q) and (not src_q or src_block == block):
+        if dst_q:
+            return state
+        return state._replace(mu=state.mu.astype(state_dtype),
+                              nu=state.nu.astype(state_dtype))
+    mu, mus = _store_flat(_load_flat(state.mu, state.mu_scale, shape,
+                                     src_block), dst_q, block, state_dtype)
+    nu, nus = _store_flat(_load_flat(state.nu, state.nu_scale, shape,
+                                     src_block), dst_q, block, state_dtype)
+    return _ca.DenseLeaf(mu=mu, nu=nu, mu_scale=mus, nu_scale=nus)
+
+
+def _leaf_kind(state) -> str:
+    if hasattr(state, "p"):
+        return KIND_PROJECT
+    if hasattr(state, "p_o"):
+        return KIND_CONV
+    return "dense"
+
+
+def migrate(
+    src: StackedLeaves,
+    dst_layout: StackedLayout,
+    *,
+    quantize_for: Callable[[str], bool],
+    quant_block: int = 256,
+    src_quant_block: Optional[int] = None,
+    state_dtype: Any = jnp.float32,
+    seed: int = 0,
+) -> StackedLeaves:
+    """The ``stacked-bucket/v2`` -> ``stacked-bucket/v2`` plan-migration
+    transform (see the section comment above for the preservation
+    contract).
+
+    ``dst_layout`` is the target bucket assignment (``build_layout`` under
+    the new plan's rules); ``quantize_for(path)`` says whether the target
+    plan stores that leaf's moments int8; ``seed`` drives the fresh
+    directions of rank expansion and RESET re-initialization
+    (``fold_in(key(seed), flat_index)`` — the same per-leaf keying
+    ``init_fn`` uses). Source codec parameters are detected from the state
+    itself (int8 dtype == quantized); pass ``src_quant_block`` if the
+    source plan used a non-default block.
+
+    Leaves are matched between source and target by LOGICAL PATH — the
+    same namespace the checkpoint codec speaks — so re-bucketing (layout
+    changes) falls out of re-encoding. A path present in only one layout
+    is a model-structure change, not a migration, and raises.
+    """
+    sqb = quant_block if src_quant_block is None else src_quant_block
+    src_layout = src.layout
+    src_states = decode(src)
+
+    by_path = {}
+    for info in src_layout.buckets:
+        for idx, path in zip(info.indices, info.paths):
+            by_path[path] = (src_states[idx], info.spec, info.shape)
+    for t in src_layout.tail:
+        by_path[t.path] = (src_states[t.index], t.spec, None)
+
+    dst_paths = [p for info in dst_layout.buckets for p in info.paths]
+    dst_paths += [t.path for t in dst_layout.tail]
+    missing = sorted(set(dst_paths) - set(by_path))
+    extra = sorted(set(by_path) - set(dst_paths))
+    if missing or extra:
+        raise ValueError(
+            "migrate: source and target layouts describe different param "
+            f"trees (missing from source: {missing[:3]}, absent from "
+            f"target: {extra[:3]}) — migration transforms state for the "
+            "SAME model; a structure change needs a fresh init"
+        )
+
+    key = jax.random.key(seed)
+    out = [None] * dst_layout.n_leaves
+    for info in dst_layout.buckets:
+        for idx, path in zip(info.indices, info.paths):
+            state, src_spec, _src_shape = by_path[path]
+            dst_q = bool(quantize_for(path))
+            lkey = jax.random.fold_in(key, idx)
+            dst_spec = info.spec
+            src_kind = _leaf_kind(state)
+            reset = (
+                src_kind != dst_spec.kind
+                or (dst_spec.kind == KIND_PROJECT
+                    and src_spec.transpose != dst_spec.transpose)
+            )
+            if reset:
+                out[idx] = _fresh_leaf_state(
+                    dst_spec, info.shape, dst_q, lkey, quant_block,
+                    state_dtype,
+                )
+            elif dst_spec.kind == KIND_PROJECT:
+                out[idx] = _migrate_proj(
+                    state, src_spec, dst_spec, info.shape, dst_q, lkey,
+                    quant_block, sqb, state_dtype,
+                )
+            elif dst_spec.kind == KIND_CONV:
+                out[idx] = _migrate_conv(
+                    state, src_spec, dst_spec, info.shape, dst_q, lkey,
+                    quant_block, sqb, state_dtype,
+                )
+            else:
+                out[idx] = _migrate_dense(
+                    state, info.shape, dst_q, quant_block, sqb, state_dtype
+                )
+    for t in dst_layout.tail:
+        state, src_spec, _ = by_path[t.path]
+        if src_spec != t.spec:
+            raise ValueError(
+                f"migrate: tail leaf {t.path!r} changed spec "
+                f"({src_spec} -> {t.spec}); tail leaves carry no shape in "
+                "the layout, so only pass-through migration is supported"
+            )
+        out[t.index] = state
+    return encode(dst_layout, out)

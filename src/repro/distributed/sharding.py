@@ -113,6 +113,15 @@ def tree_named(mesh, spec_tree):
     )
 
 
+def replicated_specs(template) -> Any:
+    """``P()`` for every array leaf of ``template`` — the elastic
+    supervisor's default placement when restoring a checkpoint onto a
+    freshly-built (possibly resized) data mesh: land replicated first,
+    then let pjit reshard into the step function's layout. The template
+    may be abstract (ShapeDtypeStructs from ``jax.eval_shape``)."""
+    return jax.tree_util.tree_map(lambda _: P(), template)
+
+
 # ---------------------------------------------------------------------------
 # Activation / batch constraints
 # ---------------------------------------------------------------------------

@@ -41,7 +41,11 @@ from repro.plan.artifact import (  # noqa: F401
     load_plan,
     save_plan,
 )
-from repro.plan.solver import PlanInfeasibleError, solve  # noqa: F401
+from repro.plan.solver import (  # noqa: F401
+    PlanInfeasibleError,
+    solve,
+    solve_for_topology,
+)
 from repro.plan.validate import PlanMismatchError, verify  # noqa: F401
 
 

@@ -17,7 +17,14 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.coap_adam import LeafOverrides, PlanOverrides, _projected_adamw
+from typing import Dict
+
+from repro.core.coap_adam import (
+    LeafOverrides,
+    PlanOverrides,
+    ProjectedAdamConfig,
+    projected_adamw_from_config,
+)
 from repro.core.projector import PlannedRules, ProjSpec
 from repro.optim.transform import GradientTransformation
 from repro.plan.artifact import Plan, resolve  # noqa: F401  (re-export)
@@ -53,6 +60,43 @@ def plan_overrides(plan: Plan) -> PlanOverrides:
     )
 
 
+def quantize_by_path(plan: Plan) -> Dict[str, bool]:
+    """path -> does the plan store this leaf's moments int8 (the
+    ``quantize_for`` callable of ``stacked_state.migrate``, as a dict)."""
+    return {
+        path: bool(b.quantize) for b in plan.buckets for path in b.paths
+    }
+
+
+def planned_config(plan: Plan, ocfg) -> ProjectedAdamConfig:
+    """The exact :class:`ProjectedAdamConfig` the planned transform runs
+    with — exposed so schedule consumers (``coap_adam.bucket_phases`` via
+    the elastic supervisor) derive cadence/phases from the same config the
+    optimizer uses, not a reconstruction."""
+    g = plan.globals_
+    return ProjectedAdamConfig(
+        rules=planned_rules(plan),
+        strategy="coap",
+        b1=ocfg.b1,
+        b2=ocfg.b2,
+        eps=ocfg.eps,
+        t_update=g.t_update,
+        lam=g.lam,
+        eqn6_lr=g.eqn6_lr,
+        eqn6_steps=g.eqn6_steps,
+        seed=ocfg.seed,
+        update_scale=ocfg.update_scale,
+        moment_transplant=ocfg.moment_transplant,
+        quantize=False,  # per-bucket via overrides, never globally
+        quant_block=g.quant_block,
+        state_dtype=jnp.dtype(g.state_dtype).type,
+        stagger=True,
+        stagger_groups=g.stagger_groups,
+        stacked_state=g.stacked_state,
+        overrides=plan_overrides(plan),
+    )
+
+
 def transform(plan: Plan, ocfg) -> GradientTransformation:
     """The planned ``scale_by_projected_adam`` chain member (no grad clip /
     lr — ``make_optimizer`` owns those). ``ocfg`` is the
@@ -68,32 +112,13 @@ def transform(plan: Plan, ocfg) -> GradientTransformation:
             f"OptimizerConfig.name={ocfg.name!r} conflicts with the plan's "
             f"optimizer {plan.optimizer!r}"
         )
-    g = plan.globals_
-    return _projected_adamw(
-        "coap",
+    # Run-level knobs stay on the OptimizerConfig (api.py contract): seed
+    # drives init RNG, update_scale / moment_transplant are
+    # training-dynamics choices the plan does not own.
+    # plan.globals_.seed records what the solver assumed (the
+    # OptimizerConfig default) for artifact reproducibility.
+    return projected_adamw_from_config(
+        planned_config(plan, ocfg),
         ocfg.learning_rate,
-        planned_rules(plan),
-        b1=ocfg.b1,
-        b2=ocfg.b2,
-        eps=ocfg.eps,
         weight_decay=ocfg.weight_decay,
-        t_update=g.t_update,
-        lam=g.lam,
-        eqn6_lr=g.eqn6_lr,
-        eqn6_steps=g.eqn6_steps,
-        # Run-level knobs stay on the OptimizerConfig (api.py contract):
-        # seed drives init RNG, update_scale / moment_transplant are
-        # training-dynamics choices the plan does not own.
-        # plan.globals_.seed records what the solver assumed (the
-        # OptimizerConfig default) for artifact reproducibility.
-        seed=ocfg.seed,
-        update_scale=ocfg.update_scale,
-        moment_transplant=ocfg.moment_transplant,
-        quantize=False,  # per-bucket via overrides, never globally
-        quant_block=g.quant_block,
-        state_dtype=jnp.dtype(g.state_dtype).type,
-        stagger=True,
-        stagger_groups=g.stagger_groups,
-        stacked_state=g.stacked_state,
-        overrides=plan_overrides(plan),
     )

@@ -333,6 +333,28 @@ def solve(
     )
 
 
+def solve_for_topology(
+    params,
+    n_devices: int,
+    hbm_per_device: int,
+    **kw,
+) -> Plan:
+    """Replanning entry for the elastic supervisor (``train/elastic.py``).
+
+    The budget is the POD-TOTAL pool ``n_devices × hbm_per_device``:
+    params, gradients and optimizer state are all sharded across the data
+    axis (FSDP/ZeRO-style — the deployment COAP targets on preemptible
+    capacity), so losing half the devices halves the pool and the solver's
+    quantize knapsack re-engages int8 storage exactly where needed. A
+    shrink below what even the fully-quantized minimum needs raises
+    :class:`PlanInfeasibleError` — the supervisor surfaces that instead of
+    silently training a different model.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    return solve(params, int(n_devices) * int(hbm_per_device), **kw)
+
+
 def _grouped(by_cat: Dict[str, int]) -> Dict[str, int]:
     from repro.core.accounting import group_categories
 

@@ -13,7 +13,13 @@ MANIFEST FORMAT (``"version": 2``; version-1 manifests — no ``version`` /
 ``stacked`` keys — restore unchanged):
 
   * ``leaves``  — one entry per ordinary array: ``{path, file, dtype,
-    shape}``. ``path`` is the array's LOGICAL per-leaf tree path.
+    shape}``. ``path`` is the array's LOGICAL per-leaf tree path. Every
+    array row also records a ``crc32`` of its stored bytes (optional on
+    read: older manifests restore unchanged); a mismatch or unreadable
+    file raises :class:`TornCheckpointError` naming the offending path.
+  * ``meta``    — optional JSON dict stored atomically with the arrays
+    (the elastic supervisor records the ``coap-plan/v1`` artifact that
+    produced the optimizer state here; see ``train/elastic.py``).
   * ``stacked`` — one entry per pre-stacked bucket array
     (``core/stacked_state.StackedLeaves`` fields): ``{path, file, dtype,
     shape, codec, axis, slots}`` where ``codec`` is
@@ -46,7 +52,8 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +66,17 @@ _FORMAT_VERSION = 2
 
 # Outstanding async writer threads (pruned on inspection).
 _PENDING: list = []
+
+
+class TornCheckpointError(ValueError):
+    """A checkpoint array failed its integrity check (truncated file or
+    checksum mismatch) — the checkpoint is torn/corrupt. The message names
+    the offending file so an operator (or the elastic supervisor, which
+    falls back to the next-older checkpoint) can act on it."""
+
+
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _store_array(arr: np.ndarray):
@@ -81,13 +99,22 @@ def wait_pending() -> None:
 
 
 def save(directory: str, step: int, state: Any, keep: int = 3,
-         async_: bool = False) -> str:
+         async_: bool = False, meta: Optional[dict] = None) -> str:
     """Write ckpt_<step>; returns its final path.
 
     ``async_=True`` snapshots the state to host synchronously, then writes
     in a daemon thread; the step directory appears (atomic rename) only
     after every file and the manifest are flushed, so a reader can never
     observe a torn checkpoint.
+
+    Every array row records a ``crc32`` of its stored bytes (optional on
+    read — v2 manifests written before this field restore unchanged) so a
+    checkpoint corrupted AFTER the atomic rename (partial copy, disk
+    fault, injected torn write) fails loudly at restore instead of
+    resuming from garbage. ``meta`` is an optional JSON-serializable dict
+    stored atomically with the manifest — the elastic supervisor keeps the
+    ``coap-plan/v1`` artifact that produced the state here, so a resume
+    can rebuild the exact source layout before migrating.
     """
     host_state = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
                                         state)
@@ -100,6 +127,8 @@ def save(directory: str, step: int, state: Any, keep: int = 3,
         entries = stacked_state.manifest_entries(host_state)
         manifest = {"step": step, "version": _FORMAT_VERSION,
                     "leaves": [], "stacked": []}
+        if meta is not None:
+            manifest["meta"] = meta
         for i, entry in enumerate(entries):
             arr, logical_dtype = _store_array(np.asarray(entry.value))
             fname = f"{i:06d}.npy"
@@ -108,7 +137,8 @@ def save(directory: str, step: int, state: Any, keep: int = 3,
                 f.flush()
                 os.fsync(f.fileno())
             row = {"path": entry.path, "file": fname,
-                   "dtype": logical_dtype, "shape": list(arr.shape)}
+                   "dtype": logical_dtype, "shape": list(arr.shape),
+                   "crc32": _crc32(arr)}
             if entry.kind == "stacked":
                 row["codec"] = stacked_state.STACKED_CODEC
                 row["axis"] = 0
@@ -144,16 +174,35 @@ def _gc(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def steps(directory: str) -> List[int]:
+    """All checkpoint steps with a manifest, ascending. The elastic
+    supervisor walks this newest→oldest to find the latest checkpoint
+    that passes its integrity checks (torn ones raise on restore)."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    out = []
     for d in os.listdir(directory):
         if d.startswith("ckpt_") and not d.endswith(".tmp"):
             p = os.path.join(directory, d, _MANIFEST)
             if os.path.exists(p):
-                best = max(best or -1, int(d.split("_")[1]))
-    return best
+                out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    all_steps = steps(directory)
+    return all_steps[-1] if all_steps else None
+
+
+def read_meta(directory: str, step: Optional[int] = None) -> Optional[dict]:
+    """The ``meta`` dict saved with ckpt_<step> (None if absent)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    mpath = os.path.join(directory, f"ckpt_{step:08d}", _MANIFEST)
+    with open(mpath) as f:
+        return json.load(f).get("meta")
 
 
 class _CkptIndex:
@@ -179,7 +228,25 @@ class _CkptIndex:
     def _file(self, entry) -> np.ndarray:
         fname = entry["file"]
         if fname not in self._files:
-            arr = np.load(os.path.join(self.cdir, fname))
+            fpath = os.path.join(self.cdir, fname)
+            try:
+                arr = np.load(fpath)
+            # A garbled .npy header escapes through numpy's header parser
+            # as parser-specific exceptions (SyntaxError, tokenize
+            # .TokenError, ...), not just ValueError/OSError — any load
+            # failure here means the file is torn.
+            except Exception as e:
+                raise TornCheckpointError(
+                    f"checkpoint array {fpath} (leaf {entry['path']!r}) is "
+                    f"unreadable — torn/partial write: {e}"
+                ) from e
+            want = entry.get("crc32")
+            if want is not None and _crc32(arr) != want:
+                raise TornCheckpointError(
+                    f"checkpoint array {fpath} (leaf {entry['path']!r}) "
+                    f"fails its crc32 check — torn/corrupt write; restore "
+                    "from an older checkpoint"
+                )
             self._files[fname] = _load_logical(arr, entry["dtype"])
         return self._files[fname]
 

@@ -1,0 +1,372 @@
+"""Preemption-native elastic training: the replan → migrate → resume loop.
+
+COAP's value proposition — big-model training on less memory — lands on
+preemptible/spot capacity in practice, where the run that matters is the
+one that survives kills, topology churn and budget changes. This module
+composes the repo's ingredients into that run:
+
+  1. **replan** — on every (re)start the supervisor reads the CURRENT
+     topology (device count × HBM per device) and re-runs the analytic
+     planner (``plan.solver.solve_for_topology``; pod-total budget =
+     ``n_devices × hbm_per_device``, FSDP/ZeRO-style). Shrinking 8→4
+     devices halves the pool and the solver's quantize knapsack flips
+     buckets to int8 exactly where needed — a NEW ``coap-plan/v1``.
+  2. **migrate** — the newest valid checkpoint is restored into the plan
+     that WROTE it (the plan artifact rides in the checkpoint manifest's
+     ``meta``, atomically with the arrays) and its optimizer state is
+     transformed to the new plan's layout by ``stacked_state.migrate``
+     (rank truncate / Eqn-7-style expand, quantize requant/dequant,
+     re-bucket) — byte-exact against ``accounting.abstract_state_bytes``
+     of the target optimizer. Checkpoints that fail their crc32 integrity
+     check (torn writes) are skipped, falling back newest→oldest.
+  3. **resume** — training continues mid-epoch. ``ProjectedAdamState
+     .count`` is preserved through migration and the staggered refresh /
+     Eqn-7 recalibration cadence is a pure function of ``(step, layout)``
+     (``coap_adam.bucket_phases`` + ``_sched_preds``), so the schedule
+     re-derives deterministically — two resumes from the same checkpoint
+     follow bit-identical phases (:func:`stagger_signature` pins this).
+
+Restart policy comes from ``fault_tolerance.run_with_restart``: sliding
+crash-budget window + exponential backoff with seeded jitter. Failure
+modes are exercised end-to-end by ``train/faults.py`` injection (seeded
+kills, torn checkpoint writes, heartbeat silence, stragglers) — driven
+from the CLI via ``python -m repro.launch.train --watch``.
+
+Topology changes take effect at attempt boundaries: a preemption/scale
+event kills the worker (for real, or via an injected kill), and the next
+attempt replans against the new topology. That matches how clusters
+actually deliver topology change — as the death of the old allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stacked_state
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.core.coap_adam import ProjectedAdamState, bucket_phases
+from repro.plan import apply as plan_apply
+from repro.plan.artifact import Plan
+from repro.plan.solver import solve_for_topology
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import (
+    CrashBudget,
+    Heartbeat,
+    run_with_restart,
+)
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train.train_state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """One cluster configuration, effective from training step
+    ``from_step`` onward (a schedule entry for tests/simulation; in
+    production there is typically one entry, replaced when the allocation
+    actually changes)."""
+
+    n_devices: int
+    hbm_per_device: int  # bytes
+    from_step: int = 0
+
+
+def topology_at(topologies: Sequence[Topology], step: int) -> Topology:
+    """The topology in effect at ``step``: the last entry whose
+    ``from_step`` is <= step (entries need not be sorted)."""
+    best = None
+    for t in topologies:
+        if t.from_step <= step and (best is None or t.from_step >= best.from_step):
+            best = t
+    if best is None:
+        raise ValueError(
+            f"no topology covers step {step} (need an entry with "
+            "from_step <= step; give the initial topology from_step=0)"
+        )
+    return best
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_dir: str
+    total_steps: int
+    topology: Tuple[Topology, ...]
+    # Planner knobs forwarded to solve_for_topology (rank_compression,
+    # min_dim, t_update, lam, stagger_groups, quantize, ...).
+    solve_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    ckpt_every: int = 10
+    ckpt_keep: int = 3
+    log_every: int = 100
+    metrics_path: Optional[str] = None
+    heartbeat_path: Optional[str] = None
+    grad_accum: int = 1
+    # Restart policy (fault_tolerance): sliding crash budget + backoff.
+    max_crashes: int = 10
+    crash_window_s: float = 600.0
+    backoff_base: float = 0.0  # seconds; 0 disables sleeping (tests)
+    backoff_cap: float = 30.0
+    backoff_jitter: float = 0.1
+    seed: int = 0
+    # Optional mesh: direct (non-migrating) restores are device_put
+    # replicated onto it (distributed.sharding.replicated_specs).
+    mesh: Any = None
+
+
+def _map_projected_states(opt_state, fn: Callable[[ProjectedAdamState], Any]):
+    """Apply ``fn`` to every ProjectedAdamState inside a (possibly nested
+    chain) optimizer state, leaving everything else untouched."""
+    return jax.tree_util.tree_map(
+        lambda n: fn(n) if isinstance(n, ProjectedAdamState) else n,
+        opt_state,
+        is_leaf=lambda n: isinstance(n, ProjectedAdamState),
+    )
+
+
+def find_projected_state(opt_state) -> Optional[ProjectedAdamState]:
+    """The (first) ProjectedAdamState inside an optimizer state tree."""
+    found = []
+
+    def grab(n):
+        found.append(n)
+        return n
+
+    _map_projected_states(opt_state, grab)
+    return found[0] if found else None
+
+
+def migrate_opt_state(
+    opt_state,
+    src_plan: Plan,
+    dst_plan: Plan,
+    params,
+    ocfg: OptimizerConfig,
+):
+    """Optimizer-state tree under ``src_plan`` -> the same tree under
+    ``dst_plan`` via ``stacked_state.migrate``. ``count`` is preserved —
+    the resumed schedule continues from the same step. ``params`` may be
+    abstract (shapes only)."""
+    dst_layout = stacked_state.layout_for_tree(
+        plan_apply.planned_rules(dst_plan).spec_for, params
+    )
+    qmap = plan_apply.quantize_by_path(dst_plan)
+    g = dst_plan.globals_
+
+    def mig(s: ProjectedAdamState) -> ProjectedAdamState:
+        if not isinstance(s.leaves, stacked_state.StackedLeaves):
+            raise ValueError(
+                "plan migration operates on stacked-bucket/v2 state; this "
+                "state is per-leaf (plans set stacked_state=True — was the "
+                "checkpoint written by an unplanned run?)"
+            )
+        leaves = stacked_state.migrate(
+            s.leaves,
+            dst_layout,
+            quantize_for=lambda p: qmap[p],
+            quant_block=g.quant_block,
+            src_quant_block=src_plan.globals_.quant_block,
+            state_dtype=jnp.dtype(g.state_dtype).type,
+            seed=ocfg.seed,
+        )
+        return ProjectedAdamState(count=s.count, leaves=leaves)
+
+    return _map_projected_states(opt_state, mig)
+
+
+def stagger_signature(plan: Plan, params, ocfg: OptimizerConfig):
+    """The staggered refresh phases the planned optimizer will follow — a
+    pure function of ``(layout, plan)`` via ``coap_adam.bucket_phases``,
+    so it is identical across restarts, resumes and hosts. The kill/
+    resume tests compare this signature across two resumes from the same
+    checkpoint (bit-identical schedules, acceptance criterion 3)."""
+    cfg = plan_apply.planned_config(plan, ocfg)
+    layout = stacked_state.layout_for_tree(cfg.rules.spec_for, params)
+    phases = bucket_phases(cfg, layout)
+    return tuple(sorted((bi, tuple(ph)) for bi, ph in phases.items()))
+
+
+class ElasticSupervisor:
+    """supervise → (kill) → replan → migrate → relaunch.
+
+    Each worker *attempt* plans against the current topology, restores
+    the newest checkpoint that passes integrity checks (migrating its
+    optimizer state if the plan changed), and runs ``TrainLoop`` to
+    completion. Crashes — real or injected — return control here; the
+    sliding crash budget and exponential backoff decide whether/when the
+    next attempt launches. ``events`` records what happened (resumes,
+    migrations, torn checkpoints skipped) for tests and operators;
+    ``last_resume`` holds the latest resume-latency breakdown
+    (restore vs migrate vs compile — ``benchmarks/overhead.run_elastic``
+    reports the same split).
+    """
+
+    def __init__(
+        self,
+        model,
+        batch_fn: Callable[[int, int], Dict],
+        cfg: ElasticConfig,
+        ocfg: Optional[OptimizerConfig] = None,
+        fault_injector=None,
+        init_key=None,
+        sleep_fn: Callable[[float], None] = time.sleep,
+    ):
+        self.model = model
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.ocfg = ocfg if ocfg is not None else OptimizerConfig()
+        self.fault_injector = fault_injector
+        self.sleep_fn = sleep_fn
+        self._init_key = init_key if init_key is not None else jax.random.key(0)
+        self._abstract_params = jax.eval_shape(
+            lambda: self.model.init(self._init_key)
+        )
+        self._plans: Dict[Tuple[int, int], Plan] = {}
+        self.events: list = []
+        self.last_resume: Optional[Dict[str, Any]] = None
+        self.heartbeat = (
+            Heartbeat(cfg.heartbeat_path) if cfg.heartbeat_path else None
+        )
+
+    # -- planning -----------------------------------------------------------
+    def plan_for(self, topo: Topology) -> Plan:
+        """The (cached, deterministic) plan for a topology."""
+        key = (topo.n_devices, topo.hbm_per_device)
+        if key not in self._plans:
+            self._plans[key] = solve_for_topology(
+                self._abstract_params,
+                topo.n_devices,
+                topo.hbm_per_device,
+                **self.cfg.solve_kw,
+            )
+        return self._plans[key]
+
+    def current_topology(self) -> Topology:
+        progress = ckpt.latest_step(self.cfg.ckpt_dir) or 0
+        return topology_at(self.cfg.topology, progress)
+
+    def _tx_for(self, plan: Plan):
+        return make_optimizer(dataclasses.replace(self.ocfg, plan=plan))
+
+    def _template(self, tx):
+        return jax.eval_shape(
+            lambda: TrainState.create(self.model.init(self._init_key), tx)
+        )
+
+    # -- restore ------------------------------------------------------------
+    def restore_into_plan(self, dst_plan: Plan, tx):
+        """Newest→oldest walk over the checkpoint directory: restore the
+        first checkpoint that passes its crc32 integrity checks, migrating
+        its optimizer state into ``dst_plan``'s layout when the plan that
+        wrote it differs. Returns ``(state | None, step | None, timings)``
+        with the restore/migrate wall-time split."""
+        timings = {"restore_s": 0.0, "migrate_s": 0.0}
+        cfg = self.cfg
+        for step in reversed(ckpt.steps(cfg.ckpt_dir)):
+            try:
+                meta = ckpt.read_meta(cfg.ckpt_dir, step) or {}
+                src_plan = (
+                    Plan.from_dict(meta["plan"]) if "plan" in meta else None
+                )
+                same = (
+                    src_plan is not None
+                    and src_plan.to_dict() == dst_plan.to_dict()
+                )
+                t0 = time.perf_counter()
+                if same or src_plan is None:
+                    # Identical plan (or legacy checkpoint without one):
+                    # direct restore into the target template — the codec-
+                    # aware manifest handles stacked/per-leaf differences.
+                    template = self._template(tx)
+                    mesh = cfg.mesh
+                    spec_tree = None
+                    if mesh is not None:
+                        from repro.distributed.sharding import replicated_specs
+
+                        spec_tree = replicated_specs(template)
+                    state = ckpt.restore(
+                        cfg.ckpt_dir, template, step=step,
+                        mesh=mesh, spec_tree=spec_tree,
+                    )
+                    timings["restore_s"] = time.perf_counter() - t0
+                else:
+                    # Replan happened: restore under the SOURCE plan's
+                    # exact layout, then migrate to the target.
+                    src_tx = self._tx_for(src_plan)
+                    state = ckpt.restore(
+                        cfg.ckpt_dir, self._template(src_tx), step=step
+                    )
+                    timings["restore_s"] = time.perf_counter() - t0
+                    t1 = time.perf_counter()
+                    opt = migrate_opt_state(
+                        state.opt_state, src_plan, dst_plan,
+                        self._abstract_params, self.ocfg,
+                    )
+                    opt = jax.tree_util.tree_map(jnp.asarray, opt)
+                    state = state._replace(opt_state=opt)
+                    timings["migrate_s"] = time.perf_counter() - t1
+                    self.events.append(("migrate", step))
+                return state, step, timings
+            except ckpt.TornCheckpointError as e:
+                # Torn/corrupt checkpoint: fall back to the next older one.
+                self.events.append(("torn_checkpoint", step, str(e)))
+                continue
+        return None, None, timings
+
+    # -- attempts -----------------------------------------------------------
+    def _attempt(self, attempt: int) -> TrainState:
+        cfg = self.cfg
+        topo = self.current_topology()
+        plan = self.plan_for(topo)
+        tx = self._tx_for(plan)
+        state, step, timings = self.restore_into_plan(plan, tx)
+        self.last_resume = {
+            "attempt": attempt,
+            "resume_step": step,
+            "n_devices": topo.n_devices,
+            "hbm_per_device": topo.hbm_per_device,
+            **timings,
+        }
+        self.events.append(
+            ("resume", attempt, step, topo.n_devices)
+        )
+        loop_cfg = TrainLoopConfig(
+            total_steps=cfg.total_steps,
+            ckpt_dir=cfg.ckpt_dir,
+            ckpt_every=cfg.ckpt_every,
+            ckpt_keep=cfg.ckpt_keep,
+            log_every=cfg.log_every,
+            metrics_path=cfg.metrics_path,
+            heartbeat_path=cfg.heartbeat_path,
+            grad_accum=cfg.grad_accum,
+            fault_injector=self.fault_injector,
+            # The plan rides in every checkpoint manifest, atomically —
+            # the NEXT resume reads it back to rebuild this exact layout.
+            ckpt_meta={"plan": plan.to_dict()},
+        )
+        loop = TrainLoop(
+            self.model, tx, self.batch_fn, loop_cfg,
+            init_key=self._init_key, initial_state=state,
+        )
+        return loop.run()
+
+    def run(self) -> TrainState:
+        """Supervise to completion (or until the crash budget exhausts —
+        then the last exception propagates)."""
+        cfg = self.cfg
+        return run_with_restart(
+            self._attempt,
+            on_restart=lambda i, e: self.events.append(
+                ("crash", i, type(e).__name__, str(e))
+            ),
+            crash_budget=CrashBudget(
+                max_crashes=cfg.max_crashes,
+                window_seconds=cfg.crash_window_s,
+            ),
+            backoff_base=cfg.backoff_base,
+            backoff_cap=cfg.backoff_cap,
+            backoff_jitter=cfg.backoff_jitter,
+            sleep_fn=self.sleep_fn,
+            seed=cfg.seed,
+        )

@@ -1,41 +1,86 @@
-"""Fault-tolerance utilities: heartbeats, straggler detection, auto-restart.
+"""Fault-tolerance primitives for the preemption-native supervisor.
 
-On a real multi-host pod each host runs these locally; an external
-supervisor (launch/train.py --watch) kills and relaunches wedged jobs, and
-the checkpoint/restore + restart-exact data pipeline guarantee bitwise
-resume. In this container the same machinery is exercised single-host by
-tests/test_train_loop.py (induced crashes, induced stragglers).
+These are the building blocks ``train/elastic.py`` composes into a real
+replan→migrate→resume control loop (driven by ``launch/train.py --watch``):
+
+  * :class:`Heartbeat` — liveness file each worker beats every step; the
+    supervisor distinguishes ``"missing"`` (never started / cleaned up)
+    from ``"stale"`` (started, then went silent — died or wedged) via
+    :meth:`Heartbeat.status`.
+  * :class:`StragglerDetector` — EWMA step-time watchdog; flags steps
+    slower than mean + z·std so the supervisor can drain/replace the host.
+  * :class:`CrashBudget` — sliding-window restart policy (at most N
+    crashes per M seconds), replacing a lifetime counter: a week-long run
+    on spot capacity legitimately restarts many times, but a tight burst
+    of crashes means the job itself is broken.
+  * :func:`run_with_restart` — the restart driver: exponential backoff
+    with deterministic jitter between attempts, governed by either a
+    lifetime ``max_restarts`` cap (legacy) or a :class:`CrashBudget`.
+
+On a real multi-host pod each host runs these locally; the supervisor
+kills and relaunches wedged jobs, and checkpoint/restore + restart-exact
+data replay guarantee bitwise resume. Single-host, the same machinery is
+exercised by tests/test_train_loop.py and tests/test_elastic.py under
+seeded fault injection (``train/faults.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import random
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 
 @dataclasses.dataclass
 class Heartbeat:
     """Writes {step, time} to a file; a supervisor declares the host dead
-    after ``timeout`` seconds of silence."""
+    after ``timeout`` seconds of silence.
+
+    :meth:`status` separates the two dead-looking cases the supervisor
+    must treat differently: ``"missing"`` (no heartbeat file — the worker
+    never started, or its directory was cleaned) vs ``"stale"`` (the file
+    exists but is older than ``timeout`` — the worker started and then
+    died or wedged). ``is_alive`` remains the simple boolean view.
+    """
 
     path: str
     timeout: float = 300.0
 
     def beat(self, step: int):
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"step": step, "time": time.time()}, f)
         os.replace(tmp, self.path)
 
-    def is_alive(self) -> bool:
+    def status(self) -> str:
+        """'alive' | 'stale' | 'missing'."""
         try:
             with open(self.path) as f:
                 last = json.load(f)["time"]
-            return (time.time() - last) < self.timeout
-        except (FileNotFoundError, json.JSONDecodeError, KeyError):
-            return False
+        except FileNotFoundError:
+            return "missing"
+        except (json.JSONDecodeError, KeyError):
+            # A torn write can only be the .tmp file (os.replace is atomic),
+            # so unreadable content means something external clobbered the
+            # path — treat as never-properly-started.
+            return "missing"
+        return "alive" if (time.time() - last) < self.timeout else "stale"
+
+    def last_step(self) -> Optional[int]:
+        """The last step the worker reported, or None if unreadable."""
+        try:
+            with open(self.path) as f:
+                return int(json.load(f)["step"])
+        except (FileNotFoundError, json.JSONDecodeError, KeyError, ValueError):
+            return None
+
+    def is_alive(self) -> bool:
+        return self.status() == "alive"
 
 
 @dataclasses.dataclass
@@ -45,6 +90,12 @@ class StragglerDetector:
     At 1000+ nodes stragglers show up as whole-step slowdowns (synchronous
     SPMD): detection is what's actionable per-host — the supervisor decides
     whether to drain/replace the slow host. We log and count here.
+
+    Warmup seeding: the first observation sets ``mean = dt`` exactly (var
+    0) and is NOT additionally folded through the EWMA — seeding and then
+    decaying in the same call would re-weight the first sample and bias
+    the early statistics. Subsequent warmup samples update the EWMA
+    normally; flagging starts after ``warmup`` observations.
     """
 
     z_threshold: float = 4.0
@@ -58,10 +109,12 @@ class StragglerDetector:
 
     def observe(self, dt: float) -> bool:
         self.n += 1
+        if self.n == 1:
+            # Clean seed: the first sample IS the statistics.
+            self.mean = dt
+            self.var = 0.0
+            return False
         if self.n <= self.warmup:
-            # prime the statistics
-            if self.n == 1:
-                self.mean = dt
             self.mean = self.decay * self.mean + (1 - self.decay) * dt
             self.var = self.decay * self.var + (1 - self.decay) * (dt - self.mean) ** 2
             return False
@@ -75,13 +128,79 @@ class StragglerDetector:
         return is_straggler
 
 
+@dataclasses.dataclass
+class CrashBudget:
+    """Sliding-window restart policy: at most ``max_crashes`` within any
+    ``window_seconds`` window. Unlike a lifetime counter, a long healthy
+    run can absorb unbounded occasional preemptions — only a *burst* of
+    failures (crash-looping) exhausts the budget.
+    """
+
+    max_crashes: int = 5
+    window_seconds: float = 600.0
+    time_fn: Callable[[], float] = time.time
+    _times: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self) -> None:
+        now = self.time_fn()
+        self._times.append(now)
+        self._prune(now)
+
+    def exhausted(self) -> bool:
+        self._prune(self.time_fn())
+        return len(self._times) > self.max_crashes
+
+    def in_window(self) -> int:
+        self._prune(self.time_fn())
+        return len(self._times)
+
+    def _prune(self, now: float) -> None:
+        cutoff = now - self.window_seconds
+        self._times[:] = [t for t in self._times if t >= cutoff]
+
+
+def backoff_delay(
+    attempt: int,
+    base: float,
+    cap: float,
+    jitter: float,
+    rng: Optional[random.Random] = None,
+) -> float:
+    """Delay before restart ``attempt`` (1-based): ``min(cap, base·2^(a-1))``
+    plus up to ``jitter`` fractional seeded noise (so a fleet of restarting
+    workers does not thundering-herd the checkpoint store)."""
+    if base <= 0:
+        return 0.0
+    d = min(cap, base * (2.0 ** (attempt - 1)))
+    if jitter > 0 and rng is not None:
+        d *= 1.0 + jitter * rng.random()
+    return d
+
+
 def run_with_restart(
     make_and_run: Callable[[int], None],
     max_restarts: int = 3,
     on_restart: Optional[Callable[[int, Exception], None]] = None,
+    *,
+    crash_budget: Optional[CrashBudget] = None,
+    backoff_base: float = 0.0,
+    backoff_cap: float = 30.0,
+    backoff_jitter: float = 0.1,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    seed: int = 0,
 ):
     """Crash-restart driver: calls make_and_run(attempt); on exception,
-    retries (the callee restores from the newest checkpoint)."""
+    retries (the callee restores from the newest checkpoint).
+
+    Restart policy: with ``crash_budget`` set, restarts are allowed as long
+    as the sliding window is not exhausted (``max_restarts`` is ignored —
+    long-lived runs restart indefinitely, crash loops stop fast); without
+    it, the legacy lifetime ``max_restarts`` cap applies. Between attempts
+    the driver sleeps ``backoff_delay`` (exponential with seeded jitter;
+    ``backoff_base=0`` disables sleeping — the default, and what unit
+    tests use). ``sleep_fn`` is injectable for tests/supervisors.
+    """
+    rng = random.Random(seed)
     attempt = 0
     while True:
         try:
@@ -90,7 +209,16 @@ def run_with_restart(
             raise
         except Exception as e:  # noqa: BLE001 — any worker failure restarts
             attempt += 1
-            if attempt > max_restarts:
+            if crash_budget is not None:
+                crash_budget.record()
+                if crash_budget.exhausted():
+                    raise
+            elif attempt > max_restarts:
                 raise
             if on_restart:
                 on_restart(attempt, e)
+            delay = backoff_delay(
+                attempt, backoff_base, backoff_cap, backoff_jitter, rng
+            )
+            if delay > 0:
+                sleep_fn(delay)

@@ -1,0 +1,146 @@
+"""Deterministic, seeded fault injection for the elastic control loop.
+
+The supervisor in ``train/elastic.py`` is only trustworthy if its failure
+paths are *exercised*, not just written. This module injects the four
+failure modes preemptible training actually sees, reproducibly:
+
+  * **kill-at-step** — the worker process dies mid-run (preemption);
+  * **torn checkpoint writes** — a finalized checkpoint is corrupted after
+    the fact (partial copy / disk fault) so the crc32 integrity check in
+    ``train/checkpoint.py`` must catch it and the supervisor must fall
+    back to an older checkpoint;
+  * **heartbeat silence** — the worker stops beating for a window while
+    still stepping (network partition / wedged filesystem), so the
+    supervisor sees ``"stale"`` without a crash;
+  * **slow-step stragglers** — injected step-time outliers the
+    :class:`~repro.train.fault_tolerance.StragglerDetector` must flag.
+
+A :class:`FaultSchedule` is pure data (steps and windows, optionally
+generated from a seed); a :class:`FaultInjector` executes it statefully:
+each one-shot fault fires AT MOST ONCE per injector lifetime, so a killed
+run that resumes from a checkpoint *before* the kill step does not die
+again at the same step (the injector object lives in the supervisor,
+outside the worker attempts — exactly where a real preemption lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+from typing import Optional, Sequence, Tuple
+
+
+class InjectedFault(RuntimeError):
+    """Base class for injected failures (so tests can catch precisely)."""
+
+
+class InjectedKill(InjectedFault):
+    """The worker was 'preempted' at a scheduled step."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A deterministic fault plan, keyed by global step.
+
+    ``kill_at`` / ``torn_write_at`` are one-shot step sets;
+    ``heartbeat_silence`` is a tuple of ``[start, end)`` step windows;
+    ``slow_steps`` maps steps to injected extra seconds.
+    """
+
+    kill_at: Tuple[int, ...] = ()
+    torn_write_at: Tuple[int, ...] = ()
+    heartbeat_silence: Tuple[Tuple[int, int], ...] = ()
+    slow_steps: Tuple[Tuple[int, float], ...] = ()
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        total_steps: int,
+        n_kills: int = 1,
+        n_torn: int = 0,
+        n_slow: int = 0,
+        slow_seconds: float = 1.0,
+        min_step: int = 1,
+    ) -> "FaultSchedule":
+        """A seeded random schedule over ``[min_step, total_steps)`` —
+        same seed, same faults, on every machine."""
+        rng = random.Random(seed)
+        span = range(min_step, max(min_step + 1, total_steps))
+        pick = lambda n: tuple(sorted(rng.sample(span, min(n, len(span)))))
+        return cls(
+            kill_at=pick(n_kills),
+            torn_write_at=pick(n_torn),
+            slow_steps=tuple((s, slow_seconds) for s in pick(n_slow)),
+        )
+
+
+class FaultInjector:
+    """Stateful executor of a :class:`FaultSchedule`.
+
+    Lives in the SUPERVISOR (one per run, shared across worker attempts):
+    one-shot faults are remembered in ``fired`` so a resumed attempt does
+    not replay them. The hooks are called from ``TrainLoop.run``:
+
+      * :meth:`maybe_kill` — raise :class:`InjectedKill` at a kill step;
+      * :meth:`heartbeat_silent` — suppress the heartbeat this step;
+      * :meth:`slow_delay` — extra seconds to add to the observed step
+        time (added to the measured dt, not slept — keeps tests fast
+        while exercising the detector on the true code path);
+      * :meth:`after_save` — corrupt the just-written checkpoint (flip
+        bytes in one array file, seeded choice) to simulate a torn write.
+    """
+
+    def __init__(self, schedule: FaultSchedule, seed: int = 0):
+        self.schedule = schedule
+        self.seed = seed
+        self.fired = set()
+        self.kills = 0
+        self.torn = 0
+
+    def _once(self, kind: str, step: int) -> bool:
+        key = (kind, int(step))
+        if key in self.fired:
+            return False
+        self.fired.add(key)
+        return True
+
+    def maybe_kill(self, step: int) -> None:
+        if step in self.schedule.kill_at and self._once("kill", step):
+            self.kills += 1
+            raise InjectedKill(f"injected preemption at step {step}")
+
+    def heartbeat_silent(self, step: int) -> bool:
+        return any(a <= step < b for a, b in self.schedule.heartbeat_silence)
+
+    def slow_delay(self, step: int) -> float:
+        for s, extra in self.schedule.slow_steps:
+            if s == step:
+                return float(extra)
+        return 0.0
+
+    def after_save(self, ckpt_dir: Optional[str], step: int) -> None:
+        """Tear the checkpoint just saved at ``step`` (if scheduled):
+        truncate-and-garble one of its array files in place. The manifest
+        stays intact — exactly the corruption crc32 exists to catch."""
+        if ckpt_dir is None or step not in self.schedule.torn_write_at:
+            return
+        if not self._once("torn", step):
+            return
+        cdir = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+        victims = sorted(
+            f for f in os.listdir(cdir) if f.endswith(".npy")
+        )
+        if not victims:
+            return
+        rng = random.Random(self.seed * 1_000_003 + step)
+        victim = os.path.join(cdir, rng.choice(victims))
+        size = os.path.getsize(victim)
+        with open(victim, "r+b") as f:
+            # Garble the payload (keep the npy header readable so both
+            # the unreadable-file AND checksum-mismatch paths get
+            # exercised across seeds), then truncate the tail.
+            f.seek(size // 2)
+            f.write(bytes(rng.randrange(256) for _ in range(min(64, size // 4 or 1))))
+            f.truncate(max(size // 2 + 64, size * 3 // 4))
+        self.torn += 1

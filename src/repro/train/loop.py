@@ -32,11 +32,18 @@ class TrainLoopConfig:
     heartbeat_path: Optional[str] = None
     grad_accum: int = 1
     crash_at_step: Optional[int] = None  # fault-injection for tests
+    # Seeded fault injection (train/faults.FaultInjector): kills, torn
+    # checkpoint writes, heartbeat silence, slow steps. Owned by the
+    # supervisor so one-shot faults survive across worker attempts.
+    fault_injector: Optional[Any] = None
+    # JSON dict saved with every checkpoint manifest (the elastic
+    # supervisor stores the coap-plan/v1 artifact here).
+    ckpt_meta: Optional[Dict] = None
 
 
 class TrainLoop:
     def __init__(self, model, tx, batch_fn: Callable[[int, int], Dict],
-                 cfg: TrainLoopConfig, init_key=None):
+                 cfg: TrainLoopConfig, init_key=None, initial_state=None):
         self.model = model
         self.tx = tx
         self.batch_fn = batch_fn
@@ -49,10 +56,15 @@ class TrainLoop:
         self._step_fn = jax.jit(make_train_step(model, tx,
                                                 grad_accum=cfg.grad_accum))
         self._init_key = init_key if init_key is not None else jax.random.key(0)
+        # A supervisor that already restored (and possibly migrated) the
+        # state passes it here; init_or_restore then skips its own restore.
+        self._initial_state = initial_state
 
     # -- state ---------------------------------------------------------------
     def init_or_restore(self) -> TrainState:
         cfg = self.cfg
+        if self._initial_state is not None:
+            return self._initial_state
         if cfg.ckpt_dir and ckpt.latest_step(cfg.ckpt_dir) is not None:
             template = jax.eval_shape(
                 lambda: TrainState.create(
@@ -70,17 +82,24 @@ class TrainLoop:
         state = self.init_or_restore()
         start = int(state.step)
         ceu_total = 0.0
+        inj = cfg.fault_injector
         for step in range(start, cfg.total_steps):
             if cfg.crash_at_step is not None and step == cfg.crash_at_step:
                 raise RuntimeError(f"induced crash at step {step}")
+            if inj is not None:
+                inj.maybe_kill(step)
             batch = self.batch_fn(step, 0)
             t0 = time.time()
             state, metrics = self._step_fn(state, batch)
             jax.block_until_ready(state.params)
             dt = time.time() - t0
+            if inj is not None:
+                dt += inj.slow_delay(step)
             slow = self.straggler.observe(dt)
             ceu_total += float(metrics["ceu"])
-            if self.heartbeat:
+            if self.heartbeat and not (
+                inj is not None and inj.heartbeat_silent(step)
+            ):
                 self.heartbeat.beat(step)
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
                 row = dict(metrics)
@@ -96,7 +115,13 @@ class TrainLoop:
                 and cfg.ckpt_every
                 and (step + 1) % cfg.ckpt_every == 0
             ):
-                ckpt.save(cfg.ckpt_dir, step + 1, state, keep=cfg.ckpt_keep)
+                ckpt.save(cfg.ckpt_dir, step + 1, state, keep=cfg.ckpt_keep,
+                          meta=cfg.ckpt_meta)
+                if inj is not None:
+                    inj.after_save(cfg.ckpt_dir, step + 1)
         if cfg.ckpt_dir:
-            ckpt.save(cfg.ckpt_dir, int(state.step), state, keep=cfg.ckpt_keep)
+            ckpt.save(cfg.ckpt_dir, int(state.step), state, keep=cfg.ckpt_keep,
+                      meta=cfg.ckpt_meta)
+            if inj is not None:
+                inj.after_save(cfg.ckpt_dir, int(state.step))
         return state

@@ -1,0 +1,542 @@
+"""Preemption-native elastic training: plan migration parity + the
+replan → migrate → resume control loop under fault injection.
+
+Two layers, matching ``train/elastic.py``'s contract:
+
+  * **migration parity** — ``stacked_state.migrate`` on real planned
+    optimizer states: rank truncation keeps leading columns bit-exact,
+    Eqn-7-style expansion keeps old columns and zeros new moment columns,
+    quantize flips round-trip within one codec rounding, and every
+    migrated state's bytes match ``accounting.abstract_state_bytes`` of
+    the TARGET optimizer exactly, category by category;
+  * **control loop** — a seeded fault schedule (kill at step k, topology
+    shrink 8→4 with a fresh plan) resumes through ``ElasticSupervisor``
+    to a final loss within tolerance of the uninterrupted baseline, with
+    stagger phases re-derived bit-identically across two resumes from
+    the same checkpoint, torn checkpoints skipped newest→oldest, and the
+    crash budget propagating the last failure when exhausted.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import accounting, stacked_state as ss
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.data.synthetic import SyntheticLM
+from repro.models.model import build_model
+from repro.plan import apply as plan_apply
+from repro.plan.solver import solve, solve_for_topology
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import (
+    ElasticConfig,
+    ElasticSupervisor,
+    Topology,
+    find_projected_state,
+    migrate_opt_state,
+    stagger_signature,
+    topology_at,
+)
+from repro.train.fault_tolerance import (
+    CrashBudget,
+    Heartbeat,
+    StragglerDetector,
+    backoff_delay,
+    run_with_restart,
+)
+from repro.train.faults import FaultInjector, FaultSchedule, InjectedKill
+
+_KW = dict(min_dim=8, t_update=4, lam=2, stagger_groups=2)
+
+
+# ---------------------------------------------------------------------------
+# Migration parity (stacked_state.migrate on real planned states)
+# ---------------------------------------------------------------------------
+def _params():
+    key = jax.random.key(7)
+    mk = lambda i, shp: 0.3 * jax.random.normal(jax.random.fold_in(key, i), shp)
+    return {
+        "w1": mk(0, (64, 32)),
+        "w2": mk(1, (64, 32)),
+        "conv": mk(2, (16, 12, 3, 3)),
+        "b": mk(3, (64,)),
+    }
+
+
+def _planned_state(params, plan, steps=3):
+    """A real optimizer state (the raw chain state, not a TrainState)
+    under ``plan`` with populated moments."""
+    ocfg = OptimizerConfig(name="coap-adamw", learning_rate=1e-3, plan=plan)
+    tx = make_optimizer(ocfg)
+    state = tx.init(params)
+    key = jax.random.key(11)
+    for i in range(steps):
+        g = jax.tree_util.tree_map(
+            lambda p: 0.1 * jax.random.normal(
+                jax.random.fold_in(key, i), p.shape
+            ),
+            params,
+        )
+        _, state = jax.jit(lambda gg, s: tx.update(gg, s, params))(g, state)
+    return ocfg, tx, state
+
+
+def _by_path(leaves: ss.StackedLeaves):
+    """Logical path -> (per-leaf state, spec) for every bucketed leaf."""
+    flat = ss.decode(leaves)
+    out = {}
+    for info in leaves.layout.buckets:
+        for idx, path in zip(info.indices, info.paths):
+            out[path] = (flat[idx], info.spec)
+    return out
+
+
+def _assert_bytes_match_target(migrated_opt_state, dst_plan, params):
+    """Migrated bytes == the TARGET optimizer's abstract accounting,
+    category by category (the planner's exactness contract, preserved
+    through migration)."""
+    dst_tx = make_optimizer(
+        OptimizerConfig(name="coap-adamw", learning_rate=1e-3, plan=dst_plan)
+    )
+    want = accounting.abstract_state_bytes(
+        dst_tx, jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+        )
+    )
+    got = accounting.optimizer_state_bytes(migrated_opt_state)
+    assert got.by_category == want.by_category
+
+
+@pytest.fixture(scope="module")
+def plans():
+    params = _params()
+    p_fp32 = solve(params, 10**12, quantize="off", **_KW)
+    p_int8 = solve(params, 10**12, quantize="force", **_KW)
+    p_lowrank = solve(params, 10**12, quantize="off",
+                      rank_compression=8.0, **_KW)
+    return params, p_fp32, p_int8, p_lowrank
+
+
+def test_migrate_same_plan_is_bit_exact(plans):
+    """Same plan, same codec: pass-through — int8 codes included."""
+    params, _, p_int8, _ = plans
+    ocfg, _, opt = _planned_state(params, p_int8)
+    migrated = migrate_opt_state(
+        opt, p_int8, p_int8, params, ocfg
+    )
+    src = find_projected_state(opt)
+    dst = find_projected_state(migrated)
+    for a, b in zip(jax.tree_util.tree_leaves(src.leaves),
+                    jax.tree_util.tree_leaves(dst.leaves)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_bytes_match_target(migrated, p_int8, params)
+
+
+def test_migrate_rank_truncation_keeps_leading_columns(plans):
+    """fp32 full-rank -> fp32 low-rank: P and the moments keep their
+    leading columns bit-exactly (truncation loses only the dropped
+    columns); conv factors truncate on both Tucker-2 axes."""
+    params, p_fp32, _, p_lowrank = plans
+    ocfg, _, opt = _planned_state(params, p_fp32)
+    migrated = migrate_opt_state(
+        opt, p_fp32, p_lowrank, params, ocfg
+    )
+    src = _by_path(find_projected_state(opt).leaves)
+    dst = _by_path(find_projected_state(migrated).leaves)
+    assert set(src) == set(dst)
+    checked = 0
+    for path, (d, dspec) in dst.items():
+        s, sspec = src[path]
+        if hasattr(d, "p"):  # projected leaf
+            r = d.p.shape[-1]
+            assert r < s.p.shape[-1]
+            np.testing.assert_array_equal(np.asarray(d.p),
+                                          np.asarray(s.p[..., :r]))
+            np.testing.assert_array_equal(np.asarray(d.m),
+                                          np.asarray(s.m[..., :r]))
+            np.testing.assert_array_equal(np.asarray(d.v),
+                                          np.asarray(s.v[..., :r]))
+            checked += 1
+        elif hasattr(d, "p_o"):  # conv leaf
+            ro, ri = d.p_o.shape[-1], d.p_i.shape[-1]
+            assert ro < s.p_o.shape[-1] and ri < s.p_i.shape[-1]
+            np.testing.assert_array_equal(np.asarray(d.p_o),
+                                          np.asarray(s.p_o[..., :ro]))
+            np.testing.assert_array_equal(np.asarray(d.p_i),
+                                          np.asarray(s.p_i[..., :ri]))
+            np.testing.assert_array_equal(np.asarray(d.m),
+                                          np.asarray(s.m[:ro, :ri]))
+            checked += 1
+    assert checked >= 2  # at least one projected and the conv bucket
+    count_src = find_projected_state(opt).count
+    assert int(find_projected_state(migrated).count) == int(count_src)
+    _assert_bytes_match_target(migrated, p_lowrank, params)
+
+
+def test_migrate_rank_expansion_preserves_and_orthogonalizes(plans):
+    """Low-rank -> full-rank: old P columns bit-exact, new P columns
+    non-degenerate and orthogonal to the span of the old ones (the
+    Eqn-7-style re-expansion), new MOMENT columns exactly zero."""
+    params, p_fp32, _, p_lowrank = plans
+    ocfg, _, opt = _planned_state(params, p_lowrank)
+    migrated = migrate_opt_state(
+        opt, p_lowrank, p_fp32, params, ocfg
+    )
+    src = _by_path(find_projected_state(opt).leaves)
+    dst = _by_path(find_projected_state(migrated).leaves)
+    for path, (d, _) in dst.items():
+        if not hasattr(d, "p"):
+            continue
+        s, _ = src[path]
+        r_old, r_new = s.p.shape[-1], d.p.shape[-1]
+        assert r_new > r_old
+        np.testing.assert_array_equal(np.asarray(d.p[..., :r_old]),
+                                      np.asarray(s.p))
+        new_p = np.asarray(d.p[..., r_old:], dtype=np.float64)
+        old_p = np.asarray(s.p, dtype=np.float64)
+        # non-degenerate and orthogonal to span(old columns)
+        assert np.all(np.linalg.norm(new_p, axis=-2) > 1e-6)
+        q, _ = np.linalg.qr(old_p)
+        leak = np.abs(q.T @ new_p).max()
+        assert leak < 1e-4
+        np.testing.assert_array_equal(
+            np.asarray(d.m[..., r_old:]),
+            np.zeros_like(np.asarray(d.m[..., r_old:])),
+        )
+        np.testing.assert_array_equal(np.asarray(d.m[..., :r_old]),
+                                      np.asarray(s.m))
+    _assert_bytes_match_target(migrated, p_fp32, params)
+
+
+def test_migrate_quantize_flip_roundtrip(plans):
+    """fp32 -> int8 -> fp32 costs exactly one blockwise-codec rounding:
+    the round-tripped moments match the originals within the int8 step
+    size, and both directions' bytes match the target accounting."""
+    params, p_fp32, p_int8, _ = plans
+    ocfg, _, opt = _planned_state(params, p_fp32)
+    to_q = migrate_opt_state(opt, p_fp32, p_int8, params, ocfg)
+    _assert_bytes_match_target(to_q, p_int8, params)
+    back = migrate_opt_state(to_q, p_int8, p_fp32, params, ocfg)
+    _assert_bytes_match_target(back, p_fp32, params)
+
+    src = _by_path(find_projected_state(opt).leaves)
+    rt = _by_path(find_projected_state(back).leaves)
+    for path, (d, _) in rt.items():
+        s, _ = src[path]
+        for field in ("m", "v"):
+            if not hasattr(s, field):
+                continue
+            a = np.asarray(getattr(s, field))
+            b = np.asarray(getattr(d, field))
+            assert a.dtype == b.dtype
+            tol = np.abs(a).max() / 127.0 + 1e-12
+            np.testing.assert_allclose(b, a, atol=tol)
+
+
+def test_migrate_structure_mismatch_raises(plans):
+    """A target layout over DIFFERENT leaves (renamed/added params) is a
+    structure change, not a migration — fail loudly."""
+    params, p_fp32, _, _ = plans
+    ocfg, _, opt = _planned_state(params, p_fp32)
+    other = dict(params)
+    other["w3"] = other.pop("w1")
+    dst_layout = ss.layout_for_tree(
+        plan_apply.planned_rules(p_fp32).spec_for, other
+    )
+    leaves = find_projected_state(opt).leaves
+    with pytest.raises(ValueError, match="different param trees"):
+        ss.migrate(leaves, dst_layout, quantize_for=lambda p: False)
+
+
+# ---------------------------------------------------------------------------
+# The control loop: kill → replan (8→4 shrink) → migrate → resume
+# ---------------------------------------------------------------------------
+_SMOKE_KW = dict(min_dim=16, t_update=4, lam=2, stagger_groups=2)
+_STEPS = 12
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    data = SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.2)
+    batch_fn = lambda step, host: data.batch(step, batch=4, seq=16, host=host)
+    params = model.abstract_params()
+    # Budget math: pick a per-device HBM so the 8-device pool fits the
+    # fp32 plan while the 4-device pool forces the quantize knapsack —
+    # the shrink really changes the layout, so migration really runs.
+    h32 = solve_for_topology(params, 1, 10**12, quantize="off",
+                             **_SMOKE_KW).predicted["hbm_total_bytes"]
+    h8 = solve_for_topology(params, 1, 10**12, quantize="force",
+                            **_SMOKE_KW).predicted["hbm_total_bytes"]
+    per_dev = (h32 + h8) // 2 // 4
+    assert 8 * per_dev >= h32 and h8 <= 4 * per_dev < h32
+    return model, batch_fn, params, per_dev
+
+
+def _ecfg(tmp, per_dev, shrink_at=None, **kw):
+    topo = [Topology(8, per_dev)]
+    if shrink_at is not None:
+        topo.append(Topology(4, per_dev, from_step=shrink_at))
+    base = dict(
+        ckpt_dir=os.path.join(tmp, "ckpt"),
+        total_steps=_STEPS,
+        topology=tuple(topo),
+        solve_kw=_SMOKE_KW,
+        ckpt_every=2,
+        log_every=100,
+        backoff_base=0.0,
+    )
+    base.update(kw)
+    return ElasticConfig(**base)
+
+
+def _ocfg():
+    return OptimizerConfig(name="coap-adamw", learning_rate=1e-3)
+
+
+def test_topology_at():
+    sched = (Topology(8, 100), Topology(4, 100, from_step=6))
+    assert topology_at(sched, 0).n_devices == 8
+    assert topology_at(sched, 5).n_devices == 8
+    assert topology_at(sched, 6).n_devices == 4
+    assert topology_at(sched, 99).n_devices == 4
+    with pytest.raises(ValueError):
+        topology_at((Topology(8, 100, from_step=5),), 2)
+
+
+def test_kill_shrink_replan_resume_converges(smoke, tmp_path):
+    """THE acceptance scenario: seeded kill at step 7 + topology shrink
+    8→4 at step 6. The supervisor replans (new plan quantizes buckets),
+    migrates the step-6 checkpoint and resumes to step 12 — final loss
+    within tolerance of the uninterrupted 8-device baseline."""
+    model, batch_fn, params, per_dev = smoke
+
+    base = ElasticSupervisor(
+        model, batch_fn, _ecfg(str(tmp_path / "base"), per_dev), ocfg=_ocfg()
+    )
+    state_base = base.run()
+    assert base.events == [("resume", 0, None, 8)]
+
+    inj = FaultInjector(FaultSchedule(kill_at=(7,)), seed=0)
+    sup = ElasticSupervisor(
+        model, batch_fn,
+        _ecfg(str(tmp_path / "elastic"), per_dev, shrink_at=6),
+        ocfg=_ocfg(), fault_injector=inj,
+    )
+    state = sup.run()
+
+    assert int(state.step) == int(state_base.step) == _STEPS
+    kinds = [e[0] for e in sup.events]
+    assert kinds == ["resume", "crash", "migrate", "resume"]
+    assert sup.events[-1][2] == 6  # resumed from the step-6 checkpoint
+    assert sup.events[-1][3] == 4  # ...on the shrunk topology
+    # The shrink genuinely changed the layout: the 4-device plan
+    # quantizes buckets the 8-device plan kept fp32.
+    plan8 = sup.plan_for(Topology(8, per_dev))
+    plan4 = sup.plan_for(Topology(4, per_dev, from_step=6))
+    assert sum(b.quantize for b in plan8.buckets) == 0
+    assert sum(b.quantize for b in plan4.buckets) > 0
+    # The migrated state is byte-exact against the target accounting.
+    _assert_bytes_match_target(state.opt_state, plan4, model.init(
+        jax.random.key(0)))
+
+    batch = batch_fn(_STEPS + 1, 0)
+    loss_base, _ = model.loss(state_base.params, batch)
+    loss_elastic, _ = model.loss(state.params, batch)
+    assert float(loss_elastic) == pytest.approx(float(loss_base),
+                                                rel=0.15)
+
+
+def test_two_resumes_same_checkpoint_identical_schedule(smoke, tmp_path):
+    """Stagger phases and the resumed step count are a pure function of
+    (checkpoint, topology): two independent supervisors resuming the
+    same checkpoint derive bit-identical schedules and states."""
+    model, batch_fn, params, per_dev = smoke
+    tmp = str(tmp_path)
+
+    # Produce a checkpoint at step 6 under the 8-device plan.
+    seed_cfg = _ecfg(tmp, per_dev, total_steps=6)
+    ElasticSupervisor(model, batch_fn, seed_cfg, ocfg=_ocfg()).run()
+    assert 6 in ckpt.steps(seed_cfg.ckpt_dir)
+
+    cfg = _ecfg(tmp, per_dev, shrink_at=6)
+    outs = []
+    for _ in range(2):
+        sup = ElasticSupervisor(model, batch_fn, cfg, ocfg=_ocfg())
+        topo = sup.current_topology()
+        assert topo.n_devices == 4
+        plan = sup.plan_for(topo)
+        tx = sup._tx_for(plan)
+        state, step, _ = sup.restore_into_plan(plan, tx)
+        sig = stagger_signature(plan, params, _ocfg())
+        outs.append((step, sig, state))
+    (s1, sig1, st1), (s2, sig2, st2) = outs
+    assert s1 == s2 == 6
+    assert sig1 == sig2  # bit-identical stagger phases
+    for a, b in zip(jax.tree_util.tree_leaves(st1),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_torn_checkpoint_falls_back_to_older(smoke, tmp_path):
+    """A torn newest checkpoint (injected partial write at step 6) is
+    skipped with an event; the supervisor resumes from step 4."""
+    model, batch_fn, _, per_dev = smoke
+    inj = FaultInjector(
+        FaultSchedule(kill_at=(7,), torn_write_at=(6,)), seed=3
+    )
+    sup = ElasticSupervisor(
+        model, batch_fn, _ecfg(str(tmp_path), per_dev),
+        ocfg=_ocfg(), fault_injector=inj,
+    )
+    state = sup.run()
+    assert int(state.step) == _STEPS
+    kinds = [e[0] for e in sup.events]
+    assert "torn_checkpoint" in kinds
+    torn = next(e for e in sup.events if e[0] == "torn_checkpoint")
+    assert torn[1] == 6
+    resumed = [e for e in sup.events if e[0] == "resume"]
+    assert resumed[-1][2] == 4  # fell back past the torn step-6 ckpt
+
+
+def test_crash_budget_exhaustion_propagates(smoke, tmp_path):
+    """More injected kills than the crash budget allows: the supervisor
+    stops retrying and the last InjectedKill propagates."""
+    model, batch_fn, _, per_dev = smoke
+    inj = FaultInjector(FaultSchedule(kill_at=(1, 2, 3)), seed=0)
+    sup = ElasticSupervisor(
+        model, batch_fn,
+        _ecfg(str(tmp_path), per_dev, max_crashes=1),
+        ocfg=_ocfg(), fault_injector=inj,
+    )
+    with pytest.raises(InjectedKill):
+        sup.run()
+    assert inj.kills >= 2
+
+
+# ---------------------------------------------------------------------------
+# Restart-policy primitives (fault_tolerance satellites)
+# ---------------------------------------------------------------------------
+def test_straggler_detector_seeds_cleanly():
+    """Regression: the FIRST observation seeds mean exactly (no EWMA
+    against the zero-initialized mean), so an honest constant step time
+    never reads as an outlier during or right after warmup."""
+    det = StragglerDetector(z_threshold=3.0, warmup=5)
+    assert not det.observe(0.25)
+    assert det.mean == pytest.approx(0.25)
+    assert det.var == 0.0
+    for _ in range(10):
+        assert not det.observe(0.25)
+    assert det.flagged == 0
+    assert det.observe(1.25)  # genuine outlier still flags
+    assert det.flagged == 1
+
+
+def test_heartbeat_missing_vs_stale(tmp_path, monkeypatch):
+    hb = Heartbeat(str(tmp_path / "hb.json"), timeout=10.0)
+    assert hb.status() == "missing"
+    assert not hb.is_alive()
+    hb.beat(3)
+    assert hb.status() == "alive" and hb.is_alive()
+    assert hb.last_step() == 3
+    import repro.train.fault_tolerance as ft
+    real = ft.time.time()
+    monkeypatch.setattr(ft.time, "time", lambda: real + 11.0)
+    assert hb.status() == "stale"
+    assert not hb.is_alive()
+    os.remove(hb.path)
+    assert hb.status() == "missing"
+
+
+def test_heartbeat_creates_parent_dir(tmp_path):
+    hb = Heartbeat(str(tmp_path / "fresh" / "hb.json"))
+    hb.beat(0)
+    assert hb.is_alive()
+
+
+def test_crash_budget_sliding_window():
+    now = [1000.0]
+    cb = CrashBudget(max_crashes=2, window_seconds=60.0,
+                     time_fn=lambda: now[0])
+    cb.record(); cb.record()
+    assert not cb.exhausted()
+    cb.record()  # 3rd crash inside the window
+    assert cb.exhausted()
+    now[0] += 61.0  # the window slides: old crashes expire
+    assert not cb.exhausted()
+    cb.record()
+    assert not cb.exhausted()
+
+
+def test_backoff_delay_shape():
+    import random as pyrandom
+    rng = pyrandom.Random(0)
+    assert backoff_delay(1, 0.0, 30.0, 0.1, rng) == 0.0
+    d1 = backoff_delay(1, 1.0, 30.0, 0.0, rng)
+    d2 = backoff_delay(2, 1.0, 30.0, 0.0, rng)
+    d5 = backoff_delay(5, 1.0, 4.0, 0.0, rng)
+    assert d1 == 1.0 and d2 == 2.0 and d5 == 4.0  # doubling, capped
+    dj = backoff_delay(3, 1.0, 30.0, 0.5, pyrandom.Random(0))
+    assert 4.0 <= dj <= 6.0  # jitter only ever lengthens
+
+
+def test_run_with_restart_backoff_and_budget():
+    sleeps = []
+    attempts = []
+
+    def attempt(i):
+        attempts.append(i)
+        if i < 2:
+            raise RuntimeError(f"boom {i}")
+        return "ok"
+
+    out = run_with_restart(
+        attempt,
+        crash_budget=CrashBudget(max_crashes=5, window_seconds=1e9),
+        backoff_base=1.0, backoff_cap=30.0, backoff_jitter=0.0,
+        sleep_fn=sleeps.append, seed=0,
+    )
+    assert out == "ok"
+    assert attempts == [0, 1, 2]
+    assert sleeps == [1.0, 2.0]  # exponential between attempts
+
+    def always_fail(i):
+        raise RuntimeError("down")
+
+    with pytest.raises(RuntimeError, match="down"):
+        run_with_restart(
+            always_fail,
+            crash_budget=CrashBudget(max_crashes=2, window_seconds=1e9),
+            backoff_base=0.0, sleep_fn=sleeps.append,
+        )
+
+
+def test_fault_schedule_generate_is_deterministic():
+    a = FaultSchedule.generate(seed=5, total_steps=100, n_kills=2,
+                               n_torn=1, n_slow=3)
+    b = FaultSchedule.generate(seed=5, total_steps=100, n_kills=2,
+                               n_torn=1, n_slow=3)
+    c = FaultSchedule.generate(seed=6, total_steps=100, n_kills=2,
+                               n_torn=1, n_slow=3)
+    assert a == b
+    assert a != c
+    assert all(1 <= s < 100 for s in a.kill_at + a.torn_write_at)
+
+
+def test_injected_faults_fire_once():
+    inj = FaultInjector(FaultSchedule(kill_at=(4,),
+                                      heartbeat_silence=((2, 5),),
+                                      slow_steps=((3, 0.7),)))
+    with pytest.raises(InjectedKill):
+        inj.maybe_kill(4)
+    inj.maybe_kill(4)  # one-shot: a resumed run passes step 4 unharmed
+    assert inj.heartbeat_silent(2) and inj.heartbeat_silent(4)
+    assert not inj.heartbeat_silent(5)
+    assert inj.slow_delay(3) == 0.7
+    assert inj.slow_delay(4) == 0.0
