@@ -1090,6 +1090,36 @@ def run_elastic(csv: Csv, fast: bool = False):
             state4, batch
         ).compile()
         recompile_s = _time.perf_counter() - t0
+
+        # Drained vs reactive preemption: steps LOST at an injected
+        # preemption. A notice-honoring drain checkpoints at its exact
+        # stop step (zero lost); a no-warning kill rolls back to the
+        # last periodic checkpoint (up to ckpt_every lost).
+        from repro.train.faults import FaultInjector, FaultSchedule
+
+        steps2 = 8 if fast else 12
+        fault_step = steps2 - 3
+
+        def lost_steps(schedule, sub):
+            ecfg2 = ElasticConfig(
+                ckpt_dir=os.path.join(tmp, sub), total_steps=steps2,
+                topology=(Topology(8, per_dev),), solve_kw=kw,
+                ckpt_every=2, log_every=100,
+            )
+            sup2 = ElasticSupervisor(
+                model, batch_fn, ecfg2, ocfg=ocfg,
+                fault_injector=FaultInjector(schedule, seed=0),
+            )
+            sup2.run()
+            resumes = [e for e in sup2.events if e[0] == "resume"]
+            return fault_step - int(resumes[-1][2])
+
+        drain_lost = lost_steps(
+            FaultSchedule(notice_at=((fault_step, 30.0),)), "drain"
+        )
+        reactive_lost = lost_steps(
+            FaultSchedule(kill_at=(fault_step,)), "reactive"
+        )
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
@@ -1107,6 +1137,12 @@ def run_elastic(csv: Csv, fast: bool = False):
         "migrate_s": migrate_s,
         "recompile_s": recompile_s,
         "total_resume_s": total,
+        "preemption": {
+            "fault_step": fault_step,
+            "ckpt_every": 2,
+            "drained_lost_steps": drain_lost,
+            "reactive_lost_steps": reactive_lost,
+        },
         "method": (
             "cold timings, one pass each (a preempted resume pays every "
             "phase uncached): restore = checkpoint.restore of the newest "
@@ -1114,13 +1150,22 @@ def run_elastic(csv: Csv, fast: bool = False):
             "elastic.migrate_opt_state (stacked_state.migrate: rank "
             "resize + fp32->int8 requant into the 4-device plan's "
             "layout) materialized; recompile = AOT lower+compile of the "
-            "train step under the new plan."
+            "train step under the new plan. preemption = resume-step "
+            "delta after an injected notice (drained: checkpoint at the "
+            "exact stop step) vs an injected no-warning kill (reactive: "
+            "roll back to the last periodic checkpoint). The restore/"
+            "migrate/recompile split also calibrates the solver's "
+            "resume-latency-aware mode (plan/cost.Calibration resume_*)."
         ),
     }
     for k in ("restore_s", "migrate_s", "recompile_s"):
         csv.add(f"elastic/{k[:-2]}", report[k] * 1e6, "resume phase")
         print(f"  {k[:-2]:>9}: {report[k]*1e3:8.1f} ms "
               f"({report[k]/total:5.1%} of resume)")
+    csv.add("elastic/drained_lost_steps", drain_lost, "preemption")
+    csv.add("elastic/reactive_lost_steps", reactive_lost, "preemption")
+    print(f"  preemption at step {fault_step}: drained loses {drain_lost} "
+          f"steps, reactive loses {reactive_lost} (ckpt_every=2)")
     out_path = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_elastic.json",

@@ -63,13 +63,26 @@ fault_smoke() {
   echo "== elastic/fault-injection smoke =="
   # The preemption-native control loop end-to-end: seeded kill + topology
   # shrink 8->4 with a replanned (quantizing) layout, checkpoint restore
-  # with stacked_state.migrate, torn-checkpoint fallback via crc32, and
-  # the launch/train.py --watch supervisor CLI driving the same path.
+  # with stacked_state.migrate, torn-checkpoint fallback via crc32, the
+  # notice-drain zero-lost-steps contract, and the launch/train.py --watch
+  # supervisor CLI driving the same path.
   REPRO_PALLAS=interpret python -m pytest -q \
     tests/test_elastic.py::test_kill_shrink_replan_resume_converges \
     tests/test_elastic.py::test_torn_checkpoint_falls_back_to_older \
     tests/test_elastic.py::test_migrate_quantize_flip_roundtrip \
+    tests/test_elastic.py::test_drain_zero_lost_steps_vs_reactive_rollback \
     "tests/test_checkpoint_edges.py::test_torn_write_fails_loudly_naming_file[True]"
+
+  echo "== out-of-process fault smoke (real SIGKILL) =="
+  # The exec worker model: spawned worker processes supervised purely
+  # through the heartbeat file — a REAL SIGKILL mid-run (on CPU), the
+  # 8->4 shrink replan/migrate across the process boundary, an injected
+  # preemption notice drained with zero lost steps, plus the fast
+  # fake-worker escalation-ladder checks and the fleet plan-consensus
+  # protocol.
+  REPRO_PALLAS=interpret python -m pytest -q \
+    tests/test_elastic_process.py \
+    tests/test_fleet.py
 }
 
 if [[ "${1:-}" == "smoke" ]]; then

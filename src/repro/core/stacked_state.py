@@ -453,9 +453,19 @@ def manifest_entries(tree: Any) -> List[ManifestEntry]:
 #   * APPROX — quantize flips pay exactly one codec rounding
 #     (dequantize→requantize); fp32→int8→fp32 round-trips land within
 #     block-absmax rounding of the original;
-#   * RESET  — a kind change (project↔conv↔dense) or a transposed
-#     canonicalization re-initializes that leaf's state from scratch
-#     (there is no meaningful moment mapping across kinds).
+#   * EXACT* — a transposed canonicalization (same kind, flipped
+#     ``spec.transpose``) is architecture-preserving and transforms in
+#     place: with the QR factorization m = QR of the projected first
+#     moment, the flipped leaf takes P' = Q and m' = P·Rᵀ, which
+#     reproduces the de-projected first moment EXACTLY
+#     (m'·P'ᵀ = P·Rᵀ·Qᵀ = P·mᵀ = (m·Pᵀ)ᵀ) and leaves P' exactly
+#     orthonormal; the second moment has no exact low-rank transport
+#     (Adam's v is already a diagonal approximation) and moves through
+#     the diagonal variance map v' = (P∘²)·vᵀ·(Q∘²) — nonnegative,
+#     magnitude-preserving, zero iff v was zero;
+#   * RESET  — a kind change (project↔conv↔dense) re-initializes that
+#     leaf's state from scratch (there is no meaningful moment mapping
+#     across kinds).
 #
 # Byte exactness: migrated storage reproduces the target optimizer's init
 # storage shapes/dtypes exactly, so ``accounting.optimizer_state_bytes`` of
@@ -596,11 +606,53 @@ def _fresh_leaf_state(spec: ProjSpec, shape, quantize, key, block, state_dtype):
     return _ca.DenseLeaf(mu=m0, nu=v0, mu_scale=ms0, nu_scale=vs0)
 
 
+def _transpose_proj(state, src_spec, src_block, state_dtype):
+    """Exact orientation flip of a projected leaf (same kind, flipped
+    ``spec.transpose`` — see the preservation contract above).
+
+    Canonical source: P (..., n, r), moments (..., m, r). The flip swaps
+    canonical roles, so the target wants P' (..., m, r) and moments
+    (..., n, r). Factor the first moment m = Q·R (Q orthonormal):
+
+        P' = Q,   m' = P·Rᵀ   ⇒   m'·P'ᵀ = P·mᵀ = (m·Pᵀ)ᵀ
+
+    i.e. the de-projected first moment is reproduced EXACTLY and P' is
+    exactly orthonormal. The second moment moves through the diagonal
+    variance map v' = (P∘²)·vᵀ·(Q∘²) — the same diagonal approximation
+    Adam's v already makes; nonnegative and zero iff v was zero.
+
+    Returns ``(leaf, spec)`` with fp32 (unquantized) moments at the
+    SOURCE rank — the caller's generic rank/codec path finishes the job.
+    """
+    from repro.core import coap_adam as _ca
+
+    p32 = state.p.astype(jnp.float32)
+    m32 = _load_rowblock(state.m, state.m_scale, src_block)
+    v32 = _load_rowblock(state.v, state.v_scale, src_block)
+    q, r = jnp.linalg.qr(m32)  # (..., m, r), (..., r, r)
+    m_new = jnp.einsum("...nr,...kr->...nk", p32, r)  # P @ Rᵀ
+    v_new = jnp.einsum(
+        "...nr,...mr,...mk->...nk", p32 * p32, v32, q * q
+    )
+    one = jnp.zeros((1,), jnp.float32)
+    leaf = _ca.ProjLeaf(p=q.astype(state_dtype), m=m_new, v=v_new,
+                        m_scale=one, v_scale=one)
+    return leaf, src_spec._replace(transpose=not src_spec.transpose)
+
+
 def _migrate_proj(state, src_spec, dst_spec, shape, dst_q, key,
                   block, src_block, state_dtype):
     from repro.core import coap_adam as _ca
     from repro.core import projector as _proj
 
+    if src_spec.transpose != dst_spec.transpose:
+        # Orientation flip first (exact, at the source rank, to fp32);
+        # the generic rank/codec path below then lands it in the target
+        # rank and storage codec like any other migration.
+        state, src_spec = _transpose_proj(
+            state, src_spec, src_block, state_dtype
+        )
+        src_block = block  # moments are fp32 now; no source codec left
     src_q = _is_quantized(state.m)
     same_codec = (src_q == dst_q) and (not src_q or src_block == block)
     p = _resize_p(state.p, dst_spec.rank, key, state_dtype)
@@ -736,11 +788,10 @@ def migrate(
             lkey = jax.random.fold_in(key, idx)
             dst_spec = info.spec
             src_kind = _leaf_kind(state)
-            reset = (
-                src_kind != dst_spec.kind
-                or (dst_spec.kind == KIND_PROJECT
-                    and src_spec.transpose != dst_spec.transpose)
-            )
+            # Only a KIND change resets: transposed canonicalization is
+            # architecture-preserving and handled exactly by
+            # _transpose_proj inside the projected path.
+            reset = src_kind != dst_spec.kind
             if reset:
                 out[idx] = _fresh_leaf_state(
                     dst_spec, info.shape, dst_q, lkey, quant_block,

@@ -37,9 +37,16 @@ from repro.train.loop import TrainLoop, TrainLoopConfig
 
 
 def _watch(args, cfg, model, data):
-    """Elastic supervisor mode (see train/elastic.py)."""
+    """Elastic supervisor mode (see train/elastic.py). With ``--process``
+    the worker is a SPAWNED process (``launch/worker.py``) the supervisor
+    can really SIGKILL, supervised purely through the heartbeat file."""
     from repro.launch.plan import parse_budget
-    from repro.train.elastic import ElasticConfig, ElasticSupervisor, Topology
+    from repro.train.elastic import (
+        ElasticConfig,
+        ElasticSupervisor,
+        ProcessSupervisor,
+        Topology,
+    )
     from repro.train.faults import FaultInjector, FaultSchedule
 
     hbm = parse_budget(args.hbm_per_device)
@@ -51,11 +58,13 @@ def _watch(args, cfg, model, data):
             Topology(args.shrink_to, hbm, from_step=args.shrink_at)
         )
     injector = None
-    if args.inject_kills or args.inject_torn or args.inject_slow:
+    if (args.inject_kills or args.inject_torn or args.inject_slow
+            or args.inject_notices):
         sched = FaultSchedule.generate(
             seed=args.fault_seed, total_steps=args.steps,
             n_kills=args.inject_kills, n_torn=args.inject_torn,
-            n_slow=args.inject_slow,
+            n_slow=args.inject_slow, n_notices=args.inject_notices,
+            notice_deadline_s=args.notice_deadline,
         )
         print(f"[watch] fault schedule: {sched}")
         injector = FaultInjector(sched, seed=args.fault_seed)
@@ -76,7 +85,28 @@ def _watch(args, cfg, model, data):
         backoff_base=args.backoff_base,
         backoff_cap=args.backoff_cap,
         seed=args.fault_seed,
+        heartbeat_interval_s=args.heartbeat_interval,
+        heartbeat_timeout_s=args.heartbeat_timeout,
+        resume_horizon_steps=args.resume_horizon,
+        fleet_dir=args.fleet_dir or None,
+        host_id=args.host_id,
     )
+
+    if args.process:
+        spec = dict(
+            arch=args.arch, smoke=bool(args.smoke),
+            optimizer=args.optimizer, lr=args.lr,
+            batch=args.batch, seq=args.seq,
+        )
+        psup = ProcessSupervisor(spec, ecfg, fault_injector=injector)
+        done = psup.run()
+        for ev in psup.events:
+            print(f"[watch] {ev}")
+        print(f"done at step {done.get('step')}; "
+              f"loss={done.get('loss'):.4f}; "
+              f"ce_floor={data.ce_floor():.4f}")
+        return
+
     sup = ElasticSupervisor(
         model,
         lambda step, host: data.batch(step, args.batch, args.seq, host),
@@ -127,7 +157,30 @@ def main():
                     help="[watch] seeded torn checkpoint writes")
     ap.add_argument("--inject-slow", type=int, default=0,
                     help="[watch] seeded straggler steps")
+    ap.add_argument("--inject-notices", type=int, default=0,
+                    help="[watch] seeded preemption NOTICES (drain before "
+                         "the kill; requires --process or notice polling)")
+    ap.add_argument("--notice-deadline", type=float, default=5.0,
+                    help="[watch] seconds of warning a notice gives")
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--process", action="store_true",
+                    help="[watch] out-of-process workers: spawn "
+                         "launch/worker.py per attempt, supervise via the "
+                         "heartbeat file, SIGKILL for real")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.0,
+                    help="[watch] worker-side heartbeat refresher period "
+                         "(0 = beat only at step boundaries)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=300.0,
+                    help="[watch] heartbeat age after which the worker "
+                         "reads as stale")
+    ap.add_argument("--resume-horizon", type=int, default=0,
+                    help="[watch] >0: resume-latency-aware replans, "
+                         "amortizing migrate+recompile over this many steps")
+    ap.add_argument("--fleet-dir", default="",
+                    help="[watch] shared dir for multi-supervisor plan "
+                         "consensus (train/fleet.py)")
+    ap.add_argument("--host-id", default="host-0",
+                    help="[watch] this supervisor's fleet member id")
     ap.add_argument("--max-crashes", type=int, default=10,
                     help="[watch] crash budget: N crashes per window")
     ap.add_argument("--crash-window", type=float, default=600.0,

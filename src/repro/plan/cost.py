@@ -47,6 +47,15 @@ _BENCH_DEFAULTS = {
     # BENCH_conv.json: per-step launches per conv leaf vs per bucket
     # (recorded for the report; launch overhead itself is not modeled).
     "conv_launch_ratio": 9.0,
+    # BENCH_elastic.json: cold resume-latency split (restore / migrate /
+    # recompile seconds) and the bucket count of the measured scenario —
+    # what a replanned attempt pays per CHANGED bucket before its first
+    # step. Feeds the solver's resume-latency-aware mode
+    # (``solve(prev_plan=..., resume_horizon_steps=...)``).
+    "resume_restore_s": 0.0971,
+    "resume_migrate_s": 1.8712,
+    "resume_recompile_s": 16.3881,
+    "resume_n_buckets": 8.0,
 }
 
 
@@ -56,7 +65,19 @@ class Calibration:
     state_copy_factor: float = _BENCH_DEFAULTS["state_copy_factor"]
     q8_unfused_ratio: float = _BENCH_DEFAULTS["q8_unfused_ratio"]
     conv_launch_ratio: float = _BENCH_DEFAULTS["conv_launch_ratio"]
+    resume_restore_s: float = _BENCH_DEFAULTS["resume_restore_s"]
+    resume_migrate_s: float = _BENCH_DEFAULTS["resume_migrate_s"]
+    resume_recompile_s: float = _BENCH_DEFAULTS["resume_recompile_s"]
+    resume_n_buckets: float = _BENCH_DEFAULTS["resume_n_buckets"]
     sources: Tuple[Tuple[str, str], ...] = ()  # (ratio, file) actually loaded
+
+    def resume_penalty_s_per_bucket(self) -> float:
+        """Seconds of resume latency attributable to ONE bucket whose
+        layout changed: its share of migrate + recompile (restore is paid
+        regardless of plan churn, so it is excluded)."""
+        return (self.resume_migrate_s + self.resume_recompile_s) / max(
+            1.0, self.resume_n_buckets
+        )
 
     @classmethod
     def load(cls, root: Optional[str] = None) -> "Calibration":
@@ -91,6 +112,11 @@ class Calibration:
                 d.get("conv_refresh", {}).get("launches_per_step_per_leaf", 0)
                 / max(1, d.get("conv_refresh", {})
                       .get("launches_per_step_bucketed", 1)))})
+        pull("BENCH_elastic.json", lambda d: {
+            "resume_restore_s": d.get("restore_s"),
+            "resume_migrate_s": d.get("migrate_s"),
+            "resume_recompile_s": d.get("recompile_s"),
+            "resume_n_buckets": d.get("scenario", {}).get("n_buckets")})
         return cls(sources=tuple(sources), **vals)
 
 

@@ -46,6 +46,7 @@ from repro.core.projector import (
 )
 from repro.core import stacked_state
 from repro.kernels import ref as kref
+from repro.launch.roofline import HBM_BW
 from repro.plan import bytes as pbytes
 from repro.plan import cost as pcost
 from repro.plan.artifact import (
@@ -106,16 +107,45 @@ def solve(
     big_model: Optional[bool] = None,
     calib: Optional[pcost.Calibration] = None,
     vmem_budget: Optional[int] = None,
+    prev_plan: Optional[Plan] = None,
+    resume_horizon_steps: int = 0,
 ) -> Plan:
     """Plan ``params`` (a concrete or abstract pytree) under
     ``budget_bytes`` (``None`` = unconstrained: keep the quality-preferred
     fp32 codec everywhere and record the resulting resident total as the
-    budget). Returns a validated-schema :class:`Plan`."""
+    budget). Returns a validated-schema :class:`Plan`.
+
+    Resume-latency-aware mode (both knobs set): the elastic supervisor is
+    replanning an IN-FLIGHT run that previously trained under
+    ``prev_plan`` and expects to run ~``resume_horizon_steps`` more steps.
+    Every bucket whose layout departs from ``prev_plan`` costs real
+    wall-clock at resume (its share of the measured migrate + recompile
+    split, ``BENCH_elastic.json`` via :class:`cost.Calibration`), so that
+    one-time cost is amortized over the horizon and charged per step:
+    rank candidates matching the previous spec win ties, and the quantize
+    knapsack flips previously-int8 buckets first (their flip is free —
+    the state is already in the int8 codec) before churning fp32 buckets.
+    A long horizon amortizes the penalty to ~nothing (re-layout freely);
+    a short one makes the solver conservative. With ``prev_plan=None`` or
+    ``resume_horizon_steps=0`` the output is bit-identical to the
+    history-free solve."""
     if quantize not in ("auto", "force", "off"):
         raise ValueError("quantize must be 'auto', 'force' or 'off'")
     calib = calib or pcost.Calibration.load()
     paths, shapes, dtypes = _flatten(params)
     state_itemsize = jnp.dtype(state_dtype).itemsize
+
+    prev_spec: Dict[str, ProjSpec] = {}
+    prev_q: Dict[str, bool] = {}
+    resume_pen_s = 0.0  # amortized seconds/step per departing bucket
+    if prev_plan is not None and resume_horizon_steps > 0:
+        for b in prev_plan.buckets:
+            for p in b.paths:
+                prev_spec[p] = b.spec
+                prev_q[p] = bool(b.quantize)
+        resume_pen_s = calib.resume_penalty_s_per_bucket() / max(
+            1, int(resume_horizon_steps)
+        )
 
     n_params = sum(pbytes._numel(s) for s in shapes)
     if big_model is None:
@@ -163,10 +193,16 @@ def solve(
             return base
         return min(
             cands,
-            key=lambda sp: cost_of(
-                base.kind, shape, sp, False,
-                jnp.dtype(dtype_of[path]).itemsize,
-            )["seconds"],
+            key=lambda sp: (
+                cost_of(
+                    base.kind, shape, sp, False,
+                    jnp.dtype(dtype_of[path]).itemsize,
+                )["seconds"]
+                # Departing from the in-flight plan's spec costs resume
+                # latency (migrate + recompile), amortized per step.
+                + (resume_pen_s
+                   if prev_spec.get(path, sp) != sp else 0.0)
+            ),
         )
 
     chosen = {p: choose_spec(p, s) for p, s in zip(paths, shapes)}
@@ -198,10 +234,21 @@ def solve(
     if quantize == "auto" and budget_bytes is not None:
         total = fixed + sum(fp32_b) + 4  # + step counter
         if total > budget_bytes:
-            order = sorted(
-                range(len(layout.buckets)),
-                key=lambda i: q8_b[i] - fp32_b[i],  # biggest saving first
-            )
+            # Flip order: biggest saving first. In resume-aware mode a
+            # flip that CHURNS the in-flight codec (the bucket was fp32
+            # under prev_plan) additionally pays the amortized resume
+            # penalty, expressed in roofline-equivalent bytes — so
+            # buckets already stored int8 flip first.
+            churn_b = resume_pen_s * HBM_BW
+
+            def flip_key(i: int) -> float:
+                saving = q8_b[i] - fp32_b[i]
+                if not churn_b:
+                    return saving
+                was_q8 = prev_q.get(layout.buckets[i].paths[0], False)
+                return saving + (0.0 if was_q8 else churn_b)
+
+            order = sorted(range(len(layout.buckets)), key=flip_key)
             for i in order:
                 if total <= budget_bytes:
                     break
@@ -306,9 +353,18 @@ def solve(
             "state_copy_factor": calib.state_copy_factor,
             "q8_unfused_ratio": calib.q8_unfused_ratio,
             "conv_launch_ratio": calib.conv_launch_ratio,
+            "resume_restore_s": calib.resume_restore_s,
+            "resume_migrate_s": calib.resume_migrate_s,
+            "resume_recompile_s": calib.resume_recompile_s,
+            "resume_n_buckets": calib.resume_n_buckets,
         },
         "calibration_sources": [list(s) for s in calib.sources],
     }
+    if resume_pen_s > 0.0:
+        cost["resume_aware"] = {
+            "resume_horizon_steps": int(resume_horizon_steps),
+            "penalty_s_per_step_per_bucket": resume_pen_s,
+        }
     return Plan(
         codec=PLAN_CODEC_V1,
         arch=arch,

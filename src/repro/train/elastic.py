@@ -39,7 +39,13 @@ actually deliver topology change — as the death of the old allocation.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import json
+import os
+import random
+import subprocess
+import sys
 import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -53,13 +59,23 @@ from repro.plan import apply as plan_apply
 from repro.plan.artifact import Plan
 from repro.plan.solver import solve_for_topology
 from repro.train import checkpoint as ckpt
+from repro.train import fleet as fleet_mod
 from repro.train.fault_tolerance import (
     CrashBudget,
+    DrainPreemption,
     Heartbeat,
+    SupervisionPolicy,
+    backoff_delay,
+    decide_supervision,
     run_with_restart,
 )
 from repro.train.loop import TrainLoop, TrainLoopConfig
 from repro.train.train_state import TrainState
+
+# Exit code a worker process uses to say "I drained cleanly on a
+# preemption notice" (vs 0 = run complete, anything else = crash).
+# 75 = EX_TEMPFAIL: try again, nothing is wrong.
+EXIT_DRAINED = 75
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +129,53 @@ class ElasticConfig:
     # Optional mesh: direct (non-migrating) restores are device_put
     # replicated onto it (distributed.sharding.replicated_specs).
     mesh: Any = None
+    # Preemption-notice file the worker polls every step (see
+    # TrainLoopConfig.notice_path): present -> checkpoint now, ack, exit
+    # as a drain. The supervisor (in- or out-of-process) owns the file's
+    # lifecycle and clears it before every attempt.
+    notice_path: Optional[str] = None
+    # >0: each attempt runs a HeartbeatRefresher daemon beating every
+    # this-many seconds, so liveness = process-liveness (restore/compile
+    # phases don't read as stale) and a SIGKILL shows up within
+    # Heartbeat.timeout. 0 (default): per-step beats only.
+    heartbeat_interval_s: float = 0.0
+    heartbeat_timeout_s: float = 300.0
+    # Wall-clock floor per training step (TrainLoopConfig.min_step_s).
+    min_step_s: float = 0.0
+    # Events journal (JSON lines): every supervisor event is also
+    # appended here, which is how an out-of-process worker's events reach
+    # its supervisor and the tests.
+    events_path: Optional[str] = None
+    # >0: replans are resume-latency-aware — the solver sees the plan the
+    # newest checkpoint was written under and amortizes per-bucket
+    # migrate+recompile cost over this many remaining steps
+    # (plan/solver.solve: prev_plan / resume_horizon_steps).
+    resume_horizon_steps: int = 0
+    # Multi-supervisor plan consensus (train/fleet.py): when fleet_dir is
+    # set, every replan goes through PlanConsensus.plan_for_epoch — one
+    # elected host solves, peers adopt the committed coap-plan/v1.
+    fleet_dir: Optional[str] = None
+    host_id: str = "host-0"
+
+
+def elastic_config_to_dict(cfg: ElasticConfig) -> Dict[str, Any]:
+    """JSON-serializable form of an ElasticConfig (the worker-spec wire
+    format). The mesh is not serializable and must be None."""
+    if cfg.mesh is not None:
+        raise ValueError("elastic_config_to_dict: mesh must be None "
+                         "(worker processes build their own)")
+    d = dataclasses.asdict(cfg)
+    d.pop("mesh")
+    return d
+
+
+def elastic_config_from_dict(d: Dict[str, Any]) -> ElasticConfig:
+    d = dict(d)
+    d["topology"] = tuple(
+        t if isinstance(t, Topology) else Topology(**t)
+        for t in d.get("topology", ())
+    )
+    return ElasticConfig(**d)
 
 
 def _map_projected_states(opt_state, fn: Callable[[ProjectedAdamState], Any]):
@@ -222,24 +285,88 @@ class ElasticSupervisor:
         self._abstract_params = jax.eval_shape(
             lambda: self.model.init(self._init_key)
         )
-        self._plans: Dict[Tuple[int, int], Plan] = {}
+        self._plans: Dict[Tuple, Plan] = {}
         self.events: list = []
         self.last_resume: Optional[Dict[str, Any]] = None
         self.heartbeat = (
             Heartbeat(cfg.heartbeat_path) if cfg.heartbeat_path else None
         )
+        self.consensus = None
+        if cfg.fleet_dir:
+            self.consensus = fleet_mod.PlanConsensus(
+                fleet_mod.FleetConfig(
+                    fleet_dir=cfg.fleet_dir, host_id=cfg.host_id
+                )
+            )
+
+    # -- events -------------------------------------------------------------
+    def _emit(self, event: tuple) -> None:
+        """Record an event in memory and (when events_path is set) in the
+        shared JSON-lines journal — the channel a worker process uses to
+        report resumes/migrations back across the process boundary."""
+        self.events.append(event)
+        path = self.cfg.events_path
+        if path:
+            parent = os.path.dirname(path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            with open(path, "a") as f:
+                f.write(json.dumps(
+                    {"time": time.time(), "host": self.cfg.host_id,
+                     "event": list(event)},
+                    default=str) + "\n")
 
     # -- planning -----------------------------------------------------------
+    def _prev_plan(self) -> Optional[Plan]:
+        """The plan the newest decodable checkpoint was written under —
+        what an in-flight replan should be measured against."""
+        for step in reversed(ckpt.steps(self.cfg.ckpt_dir)):
+            try:
+                meta = ckpt.read_meta(self.cfg.ckpt_dir, step) or {}
+                if "plan" in meta:
+                    return Plan.from_dict(meta["plan"])
+            except Exception:  # noqa: BLE001 — unreadable meta: keep walking
+                continue
+        return None
+
     def plan_for(self, topo: Topology) -> Plan:
-        """The (cached, deterministic) plan for a topology."""
-        key = (topo.n_devices, topo.hbm_per_device)
+        """The (cached, deterministic) plan for a topology.
+
+        With ``resume_horizon_steps`` set, the solve is resume-latency-
+        aware against the newest checkpoint's plan. With ``fleet_dir``
+        set, the solve goes through fleet consensus: one elected host
+        solves and publishes, everyone (this host included) trains under
+        the committed artifact.
+        """
+        cfg = self.cfg
+        kw = dict(cfg.solve_kw)
+        prev_digest = None
+        if cfg.resume_horizon_steps > 0:
+            prev = self._prev_plan()
+            if prev is not None:
+                kw["prev_plan"] = prev
+                kw["resume_horizon_steps"] = cfg.resume_horizon_steps
+                prev_digest = fleet_mod.plan_digest(prev.to_dict())
+        key = (topo.n_devices, topo.hbm_per_device, prev_digest)
         if key not in self._plans:
-            self._plans[key] = solve_for_topology(
+            solve = lambda: solve_for_topology(  # noqa: E731
                 self._abstract_params,
                 topo.n_devices,
                 topo.hbm_per_device,
-                **self.cfg.solve_kw,
+                **kw,
             )
+            if self.consensus is not None:
+                epoch = (
+                    f"{topo.from_step}:"
+                    f"{topo.n_devices}x{topo.hbm_per_device}"
+                )
+                plan_dict, role = self.consensus.plan_for_epoch(
+                    epoch, lambda: solve().to_dict()
+                )
+                self._emit((f"plan_{role}", epoch))
+                self._plans[key] = Plan.from_dict(plan_dict)
+            else:
+                self._plans[key] = solve()
         return self._plans[key]
 
     def current_topology(self) -> Topology:
@@ -265,10 +392,25 @@ class ElasticSupervisor:
         cfg = self.cfg
         for step in reversed(ckpt.steps(cfg.ckpt_dir)):
             try:
-                meta = ckpt.read_meta(cfg.ckpt_dir, step) or {}
-                src_plan = (
-                    Plan.from_dict(meta["plan"]) if "plan" in meta else None
-                )
+                try:
+                    meta = ckpt.read_meta(cfg.ckpt_dir, step) or {}
+                except (OSError, ValueError) as e:
+                    # Unreadable manifest: same treatment as a torn
+                    # checkpoint — skip to the next older one.
+                    self._emit(("bad_plan_meta", step, str(e)))
+                    continue
+                src_plan = None
+                if "plan" in meta:
+                    try:
+                        src_plan = Plan.from_dict(meta["plan"])
+                    except (KeyError, TypeError, ValueError) as e:
+                        # Undecodable or unknown-version plan artifact
+                        # (PlanVersionError is a ValueError): the arrays
+                        # may be fine, but without the plan that wrote
+                        # them we cannot rebuild their layout — treat
+                        # like a torn checkpoint and fall back.
+                        self._emit(("bad_plan_meta", step, str(e)))
+                        continue
                 same = (
                     src_plan is not None
                     and src_plan.to_dict() == dst_plan.to_dict()
@@ -306,58 +448,82 @@ class ElasticSupervisor:
                     opt = jax.tree_util.tree_map(jnp.asarray, opt)
                     state = state._replace(opt_state=opt)
                     timings["migrate_s"] = time.perf_counter() - t1
-                    self.events.append(("migrate", step))
+                    self._emit(("migrate", step))
                 return state, step, timings
             except ckpt.TornCheckpointError as e:
                 # Torn/corrupt checkpoint: fall back to the next older one.
-                self.events.append(("torn_checkpoint", step, str(e)))
+                self._emit(("torn_checkpoint", step, str(e)))
                 continue
         return None, None, timings
 
     # -- attempts -----------------------------------------------------------
-    def _attempt(self, attempt: int) -> TrainState:
+    def run_attempt(self, attempt: int) -> TrainState:
+        """ONE worker attempt: replan for the current topology, restore/
+        migrate the newest good checkpoint, train to completion (or until
+        a fault / preemption notice ends the attempt). This is exactly
+        what an out-of-process worker executes (``launch/worker.py``);
+        :meth:`run` drives it in-process under the restart policy."""
         cfg = self.cfg
-        topo = self.current_topology()
-        plan = self.plan_for(topo)
-        tx = self._tx_for(plan)
-        state, step, timings = self.restore_into_plan(plan, tx)
-        self.last_resume = {
-            "attempt": attempt,
-            "resume_step": step,
-            "n_devices": topo.n_devices,
-            "hbm_per_device": topo.hbm_per_device,
-            **timings,
-        }
-        self.events.append(
-            ("resume", attempt, step, topo.n_devices)
-        )
-        loop_cfg = TrainLoopConfig(
-            total_steps=cfg.total_steps,
-            ckpt_dir=cfg.ckpt_dir,
-            ckpt_every=cfg.ckpt_every,
-            ckpt_keep=cfg.ckpt_keep,
-            log_every=cfg.log_every,
-            metrics_path=cfg.metrics_path,
-            heartbeat_path=cfg.heartbeat_path,
-            grad_accum=cfg.grad_accum,
-            fault_injector=self.fault_injector,
-            # The plan rides in every checkpoint manifest, atomically —
-            # the NEXT resume reads it back to rebuild this exact layout.
-            ckpt_meta={"plan": plan.to_dict()},
-        )
-        loop = TrainLoop(
-            self.model, tx, self.batch_fn, loop_cfg,
-            init_key=self._init_key, initial_state=state,
-        )
-        return loop.run()
+        # A notice acted on by the PREVIOUS attempt is consumed here; a
+        # live notice always arrives after the attempt is underway.
+        if cfg.notice_path and os.path.exists(cfg.notice_path):
+            os.remove(cfg.notice_path)
+        refresher = contextlib.nullcontext()
+        if cfg.heartbeat_path and cfg.heartbeat_interval_s > 0:
+            refresher = Heartbeat(
+                cfg.heartbeat_path, timeout=cfg.heartbeat_timeout_s
+            ).auto(cfg.heartbeat_interval_s)
+        with refresher:
+            topo = self.current_topology()
+            plan = self.plan_for(topo)
+            tx = self._tx_for(plan)
+            state, step, timings = self.restore_into_plan(plan, tx)
+            self.last_resume = {
+                "attempt": attempt,
+                "resume_step": step,
+                "n_devices": topo.n_devices,
+                "hbm_per_device": topo.hbm_per_device,
+                **timings,
+            }
+            self._emit(("resume", attempt, step, topo.n_devices))
+            loop_cfg = TrainLoopConfig(
+                total_steps=cfg.total_steps,
+                ckpt_dir=cfg.ckpt_dir,
+                ckpt_every=cfg.ckpt_every,
+                ckpt_keep=cfg.ckpt_keep,
+                log_every=cfg.log_every,
+                metrics_path=cfg.metrics_path,
+                heartbeat_path=cfg.heartbeat_path,
+                grad_accum=cfg.grad_accum,
+                fault_injector=self.fault_injector,
+                # The plan rides in every checkpoint manifest, atomically —
+                # the NEXT resume reads it back to rebuild this exact layout.
+                ckpt_meta={"plan": plan.to_dict()},
+                notice_path=cfg.notice_path,
+                min_step_s=cfg.min_step_s,
+            )
+            loop = TrainLoop(
+                self.model, tx, self.batch_fn, loop_cfg,
+                init_key=self._init_key, initial_state=state,
+            )
+            try:
+                return loop.run()
+            except DrainPreemption as e:
+                self._emit(("drain", attempt, e.step))
+                raise
+
+    # Internal alias kept for callers of the pre-process-model name.
+    _attempt = run_attempt
 
     def run(self) -> TrainState:
         """Supervise to completion (or until the crash budget exhausts —
-        then the last exception propagates)."""
+        then the last exception propagates). Drains (preemption notices
+        the worker honored) relaunch immediately without charging the
+        crash budget."""
         cfg = self.cfg
         return run_with_restart(
-            self._attempt,
-            on_restart=lambda i, e: self.events.append(
+            self.run_attempt,
+            on_restart=lambda i, e: self._emit(
                 ("crash", i, type(e).__name__, str(e))
             ),
             crash_budget=CrashBudget(
@@ -369,4 +535,277 @@ class ElasticSupervisor:
             backoff_jitter=cfg.backoff_jitter,
             sleep_fn=self.sleep_fn,
             seed=cfg.seed,
+            drain_types=(DrainPreemption,),
         )
+
+
+# ---------------------------------------------------------------------------
+# Process-isolated supervision: the exec worker model.
+# ---------------------------------------------------------------------------
+
+
+def _read_json_file(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def read_events(path: str) -> list:
+    """The events journal (JSON lines) as a list of event tuples — the
+    cross-process view of ``ElasticSupervisor.events``."""
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(tuple(json.loads(line)["event"]))
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue
+    except FileNotFoundError:
+        pass
+    return out
+
+
+@dataclasses.dataclass
+class ProcessSupervisorConfig:
+    """Knobs of the out-of-process watch loop (the in-process restart
+    policy — crash budget, backoff — still comes from ElasticConfig)."""
+
+    poll_interval_s: float = 0.1
+    policy: SupervisionPolicy = SupervisionPolicy()
+    # Deadline attached to supervisor-initiated drains (straggler beats):
+    # the worker has this long to checkpoint before the backing SIGKILL.
+    drain_deadline_s: float = 10.0
+    # Test hook: replaces the `python -m repro.launch.worker --spec ...`
+    # command line (the file protocol stays the same).
+    worker_cmd: Optional[Sequence[str]] = None
+    spawn_env: Optional[Dict[str, str]] = None
+
+
+class ProcessSupervisor:
+    """The exec worker model: every attempt is a SPAWNED PROCESS the
+    supervisor can really ``SIGKILL``, supervised purely through files —
+
+      * the **heartbeat** file is the only liveness signal: ``"missing"``
+        past the start grace or ``"stale"`` past the stale grace (see
+        :func:`fault_tolerance.decide_supervision`) ⇒ SIGKILL + relaunch.
+        The supervisor never interprets the worker's exit status as a
+        death signal — a real preemption gives it no such courtesy;
+      * the **notice** file delivers preemption warnings (injected via
+        ``FaultSchedule.notice_at`` or issued by the supervisor itself on
+        straggler evidence); a worker that acks and exits ``EXIT_DRAINED``
+        before the deadline is relaunched immediately, crash-budget
+        untouched, and resumes with zero lost steps;
+      * ``DONE.json`` is the completion marker (final step + loss);
+      * ``events.jsonl`` journals both sides' events.
+
+    The worker command is ``python -m repro.launch.worker --spec
+    worker_spec.json`` — the spec (model/data recipe + the serialized
+    ElasticConfig) is written into the checkpoint directory, which is the
+    one piece of shared state a preemptible fleet already has.
+    """
+
+    def __init__(
+        self,
+        spec: Dict[str, Any],
+        cfg: ElasticConfig,
+        pcfg: Optional[ProcessSupervisorConfig] = None,
+        fault_injector=None,
+    ):
+        self.spec = dict(spec)
+        self.cfg = cfg
+        self.pcfg = pcfg if pcfg is not None else ProcessSupervisorConfig()
+        self.fault_injector = fault_injector
+        self.events: list = []
+        d = cfg.ckpt_dir
+        os.makedirs(d, exist_ok=True)
+        if not cfg.heartbeat_path:
+            cfg.heartbeat_path = os.path.join(d, "heartbeat.json")
+        if not cfg.notice_path:
+            cfg.notice_path = os.path.join(d, "notice.json")
+        if not cfg.events_path:
+            cfg.events_path = os.path.join(d, "events.jsonl")
+        self.done_path = os.path.join(d, "DONE.json")
+        self.spec_path = os.path.join(d, "worker_spec.json")
+        self.heartbeat = Heartbeat(
+            cfg.heartbeat_path, timeout=cfg.heartbeat_timeout_s
+        )
+
+    # -- plumbing -----------------------------------------------------------
+    def _emit(self, event: tuple) -> None:
+        self.events.append(event)
+        path = self.cfg.events_path
+        if path:
+            with open(path, "a") as f:
+                f.write(json.dumps(
+                    {"time": time.time(), "host": "supervisor",
+                     "event": list(event)},
+                    default=str) + "\n")
+
+    def _write_notice(self, deadline: float) -> None:
+        path = self.cfg.notice_path
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"deadline": deadline}, f)
+        os.replace(tmp, path)
+
+    def _clear_attempt_files(self) -> None:
+        """Consume the previous attempt's liveness/notice state so the
+        fresh worker boots into 'missing'-under-grace, not 'stale'."""
+        for p in (self.cfg.heartbeat_path, self.cfg.notice_path,
+                  self.cfg.notice_path + ".ack", self.done_path):
+            if p and os.path.exists(p):
+                os.remove(p)
+
+    def _spawn(self, attempt: int) -> subprocess.Popen:
+        pcfg = self.pcfg
+        if pcfg.worker_cmd:
+            cmd = list(pcfg.worker_cmd)
+        else:
+            cmd = [sys.executable, "-m", "repro.launch.worker",
+                   "--spec", self.spec_path]
+        env = dict(os.environ)
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        pp = env.get("PYTHONPATH", "")
+        if src_root not in pp.split(os.pathsep):
+            env["PYTHONPATH"] = (
+                src_root + (os.pathsep + pp if pp else "")
+            )
+        env["REPRO_WORKER_ATTEMPT"] = str(attempt)
+        if pcfg.spawn_env:
+            env.update(pcfg.spawn_env)
+        return subprocess.Popen(cmd, env=env)
+
+    def _reap(self, proc: subprocess.Popen) -> Optional[int]:
+        try:
+            return proc.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            return proc.wait()
+
+    def _ack(self) -> Dict:
+        return _read_json_file(self.cfg.notice_path + ".ack") or {}
+
+    # -- the watch loop -----------------------------------------------------
+    def _watch(self, proc: subprocess.Popen, attempt: int):
+        """Poll until this attempt resolves. Returns ``(outcome, info)``
+        with outcome ``'done' | 'drained' | 'crash'``. Death is declared
+        ONLY on heartbeat evidence (decide_supervision); exit codes are
+        read solely for the cooperative done/drain protocol."""
+        cfg, pcfg = self.cfg, self.pcfg
+        hb = self.heartbeat
+        spawn_t = time.time()
+        kill_deadline = None
+        drain_sent = False
+        inj = self.fault_injector
+        while True:
+            if os.path.exists(self.done_path):
+                self._reap(proc)
+                return "done", (_read_json_file(self.done_path) or {})
+            rc = proc.poll()
+            if rc == EXIT_DRAINED:
+                return "drained", self._ack()
+
+            now = time.time()
+            payload = hb.read() or {}
+            step = int(payload.get("step", -1) or -1)
+
+            # Injected process-level faults keyed on OBSERVED progress
+            # (the supervisor only knows what the heartbeat tells it).
+            if inj is not None and step >= 0 and rc is None:
+                if kill_deadline is None and hasattr(inj, "due_notice"):
+                    d = inj.due_notice(step)
+                    if d is not None:
+                        self._write_notice(now + d)
+                        kill_deadline = now + d
+                        self._emit(("notice", attempt, step, d))
+                if hasattr(inj, "due_kill") and inj.due_kill(step):
+                    self._emit(("sigkill", attempt, step))
+                    proc.kill()
+            if kill_deadline is not None and now >= kill_deadline:
+                if proc.poll() is None:
+                    self._emit(("deadline_kill", attempt, step))
+                    proc.kill()
+                kill_deadline = None
+
+            status = hb.status()
+            stale_for = 0.0
+            if status == "stale" and payload:
+                stale_for = (
+                    now - float(payload.get("time", now))
+                    - cfg.heartbeat_timeout_s
+                )
+            decision = decide_supervision(
+                status,
+                missing_for_s=now - spawn_t,
+                stale_for_s=stale_for,
+                straggler_flagged=int(
+                    payload.get("straggler_flagged", 0) or 0
+                ),
+                policy=pcfg.policy,
+            )
+            if decision == "kill":
+                proc.kill()
+                rc = self._reap(proc)
+                # The heartbeat verdict may have raced a clean handoff.
+                if os.path.exists(self.done_path):
+                    return "done", (_read_json_file(self.done_path) or {})
+                if rc == EXIT_DRAINED:
+                    return "drained", self._ack()
+                return "crash", {"heartbeat": status, "step": step}
+            if decision == "drain" and not drain_sent:
+                drain_sent = True
+                self._write_notice(now + pcfg.drain_deadline_s)
+                kill_deadline = now + pcfg.drain_deadline_s
+                self._emit(("drain_notice", attempt, step))
+            time.sleep(pcfg.poll_interval_s)
+
+    def run(self) -> Dict:
+        """Supervise spawned workers to completion; returns the DONE
+        payload (final step + loss). Crashes are governed by the same
+        sliding crash budget + jittered backoff as the in-process path;
+        drains relaunch immediately."""
+        cfg = self.cfg
+        spec = dict(self.spec)
+        spec["elastic"] = elastic_config_to_dict(cfg)
+        tmp = self.spec_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(spec, f, indent=1)
+        os.replace(tmp, self.spec_path)
+
+        budget = CrashBudget(
+            max_crashes=cfg.max_crashes, window_seconds=cfg.crash_window_s
+        )
+        rng = random.Random(cfg.seed)
+        attempt = 0
+        crashes = 0
+        while True:
+            self._clear_attempt_files()
+            proc = self._spawn(attempt)
+            self._emit(("spawn", attempt, proc.pid))
+            outcome, info = self._watch(proc, attempt)
+            self._emit((outcome, attempt, info))
+            if outcome == "done":
+                return info
+            attempt += 1
+            if outcome == "crash":
+                crashes += 1
+                budget.record()
+                if budget.exhausted():
+                    raise RuntimeError(
+                        f"worker crash budget exhausted ({crashes} crashes "
+                        f"within {cfg.crash_window_s}s): {info}"
+                    )
+                delay = backoff_delay(
+                    crashes, cfg.backoff_base, cfg.backoff_cap,
+                    cfg.backoff_jitter, rng,
+                )
+                if delay > 0:
+                    time.sleep(delay)
+            # 'drained' relaunches immediately: planned handoff.

@@ -15,7 +15,13 @@ replan→migrate→resume control loop (driven by ``launch/train.py --watch``):
     of crashes means the job itself is broken.
   * :func:`run_with_restart` — the restart driver: exponential backoff
     with deterministic jitter between attempts, governed by either a
-    lifetime ``max_restarts`` cap (legacy) or a :class:`CrashBudget`.
+    lifetime ``max_restarts`` cap (legacy) or a :class:`CrashBudget`;
+    :class:`DrainPreemption` exceptions restart immediately without
+    charging the budget (a drain is a planned handoff, not a crash).
+  * :class:`SupervisionPolicy` / :func:`decide_supervision` — the
+    process supervisor's escalation ladder ("missing" → start grace →
+    kill; "stale" → stale grace → kill; straggler beats → drain) as a
+    pure, unit-testable decision function.
 
 On a real multi-host pod each host runs these locally; the supervisor
 kills and relaunches wedged jobs, and checkpoint/restore + restart-exact
@@ -29,8 +35,22 @@ import dataclasses
 import json
 import os
 import random
+import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class DrainPreemption(Exception):
+    """A worker attempt stopped *cleanly* on a preemption notice: it
+    checkpointed at ``step`` and exited before the kill deadline. The
+    restart driver treats this as a planned handoff, not a crash — no
+    crash-budget charge, no backoff — and the next attempt resumes from
+    exactly ``step`` (zero lost steps)."""
+
+    def __init__(self, step: int, deadline: Optional[float] = None):
+        super().__init__(f"drained at step {step}")
+        self.step = int(step)
+        self.deadline = deadline
 
 
 @dataclasses.dataclass
@@ -48,14 +68,48 @@ class Heartbeat:
     path: str
     timeout: float = 300.0
 
-    def beat(self, step: int):
+    def beat(self, step: int, extra: Optional[Dict] = None):
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        payload = {"step": step, "time": time.time()}
+        if extra:
+            payload.update(extra)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+    def read(self) -> Optional[Dict]:
+        """The full last-beat payload (step, time, any extras), or None."""
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def touch(self) -> None:
+        """Refresh the beat *time* without claiming step progress: re-write
+        the last payload with a fresh timestamp. Used by the worker's
+        auto-beat thread so liveness is process-liveness (a SIGKILL stops
+        the refresher instantly) while ``step`` still tracks real
+        progress from the training loop's own beats."""
+        payload = self.read() or {"step": 0}
+        payload["time"] = time.time()
         parent = os.path.dirname(self.path)
         if parent:
             os.makedirs(parent, exist_ok=True)
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "time": time.time()}, f)
+            json.dump(payload, f)
         os.replace(tmp, self.path)
+
+    def auto(self, interval: float) -> "HeartbeatRefresher":
+        """A daemon-thread refresher calling :meth:`touch` every
+        ``interval`` seconds. Use as a context manager around a worker
+        attempt so long non-stepping phases (restore, migrate, jit
+        compile) do not read as ``"stale"`` to the supervisor."""
+        return HeartbeatRefresher(self, interval)
 
     def status(self) -> str:
         """'alive' | 'stale' | 'missing'."""
@@ -81,6 +135,40 @@ class Heartbeat:
 
     def is_alive(self) -> bool:
         return self.status() == "alive"
+
+
+class HeartbeatRefresher:
+    """Context manager: beats a :class:`Heartbeat` from a daemon thread.
+
+    Liveness then means "the process is alive", decoupled from step
+    cadence — exactly what a process supervisor should key kills on. A
+    SIGKILL takes the thread with the process, so the file goes stale
+    within ``timeout`` regardless of what the worker was doing.
+    """
+
+    def __init__(self, heartbeat: Heartbeat, interval: float):
+        self.heartbeat = heartbeat
+        self.interval = max(float(interval), 0.01)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def __enter__(self) -> "HeartbeatRefresher":
+        self.heartbeat.touch()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.heartbeat.touch()
+            except OSError:
+                pass  # transient fs trouble; next tick retries
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
 
 
 @dataclasses.dataclass
@@ -159,6 +247,61 @@ class CrashBudget:
         self._times[:] = [t for t in self._times if t >= cutoff]
 
 
+@dataclasses.dataclass(frozen=True)
+class SupervisionPolicy:
+    """How a process supervisor escalates on heartbeat evidence.
+
+    * ``"missing"`` heartbeat — the worker never produced a beat this
+      attempt. Within ``start_grace_s`` of the spawn that is normal
+      (interpreter boot, restore, first-step compile all happen before
+      the first beat unless the worker runs a :class:`HeartbeatRefresher`);
+      past it, the worker is presumed dead-on-arrival → kill + restart.
+    * ``"stale"`` heartbeat — the worker beat and then went silent.
+      A short ``stale_grace_s`` absorbs fs jitter; past it → kill +
+      restart. (Kill is issued even though the process is probably
+      already dead — SIGKILL on a corpse is a no-op and guarantees the
+      slot is really free before relaunch.)
+    * straggler drain — when the worker's own beats report
+      ``straggler_flagged >= straggler_drain_after`` flagged slow steps,
+      the supervisor *drains* (notice + checkpoint + clean handoff)
+      rather than killing: the host is sick, not the job. ``0`` disables.
+    """
+
+    start_grace_s: float = 180.0
+    stale_grace_s: float = 2.0
+    straggler_drain_after: int = 0
+
+
+def decide_supervision(
+    status: str,
+    *,
+    missing_for_s: float = 0.0,
+    stale_for_s: float = 0.0,
+    straggler_flagged: int = 0,
+    policy: SupervisionPolicy = SupervisionPolicy(),
+) -> str:
+    """The supervisor's per-poll decision, as a pure function so the
+    escalation ladder is unit-testable without processes:
+    ``'ok' | 'wait' | 'kill' | 'drain'``.
+
+    ``missing_for_s`` is seconds since the attempt spawned (only
+    meaningful for ``"missing"``); ``stale_for_s`` is seconds past the
+    heartbeat timeout (only meaningful for ``"stale"``).
+    """
+    if status == "alive":
+        if (
+            policy.straggler_drain_after > 0
+            and straggler_flagged >= policy.straggler_drain_after
+        ):
+            return "drain"
+        return "ok"
+    if status == "missing":
+        return "kill" if missing_for_s > policy.start_grace_s else "wait"
+    if status == "stale":
+        return "kill" if stale_for_s > policy.stale_grace_s else "wait"
+    raise ValueError(f"unknown heartbeat status {status!r}")
+
+
 def backoff_delay(
     attempt: int,
     base: float,
@@ -188,6 +331,8 @@ def run_with_restart(
     backoff_jitter: float = 0.1,
     sleep_fn: Callable[[float], None] = time.sleep,
     seed: int = 0,
+    drain_types: Tuple[type, ...] = (),
+    on_drain: Optional[Callable[[int, Exception], None]] = None,
 ):
     """Crash-restart driver: calls make_and_run(attempt); on exception,
     retries (the callee restores from the newest checkpoint).
@@ -199,6 +344,12 @@ def run_with_restart(
     the driver sleeps ``backoff_delay`` (exponential with seeded jitter;
     ``backoff_base=0`` disables sleeping — the default, and what unit
     tests use). ``sleep_fn`` is injectable for tests/supervisors.
+
+    Exceptions matching ``drain_types`` (e.g. :class:`DrainPreemption`)
+    are planned handoffs, not crashes: the next attempt launches
+    immediately — no crash-budget charge, no backoff — after ``on_drain``
+    is notified. A drained worker checkpointed at its exact stop step, so
+    the relaunch resumes with zero lost steps.
     """
     rng = random.Random(seed)
     attempt = 0
@@ -209,6 +360,10 @@ def run_with_restart(
             raise
         except Exception as e:  # noqa: BLE001 — any worker failure restarts
             attempt += 1
+            if drain_types and isinstance(e, drain_types):
+                if on_drain:
+                    on_drain(attempt, e)
+                continue
             if crash_budget is not None:
                 crash_budget.record()
                 if crash_budget.exhausted():

@@ -13,7 +13,12 @@ failure modes preemptible training actually sees, reproducibly:
     still stepping (network partition / wedged filesystem), so the
     supervisor sees ``"stale"`` without a crash;
   * **slow-step stragglers** — injected step-time outliers the
-    :class:`~repro.train.fault_tolerance.StragglerDetector` must flag.
+    :class:`~repro.train.fault_tolerance.StragglerDetector` must flag;
+  * **preemption notices** — advance warning with a deadline (the cloud
+    "your VM goes away in N seconds" signal): the worker must drain
+    (checkpoint + clean exit) before the backing kill lands, so the
+    resume loses zero steps instead of rolling back to the last
+    periodic checkpoint.
 
 A :class:`FaultSchedule` is pure data (steps and windows, optionally
 generated from a seed); a :class:`FaultInjector` executes it statefully:
@@ -51,6 +56,12 @@ class FaultSchedule:
     torn_write_at: Tuple[int, ...] = ()
     heartbeat_silence: Tuple[Tuple[int, int], ...] = ()
     slow_steps: Tuple[Tuple[int, float], ...] = ()
+    # Preemption notices: (step, deadline_seconds). At ``step`` the
+    # worker/supervisor learns the kill lands ``deadline_seconds`` later —
+    # long enough to checkpoint + drain cleanly (zero lost steps), unlike
+    # ``kill_at`` which lands with no warning (reactive path: roll back to
+    # the last periodic checkpoint, losing at most ``ckpt_every`` steps).
+    notice_at: Tuple[Tuple[int, float], ...] = ()
 
     @classmethod
     def generate(
@@ -62,6 +73,8 @@ class FaultSchedule:
         n_slow: int = 0,
         slow_seconds: float = 1.0,
         min_step: int = 1,
+        n_notices: int = 0,
+        notice_deadline_s: float = 5.0,
     ) -> "FaultSchedule":
         """A seeded random schedule over ``[min_step, total_steps)`` —
         same seed, same faults, on every machine."""
@@ -72,6 +85,7 @@ class FaultSchedule:
             kill_at=pick(n_kills),
             torn_write_at=pick(n_torn),
             slow_steps=tuple((s, slow_seconds) for s in pick(n_slow)),
+            notice_at=tuple((s, notice_deadline_s) for s in pick(n_notices)),
         )
 
 
@@ -97,6 +111,7 @@ class FaultInjector:
         self.fired = set()
         self.kills = 0
         self.torn = 0
+        self.notices = 0
 
     def _once(self, kind: str, step: int) -> bool:
         key = (kind, int(step))
@@ -109,6 +124,28 @@ class FaultInjector:
         if step in self.schedule.kill_at and self._once("kill", step):
             self.kills += 1
             raise InjectedKill(f"injected preemption at step {step}")
+
+    def due_kill(self, step: int) -> bool:
+        """Non-raising variant for the PROCESS supervisor, which observes
+        worker progress through the heartbeat file and may skip step
+        values: any not-yet-fired kill scheduled at or before ``step`` is
+        due. The supervisor delivers it as a real ``SIGKILL``."""
+        for s in self.schedule.kill_at:
+            if s <= step and self._once("kill", s):
+                self.kills += 1
+                return True
+        return False
+
+    def due_notice(self, step: int) -> Optional[float]:
+        """The deadline (seconds from now) of a preemption notice due at
+        or before ``step``, one-shot — or None. In-process, ``TrainLoop``
+        drains on it immediately; the process supervisor writes the
+        notice file and schedules the backing SIGKILL at the deadline."""
+        for s, deadline in self.schedule.notice_at:
+            if s <= step and self._once("notice", s):
+                self.notices += 1
+                return float(deadline)
+        return None
 
     def heartbeat_silent(self, step: int) -> bool:
         return any(a <= step < b for a, b in self.schedule.heartbeat_silence)

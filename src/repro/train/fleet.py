@@ -1,0 +1,218 @@
+"""Fleet coordination: multi-supervisor consensus on the plan artifact.
+
+When a topology change hits a multi-host fleet, every host's supervisor
+wants to replan — but the fleet must train under ONE ``coap-plan/v1``
+artifact (stagger phases, bucket codecs and checkpoint layout are all
+derived from it; two hosts on different plans corrupt the run). This
+module is the agreement protocol, built on the same shared filesystem
+the checkpoint store already requires (the manifest ``meta`` channel is
+the durable end state: the adopted plan rides in every checkpoint the
+fleet writes from then on).
+
+Protocol, per replan *epoch* (an epoch names one topology change, e.g.
+``"120:4x276688"`` = from step 120, 4 devices × that many bytes):
+
+  1. **liveness** — every supervisor heartbeats a member file under
+     ``<fleet_dir>/members/``; the elected *leader* is the minimum alive
+     ``host_id`` (deterministic, no ballots needed).
+  2. **propose** — the leader runs ``solve_for_topology`` and *stages*
+     its proposal under ``<fleet_dir>/epochs/<epoch>/props/<host>.json``
+     (content-addressed: the proposal records the sha256 digest of its
+     canonical plan JSON). Peers wait for a commit; if the leader dies
+     before committing, the wait times out and the peer solves + commits
+     itself — liveness is preserved without extra rounds.
+  3. **commit** — first-wins atomic publication of
+     ``<epoch>/plan.json`` (hardlink of a fully-written temp file, so a
+     committed plan is never torn). The VALUE committed is not "my
+     proposal" but the winner of a deterministic tie-break over all
+     currently staged proposals — min by ``(digest, host_id)`` — so two
+     hosts racing to commit different proposals (e.g. divergent local
+     calibration files) converge on the SAME artifact no matter which
+     one's ``link()`` lands first: either the winner's own commit lands,
+     or the loser commits the winner's proposal for it.
+  4. **adopt** — everyone (including losers of the race) reads the
+     committed artifact back and trains under it. ``plan_for_epoch``
+     returns the role (``"published"`` vs ``"adopted"``) for telemetry.
+
+Everything is plain JSON files + POSIX atomic primitives (``os.replace``
+for stage/liveness, ``os.link`` O_EXCL-style for commit) — the same
+trust model as the checkpoint store, no extra services.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+def plan_digest(plan_dict: Dict) -> str:
+    """Content address of a plan: sha256 over canonical (sorted-key,
+    separator-normalized) JSON. Hosts that solved identical plans produce
+    identical digests regardless of dict ordering."""
+    blob = json.dumps(plan_dict, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _atomic_write_json(path: str, payload: Dict) -> None:
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+
+
+def _read_json(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def _slug(s: str) -> str:
+    return "".join(c if (c.isalnum() or c in "-_.") else "_" for c in s)
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    fleet_dir: str
+    host_id: str
+    # A member whose liveness file is older than this is not counted for
+    # leader election (its lease lapsed — likely preempted).
+    member_timeout_s: float = 30.0
+    # How long a peer waits for the leader's commit before solving and
+    # committing itself (leader-death fallback).
+    adopt_timeout_s: float = 60.0
+    poll_interval_s: float = 0.05
+
+
+class PlanConsensus:
+    """One host's handle on the fleet agreement protocol (see module
+    docstring). All methods are safe to call concurrently from multiple
+    hosts sharing ``fleet_dir``."""
+
+    def __init__(
+        self,
+        cfg: FleetConfig,
+        time_fn: Callable[[], float] = time.time,
+        sleep_fn: Callable[[float], None] = time.sleep,
+    ):
+        self.cfg = cfg
+        self.host = cfg.host_id
+        self.time_fn = time_fn
+        self.sleep_fn = sleep_fn
+        self._members = os.path.join(cfg.fleet_dir, "members")
+        os.makedirs(self._members, exist_ok=True)
+
+    # -- liveness / election -------------------------------------------------
+    def beat(self) -> None:
+        _atomic_write_json(
+            os.path.join(self._members, _slug(self.host) + ".json"),
+            {"host": self.host, "time": self.time_fn()},
+        )
+
+    def alive_hosts(self) -> List[str]:
+        cutoff = self.time_fn() - self.cfg.member_timeout_s
+        out = []
+        for fname in os.listdir(self._members):
+            if not fname.endswith(".json"):
+                continue
+            rec = _read_json(os.path.join(self._members, fname))
+            if rec and float(rec.get("time", 0.0)) >= cutoff:
+                out.append(str(rec["host"]))
+        return sorted(out)
+
+    def leader(self) -> str:
+        """Deterministic election: the minimum alive host_id. With no
+        alive peers visible (fresh dir, clock skew) every host considers
+        itself leader — the commit tie-break keeps that safe."""
+        alive = self.alive_hosts()
+        return alive[0] if alive else self.host
+
+    # -- proposals -----------------------------------------------------------
+    def _edir(self, epoch: str) -> str:
+        d = os.path.join(self.cfg.fleet_dir, "epochs", _slug(epoch))
+        os.makedirs(os.path.join(d, "props"), exist_ok=True)
+        return d
+
+    def stage(self, epoch: str, plan_dict: Dict) -> str:
+        """Stage this host's proposal for ``epoch``; returns its digest."""
+        digest = plan_digest(plan_dict)
+        _atomic_write_json(
+            os.path.join(self._edir(epoch), "props",
+                         _slug(self.host) + ".json"),
+            {"host": self.host, "digest": digest, "plan": plan_dict},
+        )
+        return digest
+
+    def staged(self, epoch: str) -> List[Dict]:
+        pdir = os.path.join(self._edir(epoch), "props")
+        out = []
+        for fname in sorted(os.listdir(pdir)):
+            if not fname.endswith(".json"):
+                continue
+            rec = _read_json(os.path.join(pdir, fname))
+            if rec and "plan" in rec and "digest" in rec:
+                out.append(rec)
+        return out
+
+    def committed(self, epoch: str) -> Optional[Dict]:
+        """The committed record ({host, digest, plan}) for ``epoch``, or
+        None. Commits are hardlinked from fully-written temp files, so a
+        visible commit is never torn."""
+        return _read_json(os.path.join(self._edir(epoch), "plan.json"))
+
+    def commit(self, epoch: str) -> Dict:
+        """Publish a plan for ``epoch``: deterministic tie-break over the
+        currently staged proposals — min by ``(digest, host_id)`` — then
+        first-wins atomic create. Requires at least one staged proposal
+        (stage your own first). Returns the record that actually won."""
+        props = self.staged(epoch)
+        if not props:
+            raise ValueError(
+                f"commit({epoch!r}): no staged proposals — stage one first"
+            )
+        winner = min(props, key=lambda p: (p["digest"], p["host"]))
+        path = os.path.join(self._edir(epoch), "plan.json")
+        tmp = f"{path}.{_slug(self.host)}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(winner, f)
+        try:
+            os.link(tmp, path)  # atomic first-wins; complete content
+        except FileExistsError:
+            pass  # someone else landed first — adopt theirs below
+        finally:
+            os.unlink(tmp)
+        out = self.committed(epoch)
+        assert out is not None  # link succeeded or a commit already existed
+        return out
+
+    # -- the one-call protocol ----------------------------------------------
+    def plan_for_epoch(
+        self, epoch: str, solve_fn: Callable[[], Dict]
+    ) -> Tuple[Dict, str]:
+        """Agree on the plan for ``epoch``: returns ``(plan_dict, role)``
+        with role ``"published"`` (this host's proposal won) or
+        ``"adopted"`` (another host's artifact adopted). ``solve_fn`` is
+        only invoked when this host actually needs to solve (it is the
+        leader, or the leader's commit never arrived)."""
+        self.beat()
+        c = self.committed(epoch)
+        if c is not None:
+            return c["plan"], "adopted"
+        if self.leader() != self.host:
+            deadline = self.time_fn() + self.cfg.adopt_timeout_s
+            while self.time_fn() < deadline:
+                c = self.committed(epoch)
+                if c is not None:
+                    return c["plan"], "adopted"
+                self.beat()
+                if self.leader() == self.host:
+                    break  # leader's lease lapsed — take over
+                self.sleep_fn(self.cfg.poll_interval_s)
+        self.stage(epoch, solve_fn())
+        c = self.commit(epoch)
+        role = "published" if c["host"] == self.host else "adopted"
+        return c["plan"], role

@@ -7,6 +7,7 @@ on a pod each host runs the same loop (SPMD) with its data shard.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 from typing import Any, Callable, Dict, Optional
@@ -15,7 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.train import checkpoint as ckpt
-from repro.train.fault_tolerance import Heartbeat, StragglerDetector
+from repro.train.fault_tolerance import (
+    DrainPreemption,
+    Heartbeat,
+    StragglerDetector,
+)
 from repro.train.metrics import MetricsLogger
 from repro.train.step import make_train_step
 from repro.train.train_state import TrainState
@@ -39,6 +44,18 @@ class TrainLoopConfig:
     # JSON dict saved with every checkpoint manifest (the elastic
     # supervisor stores the coap-plan/v1 artifact here).
     ckpt_meta: Optional[Dict] = None
+    # Preemption-notice channel: a JSON file ({"deadline": unix_time})
+    # whose appearance means "this allocation dies soon". The loop checks
+    # it at the top of every step and DRAINS: checkpoint at the current
+    # step, acknowledge (notice_path + ".ack"), raise DrainPreemption.
+    # The supervisor owns the file's lifecycle (writes it, clears it
+    # before relaunch).
+    notice_path: Optional[str] = None
+    # Wall-clock floor per step (seconds). Real fleets pace steps for
+    # power/thermal smoothing; here it also makes process-supervision
+    # races (notice vs kill vs heartbeat) testable on CPU where smoke
+    # steps would otherwise finish in microseconds.
+    min_step_s: float = 0.0
 
 
 class TrainLoop:
@@ -76,6 +93,40 @@ class TrainLoop:
         params = self.model.init(self._init_key)
         return TrainState.create(params, self.tx)
 
+    # -- drain ---------------------------------------------------------------
+    def _notice_deadline(self, step: int) -> Optional[float]:
+        """An active preemption notice's absolute deadline, or None. File
+        channel first (process mode), then the in-process injector."""
+        cfg = self.cfg
+        if cfg.notice_path and os.path.exists(cfg.notice_path):
+            try:
+                with open(cfg.notice_path) as f:
+                    return float(json.load(f).get("deadline", 0.0))
+            except (json.JSONDecodeError, ValueError, OSError):
+                return 0.0  # unreadable notice still means "leave now"
+        inj = cfg.fault_injector
+        if inj is not None and hasattr(inj, "due_notice"):
+            d = inj.due_notice(step)
+            if d is not None:
+                return time.time() + d
+        return None
+
+    def _drain(self, state: TrainState, step: int, deadline: float):
+        """Checkpoint at exactly ``step`` (every completed step survives),
+        acknowledge the notice, and hand control back as a planned
+        preemption. The next attempt resumes from ``step``: zero lost."""
+        cfg = self.cfg
+        if cfg.ckpt_dir:
+            ckpt.save(cfg.ckpt_dir, step, state, keep=cfg.ckpt_keep,
+                      meta=cfg.ckpt_meta)
+        if cfg.notice_path:
+            ack = cfg.notice_path + ".ack"
+            tmp = ack + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "time": time.time()}, f)
+            os.replace(tmp, ack)
+        raise DrainPreemption(step, deadline)
+
     # -- main ----------------------------------------------------------------
     def run(self) -> TrainState:
         cfg = self.cfg
@@ -84,6 +135,9 @@ class TrainLoop:
         ceu_total = 0.0
         inj = cfg.fault_injector
         for step in range(start, cfg.total_steps):
+            deadline = self._notice_deadline(step)
+            if deadline is not None:
+                self._drain(state, step, deadline)
             if cfg.crash_at_step is not None and step == cfg.crash_at_step:
                 raise RuntimeError(f"induced crash at step {step}")
             if inj is not None:
@@ -93,6 +147,8 @@ class TrainLoop:
             state, metrics = self._step_fn(state, batch)
             jax.block_until_ready(state.params)
             dt = time.time() - t0
+            if cfg.min_step_s > 0 and dt < cfg.min_step_s:
+                time.sleep(cfg.min_step_s - dt)
             if inj is not None:
                 dt += inj.slow_delay(step)
             slow = self.straggler.observe(dt)
@@ -100,7 +156,9 @@ class TrainLoop:
             if self.heartbeat and not (
                 inj is not None and inj.heartbeat_silent(step)
             ):
-                self.heartbeat.beat(step)
+                self.heartbeat.beat(
+                    step, extra={"straggler_flagged": self.straggler.flagged}
+                )
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
                 row = dict(metrics)
                 row["ceu_total"] = ceu_total

@@ -540,3 +540,268 @@ def test_injected_faults_fire_once():
     assert not inj.heartbeat_silent(5)
     assert inj.slow_delay(3) == 0.7
     assert inj.slow_delay(4) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Transpose-flip migration (the exact* QR transform)
+# ---------------------------------------------------------------------------
+def _flip_transpose(plan):
+    """The same plan with ``spec.transpose`` flipped on every projected
+    (non-conv, non-dense) bucket — a pure orientation change."""
+    buckets = [
+        dataclasses.replace(
+            b, spec=b.spec._replace(transpose=not b.spec.transpose)
+        ) if b.kind == "project" else b
+        for b in plan.buckets
+    ]
+    return dataclasses.replace(plan, buckets=buckets)
+
+
+def test_migrate_transpose_flip_is_exact(plans):
+    """Orientation flip (spec.transpose toggled, same kind): migration
+    TRANSFORMS the state instead of resetting it. The de-projected first
+    moment is preserved exactly (up to fp32 QR roundoff), the new P is
+    exactly orthonormal, v stays nonnegative, count is preserved, and the
+    landed bytes match the flipped target's accounting."""
+    from repro.core import projector as proj
+
+    params, p_fp32, _, _ = plans
+    p_flip = _flip_transpose(p_fp32)
+    assert any(
+        a.spec.transpose != b.spec.transpose
+        for a, b in zip(p_fp32.buckets, p_flip.buckets)
+    )
+    ocfg, _, opt = _planned_state(params, p_fp32)
+    migrated = migrate_opt_state(opt, p_fp32, p_flip, params, ocfg)
+
+    src = _by_path(find_projected_state(opt).leaves)
+    dst = _by_path(find_projected_state(migrated).leaves)
+    assert set(src) == set(dst)
+    checked = 0
+    for path, (d, dspec) in dst.items():
+        if not hasattr(d, "p"):
+            continue  # conv/dense: spec unchanged, covered elsewhere
+        s, sspec = src[path]
+        assert dspec.transpose != sspec.transpose
+        # De-projected first moment, in the weight's own orientation:
+        # from_canonical(m @ P^T). Must be reproduced exactly.
+        full = lambda leaf, spec: np.asarray(proj.from_canonical(
+            proj.backproject(jnp.asarray(leaf.m, jnp.float32),
+                             jnp.asarray(leaf.p, jnp.float32)),
+            spec,
+        ))
+        np.testing.assert_allclose(full(d, dspec), full(s, sspec),
+                                   rtol=1e-5, atol=1e-6)
+        # The flipped P is exactly orthonormal (it is a QR Q factor).
+        p_new = np.asarray(d.p, np.float64)
+        gram = np.einsum("...mr,...mk->...rk", p_new, p_new)
+        eye = np.broadcast_to(np.eye(gram.shape[-1]), gram.shape)
+        np.testing.assert_allclose(gram, eye, atol=1e-5)
+        # Variance transports nonnegatively (diagonal map of squares).
+        assert np.all(np.asarray(d.v) >= 0)
+        assert np.all(np.isfinite(np.asarray(d.v)))
+        checked += 1
+    assert checked >= 1
+    assert int(find_projected_state(migrated).count) == int(
+        find_projected_state(opt).count
+    )
+    _assert_bytes_match_target(migrated, p_flip, params)
+
+
+def test_migrate_transpose_flip_zero_moments(plans):
+    """Edge case: a fresh (zero-moment) state flips without NaNs — QR of
+    zeros yields a valid orthonormal P and exactly-zero moments."""
+    params, p_fp32, _, _ = plans
+    p_flip = _flip_transpose(p_fp32)
+    ocfg, _, opt = _planned_state(params, p_fp32, steps=0)
+    migrated = migrate_opt_state(opt, p_fp32, p_flip, params, ocfg)
+    for d, _ in _by_path(find_projected_state(migrated).leaves).values():
+        if not hasattr(d, "p"):
+            continue
+        assert np.all(np.isfinite(np.asarray(d.p)))
+        np.testing.assert_array_equal(np.asarray(d.m),
+                                      np.zeros_like(np.asarray(d.m)))
+        np.testing.assert_array_equal(np.asarray(d.v),
+                                      np.zeros_like(np.asarray(d.v)))
+    _assert_bytes_match_target(migrated, p_flip, params)
+
+
+# ---------------------------------------------------------------------------
+# Bad plan meta in a checkpoint (regression: crash -> graceful fallback)
+# ---------------------------------------------------------------------------
+def test_restore_skips_undecodable_plan_meta(smoke, tmp_path):
+    """A checkpoint whose manifest carries an undecodable or unknown-
+    version plan artifact must be SKIPPED like a torn checkpoint (with a
+    ``bad_plan_meta`` event), not crash the supervisor."""
+    import json as _json
+
+    model, batch_fn, _, per_dev = smoke
+    cfg = _ecfg(str(tmp_path), per_dev, total_steps=6)
+    ElasticSupervisor(model, batch_fn, cfg, ocfg=_ocfg()).run()
+    steps = ckpt.steps(cfg.ckpt_dir)
+    assert steps[-2:] == [4, 6]
+
+    def garble(step, mutate):
+        mpath = os.path.join(cfg.ckpt_dir, f"ckpt_{step:08d}",
+                             "manifest.json")
+        with open(mpath) as f:
+            man = _json.load(f)
+        mutate(man["meta"]["plan"])
+        with open(mpath, "w") as f:
+            _json.dump(man, f)
+
+    # Newest: unknown future plan codec. Next: structurally garbage.
+    garble(6, lambda p: p.__setitem__("codec", "coap-plan/v99"))
+    garble(4, lambda p: (p.clear(), p.__setitem__("junk", 1)))
+
+    sup = ElasticSupervisor(model, batch_fn, cfg, ocfg=_ocfg())
+    plan = sup.plan_for(sup.current_topology())
+    state, step, _ = sup.restore_into_plan(plan, sup._tx_for(plan))
+    assert step == 2  # fell back past BOTH bad-meta checkpoints
+    assert int(state.step) == 2
+    bad = [e for e in sup.events if e[0] == "bad_plan_meta"]
+    assert [e[1] for e in bad] == [6, 4]
+
+
+# ---------------------------------------------------------------------------
+# Preemption-notice drain: zero lost steps (vs reactive <= ckpt_every)
+# ---------------------------------------------------------------------------
+def test_drain_zero_lost_steps_vs_reactive_rollback(smoke, tmp_path):
+    """An injected NOTICE at step 9 drains: checkpoint lands at exactly
+    step 9 and the relaunch resumes there — zero lost steps, no crash
+    charged. A no-warning KILL at the same step rolls back to the last
+    periodic checkpoint, losing up to ckpt_every steps."""
+    model, batch_fn, _, per_dev = smoke
+
+    inj = FaultInjector(FaultSchedule(notice_at=((9, 30.0),)), seed=0)
+    sup = ElasticSupervisor(
+        model, batch_fn, _ecfg(str(tmp_path / "drain"), per_dev),
+        ocfg=_ocfg(), fault_injector=inj,
+    )
+    state = sup.run()
+    assert int(state.step) == _STEPS
+    assert inj.notices == 1
+    kinds = [e[0] for e in sup.events]
+    assert "crash" not in kinds  # a drain never charges the crash budget
+    drain = next(e for e in sup.events if e[0] == "drain")
+    assert drain[2] == 9
+    resumes = [e for e in sup.events if e[0] == "resume"]
+    assert resumes[-1][2] == 9  # zero lost steps
+
+    inj2 = FaultInjector(FaultSchedule(kill_at=(9,)), seed=0)
+    sup2 = ElasticSupervisor(
+        model, batch_fn, _ecfg(str(tmp_path / "kill"), per_dev),
+        ocfg=_ocfg(), fault_injector=inj2,
+    )
+    state2 = sup2.run()
+    assert int(state2.step) == _STEPS
+    resumes2 = [e for e in sup2.events if e[0] == "resume"]
+    lost = 9 - resumes2[-1][2]
+    assert 0 < lost <= 2  # rolled back, bounded by ckpt_every
+
+
+# ---------------------------------------------------------------------------
+# Resume-latency-aware replanning (solver knob + supervisor plumbing)
+# ---------------------------------------------------------------------------
+def test_solver_resume_aware_flips_already_int8_buckets_first():
+    """Two projected buckets; the budget forces ONE quantize flip.
+    History-free, the knapsack flips the bucket with the biggest byte
+    saving. Resume-aware with a short horizon, the bucket that was
+    ALREADY int8 under the previous plan flips instead (its churn is
+    free); a long horizon amortizes the penalty away. With the knobs off
+    the output is bit-identical to the history-free solve."""
+    key = jax.random.key(3)
+    params = {
+        "big": 0.3 * jax.random.normal(jax.random.fold_in(key, 0), (64, 32)),
+        "small": 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (48, 24)),
+    }
+    kw = dict(min_dim=8, t_update=4, lam=2, stagger_groups=2)
+    p_off = solve(params, None, quantize="off", **kw)
+    assert len(p_off.buckets) == 2
+    budget = p_off.predicted["hbm_total_bytes"] - 1  # forces one flip
+
+    def quantized_paths(plan):
+        return sorted(p for b in plan.buckets if b.quantize for p in b.paths)
+
+    base = solve(params, budget, **kw)
+    assert quantized_paths(base) == ["big"]  # biggest saving wins
+
+    # Previous plan: "small" was int8.
+    prev = dataclasses.replace(
+        p_off,
+        buckets=[
+            dataclasses.replace(b, quantize=("small" in b.paths))
+            for b in p_off.buckets
+        ],
+    )
+    aware = solve(params, budget, prev_plan=prev, resume_horizon_steps=1,
+                  **kw)
+    assert quantized_paths(aware) == ["small"]  # free flip preferred
+    assert "resume_aware" in aware.cost
+    assert aware.cost["resume_aware"]["resume_horizon_steps"] == 1
+
+    # A horizon long enough that the per-step churn charge falls below
+    # one roofline byte: the penalty is fully amortized and the solver
+    # re-layouts freely (the knapsack reverts to biggest-saving-first).
+    from repro.launch.roofline import HBM_BW
+    from repro.plan import cost as pcost
+
+    pen_s = pcost.Calibration.load().resume_penalty_s_per_bucket()
+    h_long = max(1, int(pen_s * HBM_BW))
+    long = solve(params, budget, prev_plan=prev,
+                 resume_horizon_steps=h_long, **kw)
+    assert quantized_paths(long) == ["big"]  # penalty amortized away
+
+    off = solve(params, budget, prev_plan=prev, resume_horizon_steps=0,
+                **kw)
+    assert off.to_dict() == base.to_dict()  # knobs off: bit-identical
+
+
+def test_supervisor_plans_resume_aware_against_checkpoint_plan(
+    smoke, tmp_path
+):
+    """With ``resume_horizon_steps`` set, the supervisor feeds the newest
+    checkpoint's plan into the solve (visible as the plan's
+    ``resume_aware`` cost block); with no checkpoints yet, the solve is
+    history-free."""
+    model, batch_fn, _, per_dev = smoke
+    cfg = _ecfg(str(tmp_path), per_dev, total_steps=6,
+                resume_horizon_steps=500)
+    sup = ElasticSupervisor(model, batch_fn, cfg, ocfg=_ocfg())
+    first = sup.plan_for(Topology(8, per_dev))
+    assert "resume_aware" not in first.cost  # nothing to resume from yet
+    sup.run()
+
+    sup2 = ElasticSupervisor(model, batch_fn, cfg, ocfg=_ocfg())
+    replanned = sup2.plan_for(Topology(4, per_dev, from_step=6))
+    assert "resume_aware" in replanned.cost
+    ra = replanned.cost["resume_aware"]
+    assert ra["resume_horizon_steps"] == 500
+    assert ra["penalty_s_per_step_per_bucket"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet consensus through the supervisor (two hosts, one artifact)
+# ---------------------------------------------------------------------------
+def test_two_supervisors_agree_on_one_plan_artifact(smoke, tmp_path):
+    """Two supervisors sharing a fleet_dir plan the same replan epoch:
+    exactly one publishes, the other adopts, and both train under the
+    IDENTICAL coap-plan/v1 dict."""
+    model, batch_fn, _, per_dev = smoke
+    fleet_dir = str(tmp_path / "fleet")
+    sups = [
+        ElasticSupervisor(
+            model, batch_fn,
+            _ecfg(str(tmp_path / host), per_dev, fleet_dir=fleet_dir,
+                  host_id=host),
+            ocfg=_ocfg(),
+        )
+        for host in ("host-a", "host-b")
+    ]
+    topo = Topology(4, per_dev, from_step=6)
+    plan_a = sups[0].plan_for(topo)
+    plan_b = sups[1].plan_for(topo)
+    assert plan_a.to_dict() == plan_b.to_dict()
+    roles = [e[0] for s in sups for e in s.events
+             if e[0].startswith("plan_")]
+    assert sorted(roles) == ["plan_adopted", "plan_published"]

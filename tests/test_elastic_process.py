@@ -1,0 +1,302 @@
+"""Process-isolated supervision: the exec worker model.
+
+Covers the escalation ladder (``decide_supervision``), the
+ProcessSupervisor's heartbeat-only kill/drain decisions against FAKE
+worker processes (no jax boot — fast), and ONE full end-to-end run with
+real ``launch/worker.py`` subprocesses: SIGKILL mid-run, topology shrink
+8→4, preemption-notice drain with zero lost steps, convergence to the
+in-process baseline.
+"""
+import json
+import os
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.train.elastic import (
+    EXIT_DRAINED,
+    ElasticConfig,
+    ProcessSupervisor,
+    ProcessSupervisorConfig,
+    Topology,
+    read_events,
+)
+from repro.train.fault_tolerance import SupervisionPolicy, decide_supervision
+
+
+# ---------------------------------------------------------------------------
+# The escalation ladder, as a pure function
+# ---------------------------------------------------------------------------
+def test_decide_supervision_ladder():
+    pol = SupervisionPolicy(start_grace_s=10.0, stale_grace_s=1.0,
+                            straggler_drain_after=3)
+    # missing: grace, then kill
+    assert decide_supervision("missing", missing_for_s=5.0, policy=pol) == "wait"
+    assert decide_supervision("missing", missing_for_s=11.0, policy=pol) == "kill"
+    # stale: grace, then kill
+    assert decide_supervision("stale", stale_for_s=0.5, policy=pol) == "wait"
+    assert decide_supervision("stale", stale_for_s=1.5, policy=pol) == "kill"
+    # alive: ok until enough straggler evidence, then drain
+    assert decide_supervision("alive", straggler_flagged=2, policy=pol) == "ok"
+    assert decide_supervision("alive", straggler_flagged=3, policy=pol) == "drain"
+    # straggler_drain_after=0 disables draining entirely
+    off = SupervisionPolicy(straggler_drain_after=0)
+    assert decide_supervision("alive", straggler_flagged=99, policy=off) == "ok"
+    with pytest.raises(ValueError):
+        decide_supervision("zombie")
+
+
+# ---------------------------------------------------------------------------
+# ProcessSupervisor vs fake workers (no jax — exercises the watch loop)
+# ---------------------------------------------------------------------------
+def _fake_cmd(body: str):
+    """A worker stand-in: a python -c script speaking the file protocol
+    (heartbeat / notice+ack / DONE / exit codes) without booting jax."""
+    prelude = textwrap.dedent(
+        """\
+        import json, os, sys, time
+        hb = os.environ["FAKE_HB"]
+        notice = os.environ["FAKE_NOTICE"]
+        done = os.environ["FAKE_DONE"]
+        attempt = int(os.environ.get("REPRO_WORKER_ATTEMPT", "0"))
+        def beat(step, **extra):
+            payload = {"step": step, "time": time.time()}
+            payload.update(extra)
+            with open(hb, "w") as f:
+                json.dump(payload, f)
+        """
+    )
+    return [sys.executable, "-c", prelude + textwrap.dedent(body)]
+
+
+def _psup(tmp_path, body, policy, *, heartbeat_timeout_s=0.4,
+          fault_injector=None, total_steps=12):
+    d = str(tmp_path)
+    cfg = ElasticConfig(
+        ckpt_dir=d, total_steps=total_steps,
+        topology=(Topology(8, 10**9),),
+        heartbeat_timeout_s=heartbeat_timeout_s,
+        backoff_base=0.0,
+    )
+    pcfg = ProcessSupervisorConfig(
+        poll_interval_s=0.02, policy=policy, drain_deadline_s=5.0,
+        worker_cmd=_fake_cmd(body),
+        spawn_env={
+            "FAKE_HB": os.path.join(d, "heartbeat.json"),
+            "FAKE_NOTICE": os.path.join(d, "notice.json"),
+            "FAKE_DONE": os.path.join(d, "DONE.json"),
+        },
+    )
+    return ProcessSupervisor({}, cfg, pcfg, fault_injector=fault_injector)
+
+
+def test_stale_worker_is_killed_and_relaunched(tmp_path):
+    """Attempt 0 beats, then wedges (stops beating while the process
+    lives): the supervisor declares death on the STALE heartbeat alone,
+    SIGKILLs, and relaunches; attempt 1 completes."""
+    body = """\
+        if attempt >= 1:
+            with open(done, "w") as f:
+                json.dump({"step": 12, "loss": 1.25, "attempt": attempt}, f)
+            sys.exit(0)
+        for s in range(3):
+            beat(s)
+            time.sleep(0.05)
+        time.sleep(120)  # wedged: alive but silent -> supervisor must kill
+        """
+    sup = _psup(tmp_path, body,
+                SupervisionPolicy(start_grace_s=30.0, stale_grace_s=0.2))
+    t0 = time.time()
+    done = sup.run()
+    assert done == {"step": 12, "loss": 1.25, "attempt": 1}
+    assert time.time() - t0 < 30  # killed the wedge, did not wait it out
+    kinds = [e[0] for e in sup.events]
+    assert kinds.count("spawn") == 2
+    assert "crash" in kinds and "done" in kinds
+    crash = next(e for e in sup.events if e[0] == "crash")
+    assert crash[2]["heartbeat"] == "stale"  # death declared via heartbeat
+
+
+def test_missing_heartbeat_past_grace_is_killed(tmp_path):
+    """Attempt 0 never beats at all: past start_grace_s the supervisor
+    presumes dead-on-arrival and restarts."""
+    body = """\
+        if attempt >= 1:
+            with open(done, "w") as f:
+                json.dump({"step": 5, "loss": 2.0, "attempt": attempt}, f)
+            sys.exit(0)
+        time.sleep(120)  # boots, never heartbeats
+        """
+    sup = _psup(tmp_path, body,
+                SupervisionPolicy(start_grace_s=0.3, stale_grace_s=0.2))
+    done = sup.run()
+    assert done["attempt"] == 1
+    crash = next(e for e in sup.events if e[0] == "crash")
+    assert crash[2]["heartbeat"] == "missing"
+
+
+def test_straggler_beats_trigger_drain_not_kill(tmp_path):
+    """The worker's beats carry straggler evidence: the supervisor DRAINS
+    (notice → ack → EXIT_DRAINED) instead of killing — clean handoff, no
+    crash recorded, immediate relaunch."""
+    body = """\
+        if attempt >= 1:
+            with open(done, "w") as f:
+                json.dump({"step": 7, "loss": 0.5, "attempt": attempt}, f)
+            sys.exit(0)
+        step = 0
+        while True:
+            beat(step, straggler_flagged=2)
+            if os.path.exists(notice):
+                with open(notice + ".ack", "w") as f:
+                    json.dump({"step": step, "time": time.time()}, f)
+                sys.exit(75)
+            step += 1
+            time.sleep(0.03)
+        """
+    sup = _psup(tmp_path, body,
+                SupervisionPolicy(start_grace_s=30.0, stale_grace_s=0.2,
+                                  straggler_drain_after=2))
+    done = sup.run()
+    assert done["attempt"] == 1
+    kinds = [e[0] for e in sup.events]
+    assert "drain_notice" in kinds and "drained" in kinds
+    assert "crash" not in kinds  # a drain is a handoff, not a crash
+    drained = next(e for e in sup.events if e[0] == "drained")
+    assert drained[2].get("step", -1) >= 0  # ack payload propagated
+    assert sup.events[-1][0] == "done"
+    assert 75 == EXIT_DRAINED
+
+
+def test_crash_budget_stops_a_crash_loop(tmp_path):
+    """A worker that dies instantly every attempt exhausts the sliding
+    crash budget and the supervisor gives up with a RuntimeError."""
+    body = """\
+        sys.exit(3)  # immediate crash, every attempt
+        """
+    d = str(tmp_path)
+    cfg = ElasticConfig(
+        ckpt_dir=d, total_steps=12, topology=(Topology(8, 10**9),),
+        heartbeat_timeout_s=0.4, backoff_base=0.0, max_crashes=2,
+    )
+    pcfg = ProcessSupervisorConfig(
+        poll_interval_s=0.02,
+        policy=SupervisionPolicy(start_grace_s=0.1, stale_grace_s=0.1),
+        worker_cmd=_fake_cmd(body),
+        spawn_env={"FAKE_HB": os.path.join(d, "hb.json"),
+                   "FAKE_NOTICE": os.path.join(d, "n.json"),
+                   "FAKE_DONE": os.path.join(d, "d.json")},
+    )
+    sup = ProcessSupervisor({}, cfg, pcfg)
+    with pytest.raises(RuntimeError, match="crash budget"):
+        sup.run()
+    assert [e[0] for e in sup.events].count("crash") == 3
+
+
+# ---------------------------------------------------------------------------
+# THE e2e: real worker subprocesses, real SIGKILL, shrink, drain, converge
+# ---------------------------------------------------------------------------
+def test_process_worker_sigkill_shrink_drain_converges(tmp_path):
+    """Full acceptance scenario, out of process:
+
+    * attempt 0 (8 devices) is SIGKILLed for real once its heartbeat
+      reports step >= 7 — the supervisor acts on heartbeat staleness, not
+      the exit status;
+    * attempt 1 replans on the shrunk topology (4 devices, the step-6
+      checkpoint migrates), then receives an injected preemption NOTICE
+      at step >= 9: it checkpoints at its exact current step, acks and
+      exits EXIT_DRAINED before the deadline;
+    * attempt 2 resumes from the drained checkpoint with ZERO lost steps
+      and runs to completion; final loss matches the uninterrupted
+      in-process baseline.
+    """
+    from repro.configs import get_smoke
+    from repro.core.api import OptimizerConfig
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.model import build_model
+    from repro.plan.solver import solve_for_topology
+    from repro.train.elastic import ElasticSupervisor
+    from repro.train.faults import FaultInjector, FaultSchedule
+
+    kw = dict(min_dim=16, t_update=4, lam=2, stagger_groups=2)
+    mcfg = get_smoke("tinyllama-1.1b")
+    model = build_model(mcfg)
+    params = model.abstract_params()
+    h32 = solve_for_topology(params, 1, 10**12, quantize="off",
+                             **kw).predicted["hbm_total_bytes"]
+    h8 = solve_for_topology(params, 1, 10**12, quantize="force",
+                            **kw).predicted["hbm_total_bytes"]
+    per_dev = (h32 + h8) // 2 // 4  # 8 devs fit fp32, 4 devs force int8
+
+    # In-process uninterrupted baseline (8 devices, 12 steps).
+    data = SyntheticLM(vocab=mcfg.vocab_size, order=1, noise=0.2)
+    batch_fn = lambda step, host: data.batch(step, batch=4, seq=16, host=host)
+    base_cfg = ElasticConfig(
+        ckpt_dir=str(tmp_path / "base"), total_steps=12,
+        topology=(Topology(8, per_dev),), solve_kw=kw,
+        ckpt_every=2, log_every=100, backoff_base=0.0,
+    )
+    base = ElasticSupervisor(
+        model, batch_fn, base_cfg,
+        ocfg=OptimizerConfig(name="coap-adamw", learning_rate=1e-3),
+    )
+    state_base = base.run()
+    loss_base, _ = model.loss(state_base.params, batch_fn(13, 0))
+
+    # The out-of-process run.
+    d = str(tmp_path / "proc")
+    cfg = ElasticConfig(
+        ckpt_dir=d, total_steps=12,
+        topology=(Topology(8, per_dev), Topology(4, per_dev, from_step=6)),
+        solve_kw=kw, ckpt_every=2, log_every=100, backoff_base=0.0,
+        min_step_s=0.25,           # pace steps so supervision races are real
+        heartbeat_interval_s=0.1,  # liveness = process-liveness
+        heartbeat_timeout_s=1.0,
+    )
+    inj = FaultInjector(
+        FaultSchedule(kill_at=(7,), notice_at=((9, 8.0),)), seed=0
+    )
+    pcfg = ProcessSupervisorConfig(
+        poll_interval_s=0.05,
+        policy=SupervisionPolicy(start_grace_s=300.0, stale_grace_s=0.3),
+    )
+    sup = ProcessSupervisor(
+        {"arch": "tinyllama-1.1b", "smoke": True, "optimizer": "coap-adamw",
+         "lr": 1e-3, "batch": 4, "seq": 16},
+        cfg, pcfg, fault_injector=inj,
+    )
+    done = sup.run()
+
+    assert done["step"] == 12
+    assert float(done["loss"]) == pytest.approx(float(loss_base), rel=0.15)
+
+    kinds = [e[0] for e in sup.events]
+    assert kinds.count("spawn") == 3
+    assert "sigkill" in kinds            # the injected preemption landed
+    assert "notice" in kinds             # the injected warning landed
+    assert kinds.count("crash") == 1     # SIGKILL -> heartbeat-declared crash
+    assert kinds.count("drained") == 1   # notice -> clean drain
+    crash = next(e for e in sup.events if e[0] == "crash")
+    assert crash[2]["heartbeat"] in ("stale", "missing")
+
+    # The workers' own journal: resume on 8 devices, then the migrated
+    # resume on 4, then the zero-lost-steps resume after the drain.
+    wev = read_events(cfg.events_path)
+    resumes = [e for e in wev if e[0] == "resume"]
+    assert len(resumes) == 3
+    assert resumes[0][3] == 8 and resumes[1][3] == 4 and resumes[2][3] == 4
+    # SIGKILL rolls back to a periodic checkpoint. The kill fires when the
+    # HEARTBEAT shows step >= 7, so under scheduler lag the worker may have
+    # already written the step-8 checkpoint — either periodic ckpt is a
+    # legitimate reactive-resume point (unlike the drain below, which is
+    # exact by protocol, not by timing).
+    assert resumes[1][2] in (6, 8)
+    assert any(e[0] == "migrate" for e in wev)
+    drain_ev = next(e for e in wev if e[0] == "drain")
+    drained = next(e for e in sup.events if e[0] == "drained")
+    # Zero lost steps: the post-drain resume starts EXACTLY where the
+    # drained worker stopped (ack step == drain step == resume step).
+    assert resumes[2][2] == drain_ev[2] == drained[2]["step"]
+    assert drain_ev[2] >= 9  # the notice arrived at/after its step

@@ -1,0 +1,143 @@
+"""Fleet plan consensus (train/fleet.py): liveness election, staged
+proposals, deterministic tie-break, first-wins commit — two supervisors
+racing a replan must converge on ONE identical coap-plan/v1 artifact."""
+import json
+import os
+
+from repro.train import fleet
+
+
+def _cc(tmp_path, host, **kw):
+    return fleet.PlanConsensus(
+        fleet.FleetConfig(
+            fleet_dir=str(tmp_path), host_id=host,
+            adopt_timeout_s=kw.pop("adopt_timeout_s", 0.5),
+            poll_interval_s=0.01, **kw,
+        )
+    )
+
+
+def test_plan_digest_is_order_insensitive():
+    a = {"x": 1, "y": [1, 2], "z": {"b": 2, "a": 1}}
+    b = {"z": {"a": 1, "b": 2}, "y": [1, 2], "x": 1}
+    assert fleet.plan_digest(a) == fleet.plan_digest(b)
+    assert fleet.plan_digest(a) != fleet.plan_digest({"x": 2})
+
+
+def test_leader_is_min_alive_host(tmp_path):
+    a = _cc(tmp_path, "host-a")
+    b = _cc(tmp_path, "host-b")
+    a.beat()
+    b.beat()
+    assert a.leader() == b.leader() == "host-a"
+    # host-a's lease lapses -> host-b takes over deterministically.
+    now = [1000.0]
+    d2 = str(tmp_path / "lapse")
+    mk = lambda host: fleet.PlanConsensus(  # noqa: E731
+        fleet.FleetConfig(fleet_dir=d2, host_id=host, member_timeout_s=30.0),
+        time_fn=lambda: now[0],
+    )
+    a2, b2 = mk("host-a"), mk("host-b")
+    a2.beat()
+    b2.beat()
+    assert b2.leader() == "host-a"
+    now[0] += 100.0  # a never beats again; b re-leases
+    b2.beat()
+    assert b2.alive_hosts() == ["host-b"]
+    assert b2.leader() == "host-b"
+
+
+def test_commit_tie_break_is_order_independent(tmp_path):
+    """Two hosts stage DIFFERENT proposals; whoever commits first, the
+    committed value is the tie-break winner (min by digest, host) — both
+    interleavings land the identical artifact."""
+    plan_a = {"version": "coap-plan/v1", "knob": 1}
+    plan_b = {"version": "coap-plan/v1", "knob": 2}
+    winner_digest = min(fleet.plan_digest(plan_a), fleet.plan_digest(plan_b))
+
+    committed = []
+    for order in [("a-first", True), ("b-first", False)]:
+        epoch, a_commits_first = order
+        a = _cc(tmp_path, "host-a")
+        b = _cc(tmp_path, "host-b")
+        a.stage(epoch, plan_a)
+        b.stage(epoch, plan_b)
+        first, second = (a, b) if a_commits_first else (b, a)
+        r1 = first.commit(epoch)
+        r2 = second.commit(epoch)
+        assert r1 == r2  # second commit adopts the landed artifact
+        assert r1["digest"] == winner_digest
+        committed.append(r1)
+    assert committed[0] == committed[1]
+
+
+def test_commit_requires_a_staged_proposal(tmp_path):
+    c = _cc(tmp_path, "host-a")
+    try:
+        c.commit("e0")
+        raise AssertionError("commit without proposals should raise")
+    except ValueError:
+        pass
+
+
+def test_committed_artifact_is_never_torn(tmp_path):
+    """The commit file appears atomically with complete content (hardlink
+    of a fully-written temp file): whatever committed() returns parses."""
+    c = _cc(tmp_path, "host-a")
+    c.stage("e1", {"version": "coap-plan/v1", "big": list(range(1000))})
+    rec = c.commit("e1")
+    path = os.path.join(str(tmp_path), "epochs", "e1", "plan.json")
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk == rec
+    assert not [p for p in os.listdir(os.path.dirname(path))
+                if p.endswith(".tmp")]
+
+
+def test_plan_for_epoch_one_solver_rest_adopt(tmp_path):
+    """The elected leader solves + publishes; a peer adopts the committed
+    plan WITHOUT invoking its own solver."""
+    a = _cc(tmp_path, "host-a")
+    b = _cc(tmp_path, "host-b")
+    a.beat()
+    b.beat()
+    solves = {"a": 0, "b": 0}
+
+    def solve_a():
+        solves["a"] += 1
+        return {"version": "coap-plan/v1", "by": "a"}
+
+    def solve_b():
+        solves["b"] += 1
+        return {"version": "coap-plan/v1", "by": "b"}
+
+    plan1, role1 = a.plan_for_epoch("0:8xN", solve_a)
+    plan2, role2 = b.plan_for_epoch("0:8xN", solve_b)
+    assert (role1, role2) == ("published", "adopted")
+    assert plan1 == plan2 == {"version": "coap-plan/v1", "by": "a"}
+    assert solves == {"a": 1, "b": 0}
+
+
+def test_plan_for_epoch_peer_takes_over_dead_leader(tmp_path):
+    """The leader dies before committing: the peer's adopt wait times out
+    and it solves + commits itself — liveness without extra rounds."""
+    now = [0.0]
+    b = fleet.PlanConsensus(
+        fleet.FleetConfig(fleet_dir=str(tmp_path), host_id="host-b",
+                          member_timeout_s=5.0, adopt_timeout_s=1.0,
+                          poll_interval_s=0.01),
+        time_fn=lambda: now[0],
+        sleep_fn=lambda s: now.__setitem__(0, now[0] + max(s, 0.01)),
+    )
+    # host-a beat once (so b is not leader) and then died.
+    a = fleet.PlanConsensus(
+        fleet.FleetConfig(fleet_dir=str(tmp_path), host_id="host-a"),
+        time_fn=lambda: now[0],
+    )
+    a.beat()
+    now[0] += 10.0  # a's lease lapses during b's wait
+    plan, role = b.plan_for_epoch(
+        "60:4xN", lambda: {"version": "coap-plan/v1", "by": "b"}
+    )
+    assert role == "published"
+    assert plan["by"] == "b"
