@@ -1,6 +1,6 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke plan plan-smoke fault-smoke bench-overhead bench-refresh \
-	bench-state bench-conv bench-plan bench-elastic
+.PHONY: test smoke plan plan-smoke fault-smoke obs-smoke bench-overhead \
+	bench-refresh bench-state bench-conv bench-plan bench-elastic bench-obs
 
 test:
 	./scripts/ci.sh
@@ -26,6 +26,12 @@ plan-smoke:
 # kernels. Part of the default `make test` path via scripts/ci.sh.
 fault-smoke:
 	./scripts/ci.sh fault-smoke
+
+# Observability smoke: tracer/registry/calibration unit layer + a traced
+# 10-step run whose spans, heartbeat counters and fleet_status view are
+# all checked. Part of the default `make test` path via scripts/ci.sh.
+obs-smoke:
+	./scripts/ci.sh obs-smoke
 
 # Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
@@ -59,3 +65,9 @@ bench-plan:
 # train-step recompile under the replanned layout).
 bench-elastic:
 	PYTHONPATH=src:. python benchmarks/run.py --only elastic
+
+# Regenerates BENCH_obs.json (span-tracing hot-path overhead: disabled and
+# enabled per-span cost vs a traced smoke run's measured step time, gated
+# at <3% tracing / <0.1% disabled).
+bench-obs:
+	PYTHONPATH=src:. python benchmarks/run.py --only obs

@@ -5,6 +5,7 @@
 #   ./scripts/ci.sh smoke        kernel smoke only (fast signal on kernel edits)
 #   ./scripts/ci.sh plan-smoke   plan smoke only (planner/accounting edits)
 #   ./scripts/ci.sh fault-smoke  elastic/fault-injection smoke (train/ edits)
+#   ./scripts/ci.sh obs-smoke    observability smoke (obs/ + fleet_status edits)
 #
 # The smoke subset re-runs the fused-kernel correctness tests with the
 # actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
@@ -85,6 +86,73 @@ fault_smoke() {
     tests/test_fleet.py
 }
 
+obs_smoke() {
+  echo "== observability smoke (traced run -> spans + registry + fleet_status) =="
+  # Unit layer: tracer round-trip/Perfetto schema, registry merge,
+  # calibration parity, fleet_status on synthetic journals.
+  REPRO_PALLAS=interpret python -m pytest -q \
+    tests/test_obs.py -k "not end_to_end"
+  # End-to-end: a traced 10-step elastic run must emit well-formed spans
+  # with refresh attribution, ride its registry snapshot in the
+  # heartbeat, and be parseable by fleet_status --json.
+  REPRO_PALLAS=interpret python - <<'PY'
+import json, os, tempfile
+
+from repro.configs import get_smoke
+from repro.core.api import OptimizerConfig
+from repro.data.synthetic import SyntheticLM
+from repro.launch import fleet_status
+from repro.models.model import build_model
+from repro.obs.trace import export_perfetto, read_trace
+from repro.train.elastic import ElasticConfig, ElasticSupervisor, Topology
+
+tmp = tempfile.mkdtemp(prefix="obs_smoke_")
+cfg = get_smoke("tinyllama-1.1b")
+model = build_model(cfg)
+data = SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.2)
+sup = ElasticSupervisor(
+    model, lambda step, host: data.batch(step, batch=4, seq=16, host=host),
+    ElasticConfig(
+        ckpt_dir=tmp, total_steps=10,
+        topology=(Topology(1, 10**12),),
+        solve_kw=dict(min_dim=16, t_update=4, lam=2, stagger_groups=2),
+        ckpt_every=5, log_every=2,
+        heartbeat_path=os.path.join(tmp, "heartbeat.json"),
+        metrics_path=os.path.join(tmp, "metrics.jsonl"),
+        events_path=os.path.join(tmp, "events.jsonl"),
+        trace_path=os.path.join(tmp, "trace.jsonl"),
+        host_id="obs-smoke",
+    ),
+    ocfg=OptimizerConfig(name="coap-adamw", learning_rate=1e-3),
+)
+state = sup.run()
+assert int(state.step) == 10, int(state.step)
+
+rows = read_trace(os.path.join(tmp, "trace.jsonl"))
+names = {r["name"] for r in rows}
+assert {"elastic/attempt", "elastic/replan", "loop/step",
+        "loop/checkpoint"} <= names, names
+steps = [r for r in rows if r["name"] == "loop/step"]
+assert len(steps) == 10 and all("dur" in r for r in steps)
+assert (steps[0].get("attrs") or {}).get("refresh"), "no refresh attribution"
+doc = export_perfetto(os.path.join(tmp, "trace.jsonl"),
+                      os.path.join(tmp, "perfetto.json"))
+assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
+
+hb = json.load(open(os.path.join(tmp, "heartbeat.json")))
+assert hb["counters"].get("ckpt/save", 0) >= 1, hb
+assert hb["phase"] == "train"
+
+view = fleet_status.collect([tmp], None)
+h = view["hosts"][0]
+assert h["status"] == "alive" and h["step"] == 9, h
+json.dumps(view, default=str)  # the --json document serializes
+print(fleet_status.render(view))
+print("obs smoke OK:", len(rows), "trace rows,",
+      len(hb["counters"]), "counters")
+PY
+}
+
 if [[ "${1:-}" == "smoke" ]]; then
   smoke
   exit 0
@@ -97,9 +165,14 @@ if [[ "${1:-}" == "fault-smoke" ]]; then
   fault_smoke
   exit 0
 fi
+if [[ "${1:-}" == "obs-smoke" ]]; then
+  obs_smoke
+  exit 0
+fi
 
 echo "== tier-1 suite =="
 python -m pytest -x -q
 smoke
 plan_smoke
 fault_smoke
+obs_smoke

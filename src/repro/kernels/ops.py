@@ -160,10 +160,16 @@ def reset_eqn6_fallbacks() -> None:
 def _record_eqn6_fallback(g, p, budget: int, err) -> None:
     import warnings
 
+    from repro.obs.registry import get_registry
+
     m_dim, n_dim = int(g.shape[-2]), int(g.shape[-1])
     r = int(p.shape[-1])
     key = (m_dim, n_dim, r)
     _EQN6_FALLBACK_COUNTS[key] = _EQN6_FALLBACK_COUNTS.get(key, 0) + 1
+    # Mirror into the process-wide registry so fallbacks ride heartbeats
+    # and dryrun artifacts; reset_eqn6_fallbacks deliberately does NOT
+    # clear it — the registry is lifetime-of-process telemetry.
+    get_registry().inc(f"eqn6/fallback/{m_dim}x{n_dim}x{r}")
     warn_key = (n_dim, r, int(budget))
     if warn_key not in _EQN6_WARNED:
         _EQN6_WARNED.add(warn_key)

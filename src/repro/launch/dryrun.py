@@ -270,6 +270,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             # kernels/ops): plans that land a bucket on the slow unfused
             # refresh are visible here, not just as a one-shot warning.
             "eqn6_fallbacks": _live_eqn6_fallbacks(),
+            # Process-wide obs registry snapshot (counters + gauges) —
+            # anything any subsystem counted while building this cell.
+            "registry": _registry_snapshot(),
         })
         if plan_rec is not None:
             rec["plan"] = plan_rec
@@ -287,6 +290,12 @@ def _live_eqn6_fallbacks() -> dict:
     from repro.plan.validate import live_eqn6_fallbacks
 
     return live_eqn6_fallbacks()
+
+
+def _registry_snapshot() -> dict:
+    from repro.obs.registry import get_registry
+
+    return get_registry().snapshot()
 
 
 def _save(name: str, rec: dict, save: bool):

@@ -1,0 +1,313 @@
+"""fleet_status: one operator view over a fleet's journals (stdlib-only).
+
+    PYTHONPATH=src python -m repro.launch.fleet_status --dir <run_dir> \
+        [--dir <run_dir2> ...] [--fleet-dir <fleet_dir>] \
+        [--json] [--follow] [--interval 2] [--events 5]
+
+Every elastic run directory already carries the full story as plain
+files — ``heartbeat.json`` (liveness + step + phase + registry
+counters), ``events.jsonl`` (both sides' supervision events),
+``metrics.jsonl`` (loss/throughput rows), ``DONE.json``, the checkpoint
+directories, and ``worker_spec.json`` (which knows the heartbeat
+timeout). A fleet directory (``train/fleet.py``) adds member liveness
+and the committed ``coap-plan/v1`` per replan epoch. This CLI tails them
+all into one table: per-host phase/step/staleness, last loss, checkpoint
+progress, the current plan epoch + digest, and recent events.
+
+``--json`` emits the same view as one machine-readable document;
+``--follow`` redraws every ``--interval`` seconds. Deliberately imports
+NOTHING jax-adjacent: it must run on an operator box (or a dying host)
+in milliseconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+_CKPT_RE = re.compile(r"^ckpt_(\d+)$")
+DEFAULT_HEARTBEAT_TIMEOUT_S = 300.0
+
+
+def _read_json(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _tail_jsonl(path: str, n: int) -> List[Dict]:
+    """Last ``n`` well-formed rows of a jsonl journal (torn trailing
+    lines from a killed writer are skipped)."""
+    rows: List[Dict] = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if isinstance(row, dict):
+                    rows.append(row)
+    except OSError:
+        pass
+    return rows[-n:] if n > 0 else rows
+
+
+def _ckpt_steps(run_dir: str) -> List[int]:
+    """Checkpoint steps by directory scan (same contract as
+    ``train/checkpoint.steps`` — ``ckpt_<step>/manifest.json`` — without
+    importing the jax-heavy checkpoint module)."""
+    out = []
+    try:
+        for d in os.listdir(run_dir):
+            m = _CKPT_RE.match(d)
+            if m and os.path.exists(
+                os.path.join(run_dir, d, "manifest.json")
+            ):
+                out.append(int(m.group(1)))
+    except OSError:
+        pass
+    return sorted(out)
+
+
+def host_view(
+    run_dir: str, n_events: int = 5, now: Optional[float] = None
+) -> Dict[str, Any]:
+    """Everything the journals say about ONE run directory."""
+    now = time.time() if now is None else now
+    spec = _read_json(os.path.join(run_dir, "worker_spec.json")) or {}
+    ecfg = spec.get("elastic") or {}
+    host = ecfg.get("host_id") or os.path.basename(
+        os.path.abspath(run_dir)
+    )
+    timeout = float(
+        ecfg.get("heartbeat_timeout_s") or DEFAULT_HEARTBEAT_TIMEOUT_S
+    )
+
+    hb_path = ecfg.get("heartbeat_path") or os.path.join(
+        run_dir, "heartbeat.json"
+    )
+    hb = _read_json(hb_path)
+    if hb is None:
+        status, staleness = "missing", None
+    else:
+        staleness = now - float(hb.get("time", 0.0))
+        status = "alive" if staleness < timeout else "stale"
+
+    done = _read_json(os.path.join(run_dir, "DONE.json"))
+    if done:
+        status = "done"
+
+    events_path = ecfg.get("events_path") or os.path.join(
+        run_dir, "events.jsonl"
+    )
+    events = [
+        {"time": r.get("time"), "host": r.get("host"),
+         "event": r.get("event")}
+        for r in _tail_jsonl(events_path, n_events)
+        if "event" in r
+    ]
+
+    metrics_path = ecfg.get("metrics_path") or os.path.join(
+        run_dir, "metrics.jsonl"
+    )
+    last_metrics = (_tail_jsonl(metrics_path, 1) or [None])[-1]
+
+    ckpts = _ckpt_steps(run_dir)
+    hb = hb or {}
+    return {
+        "host": host,
+        "dir": run_dir,
+        "status": status,  # alive | stale | missing | done
+        "phase": hb.get("phase"),
+        "step": (int(done["step"]) if done and "step" in done
+                 else hb.get("step")),
+        "staleness_s": staleness,
+        "heartbeat_timeout_s": timeout,
+        "straggler_flagged": hb.get("straggler_flagged"),
+        "counters": (hb.get("counters")
+                     if isinstance(hb.get("counters"), dict) else None),
+        "total_steps": ecfg.get("total_steps"),
+        "last_metrics": last_metrics,
+        "ckpt_latest": ckpts[-1] if ckpts else None,
+        "ckpt_count": len(ckpts),
+        "done": done,
+        "recent_events": events,
+    }
+
+
+def fleet_view(fleet_dir: str, now: Optional[float] = None,
+               member_timeout_s: float = 30.0) -> Dict[str, Any]:
+    """The consensus layer's view: member liveness + the most recently
+    committed plan epoch and its content digest."""
+    now = time.time() if now is None else now
+    members = []
+    mdir = os.path.join(fleet_dir, "members")
+    try:
+        for fname in sorted(os.listdir(mdir)):
+            if not fname.endswith(".json"):
+                continue
+            rec = _read_json(os.path.join(mdir, fname))
+            if not rec:
+                continue
+            age = now - float(rec.get("time", 0.0))
+            members.append({
+                "host": rec.get("host"),
+                "age_s": age,
+                "alive": age < member_timeout_s,
+            })
+    except OSError:
+        pass
+
+    epochs = []
+    edir = os.path.join(fleet_dir, "epochs")
+    try:
+        for name in os.listdir(edir):
+            commit = os.path.join(edir, name, "plan.json")
+            if not os.path.exists(commit):
+                continue
+            rec = _read_json(commit) or {}
+            epochs.append({
+                "epoch": name,
+                "committed_by": rec.get("host"),
+                "plan_digest": rec.get("digest"),
+                "mtime": os.path.getmtime(commit),
+            })
+    except OSError:
+        pass
+    epochs.sort(key=lambda e: e["mtime"])
+    current = epochs[-1] if epochs else None
+    return {
+        "fleet_dir": fleet_dir,
+        "members": members,
+        "n_alive": sum(1 for m in members if m["alive"]),
+        "epochs": [e["epoch"] for e in epochs],
+        "current_epoch": current,
+    }
+
+
+def collect(run_dirs: List[str], fleet_dir: Optional[str],
+            n_events: int = 5) -> Dict[str, Any]:
+    now = time.time()
+    doc: Dict[str, Any] = {
+        "time": now,
+        "hosts": [host_view(d, n_events=n_events, now=now)
+                  for d in run_dirs],
+    }
+    if fleet_dir:
+        doc["fleet"] = fleet_view(fleet_dir, now=now)
+    return doc
+
+
+# -- rendering ---------------------------------------------------------------
+
+
+def _fmt_age(s: Optional[float]) -> str:
+    if s is None:
+        return "-"
+    if s < 120:
+        return f"{s:.1f}s"
+    if s < 7200:
+        return f"{s/60:.1f}m"
+    return f"{s/3600:.1f}h"
+
+
+def _fmt_event(e: Dict) -> str:
+    ev = e.get("event")
+    body = " ".join(str(x) for x in ev) if isinstance(ev, list) else str(ev)
+    return f"{e.get('host', '?')}: {body}"
+
+
+def render(doc: Dict[str, Any]) -> str:
+    lines = [
+        "| host | status | phase | step | ckpt | stale | straggler | loss |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for h in doc["hosts"]:
+        m = h.get("last_metrics") or {}
+        loss = m.get("loss")
+        loss_s = f"{loss:.4f}" if isinstance(loss, (int, float)) else "-"
+        total = h.get("total_steps")
+        step = h.get("step")
+        if step is not None and total:
+            step_s = f"{step}/{total}"
+        else:
+            step_s = str(step) if step is not None else "-"
+        ckpt = h.get("ckpt_latest")
+        strag = h.get("straggler_flagged")
+        lines.append(
+            f"| {h['host']} | {h['status']} | {h.get('phase') or '-'} | "
+            f"{step_s} | {ckpt if ckpt is not None else '-'} | "
+            f"{_fmt_age(h.get('staleness_s'))} | "
+            f"{strag if strag is not None else '-'} | {loss_s} |"
+        )
+    fleet = doc.get("fleet")
+    if fleet:
+        cur = fleet.get("current_epoch")
+        lines.append("")
+        lines.append(
+            f"fleet: {fleet['n_alive']}/{len(fleet['members'])} members "
+            f"alive; {len(fleet['epochs'])} committed epoch(s)"
+        )
+        if cur:
+            lines.append(
+                f"current plan epoch {cur['epoch']} "
+                f"(digest {str(cur['plan_digest'])[:12]}..., "
+                f"committed by {cur['committed_by']})"
+            )
+    recent = [
+        (e.get("time") or 0.0, e)
+        for h in doc["hosts"] for e in h.get("recent_events", [])
+    ]
+    if recent:
+        lines.append("")
+        lines.append("recent events:")
+        for _, e in sorted(recent, key=lambda te: te[0])[-8:]:
+            lines.append(f"  {_fmt_event(e)}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="one fleet view over elastic run + fleet directories"
+    )
+    ap.add_argument("--dir", action="append", default=[],
+                    help="elastic run directory (repeatable)")
+    ap.add_argument("--fleet-dir", default=None,
+                    help="train/fleet.py consensus directory")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--follow", action="store_true",
+                    help="redraw every --interval seconds")
+    ap.add_argument("--interval", type=float, default=2.0)
+    ap.add_argument("--events", type=int, default=5,
+                    help="recent events per host")
+    args = ap.parse_args(argv)
+    if not args.dir and not args.fleet_dir:
+        ap.error("give at least one --dir or --fleet-dir")
+
+    while True:
+        doc = collect(args.dir, args.fleet_dir, n_events=args.events)
+        if args.as_json:
+            out = json.dumps(doc, indent=1, default=str)
+        else:
+            out = render(doc)
+        if args.follow:
+            sys.stdout.write("\x1b[2J\x1b[H")
+        print(out, flush=True)
+        if not args.follow:
+            return 0
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

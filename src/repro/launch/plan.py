@@ -110,6 +110,11 @@ def plan_one(arch: str, budget: int, args, tolerate_infeasible: bool) -> bool:
 
     cfg = get_config(arch)
     params = build_model(cfg).abstract_params()  # built ONCE, reused below
+    calib = None
+    if getattr(args, "calib", None):
+        from repro.plan.cost import Calibration
+
+        calib = Calibration.load(calib_path=args.calib)
     try:
         plan = plan_mod.solve(
             params, budget,
@@ -119,6 +124,7 @@ def plan_one(arch: str, budget: int, args, tolerate_infeasible: bool) -> bool:
             quantize=args.quantize,
             t_update=args.t_update,
             stagger_groups=args.stagger_groups,
+            calib=calib,
         )
     except plan_mod.PlanInfeasibleError as e:
         # Under --all a fixed budget legitimately cannot fit every arch
@@ -166,6 +172,10 @@ def main(argv=None):
     ap.add_argument("--t-update", type=int, default=None,
                     help="override the scale-recipe T_u")
     ap.add_argument("--stagger-groups", type=int, default=8)
+    ap.add_argument("--calib", default="",
+                    help="coap-calib/v1 artifact (obs.calib) — ranks "
+                         "candidates by measured seconds instead of the "
+                         "analytic roofline constants")
     ap.add_argument("--out", default="")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check predicted bytes against the real "

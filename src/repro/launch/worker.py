@@ -52,9 +52,17 @@ def main(argv=None) -> int:
         ElasticSupervisor,
         elastic_config_from_dict,
     )
+    from repro.obs.registry import get_registry
+    from repro.obs.trace import configure as trace_configure
+    from repro.obs.trace import get_tracer
     from repro.train.fault_tolerance import DrainPreemption, Heartbeat
 
     ecfg = elastic_config_from_dict(spec["elastic"])
+    if ecfg.trace_path:
+        trace_configure(ecfg.trace_path, host=ecfg.host_id)
+    tracer = get_tracer()
+    reg = get_registry()
+    reg.set_phase("boot")
 
     # Liveness = process-liveness for the ENTIRE worker lifetime: the
     # refresher must outlive run_attempt (which runs its own) because the
@@ -69,7 +77,8 @@ def main(argv=None) -> int:
 
     arch = spec.get("arch", "tinyllama-1.1b")
     cfg = get_smoke(arch) if spec.get("smoke", True) else get_config(arch)
-    model = build_model(cfg)
+    with tracer.span("worker/build", attempt=attempt, arch=arch):
+        model = build_model(cfg)
     data = SyntheticLM(
         vocab=cfg.vocab_size,
         order=int(spec.get("data_order", 2)),
@@ -97,9 +106,11 @@ def main(argv=None) -> int:
         except DrainPreemption:
             return EXIT_DRAINED
 
-        final_loss, _ = model.loss(
-            state.params, data.batch(ecfg.total_steps + 1, batch, seq, 0)
-        )
+        reg.set_phase("final_eval")
+        with tracer.span("worker/final_eval", attempt=attempt):
+            final_loss, _ = model.loss(
+                state.params, data.batch(ecfg.total_steps + 1, batch, seq, 0)
+            )
         done_path = os.path.join(ecfg.ckpt_dir, "DONE.json")
         tmp = f"{done_path}.{os.getpid()}.tmp"
         with open(tmp, "w") as f:

@@ -1,0 +1,11 @@
+"""Unified telemetry: span tracing, counter registry, cost calibration.
+
+``obs.trace`` and ``obs.registry`` are STDLIB-ONLY by design — the
+operator CLI (``launch/fleet_status``), the fleet protocol
+(``train/fleet.py``) and the kernel dispatch layer all import them, and
+none of those should drag in jax. ``obs.calib`` (the measured-cost
+feedback loop) is the one jax-aware module: it re-derives the planned
+refresh schedule and fits roofline constants from recorded spans.
+"""
+from repro.obs.registry import get_registry, merge_snapshots  # noqa: F401
+from repro.obs.trace import configure, get_tracer  # noqa: F401

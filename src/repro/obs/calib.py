@@ -1,0 +1,262 @@
+"""Measured-cost feedback loop: recorded spans → ``coap-calib/v1``.
+
+Closes ROADMAP item 1's cost-fitting half: the planner's roofline model
+(``plan/cost.py``) predicts seconds from analytic chip constants; a
+traced run records what steps ACTUALLY took (``loop/step`` spans with
+per-step refresh-group attribution). This module aggregates those spans
+against the plan's per-bucket byte/flop split and fits the two roofline
+constants — effective HBM bandwidth and peak FLOPS — by non-negative
+least squares on the *additive* relaxation
+
+    t_step  ≈  bytes · (1/BW)  +  flops · (1/F)
+
+using both hot-step samples (no refresh work) and refresh-step samples
+(hot + the refreshing groups' event terms): the two populations mix
+bytes and flops differently, which is what makes the two constants
+separately identifiable. A single scalar measured/analytic ratio would
+scale every candidate equally and never change a ranking; fitting BW
+and F independently can.
+
+The result is a versioned ``coap-calib/v1`` artifact that
+``plan/cost.Calibration.load`` picks up (explicit path →
+``REPRO_COAP_CALIB`` env → ``artifacts/calib/coap-calib.json``), after
+which ``plan.solve()`` ranks candidates by fitted seconds. No artifact →
+analytic constants → bit-identical plans.
+
+This is the one jax-aware obs module (it re-derives the planned refresh
+schedule); ``obs/trace`` / ``obs/registry`` / ``launch/fleet_status``
+stay stdlib-only.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.obs.trace import read_trace
+
+CALIB_DEFAULT_PATH = os.path.join("artifacts", "calib", "coap-calib.json")
+
+
+def planned_refresh_schedule(
+    plan, params, ocfg
+) -> Callable[[int], List[Dict[str, Any]]]:
+    """The refresh-group schedule a planned run will follow, as a pure
+    host-side function ``step -> [events]`` (each event:
+    ``{bucket, phase, size, frac, kind}`` with kind ``eqn6`` | ``recal``).
+
+    Derived from the SAME primitives the jitted update uses
+    (``coap_adam.bucket_phases`` + the ``_sched_preds`` predicates over
+    the exact planned config), so the attribution the loop attaches to
+    its step spans matches what the kernel dispatch actually did —
+    including the whole-bucket Eqn-7 initialization at step 0.
+    """
+    from repro.core import stacked_state
+    from repro.core.coap_adam import _phase_groups, bucket_phases
+    from repro.plan import apply as plan_apply
+
+    cfg = plan_apply.planned_config(plan, ocfg)
+    layout = stacked_state.layout_for_tree(cfg.rules.spec_for, params)
+    phases = bucket_phases(cfg, layout)
+    t_u_of = {}
+    for b in plan.buckets:
+        for p in b.paths:
+            t_u_of[p] = int(b.t_update)
+    lam = max(1, int(plan.globals_.lam))
+    sched = []
+    for bi in sorted(phases):
+        info = layout.buckets[bi]
+        t_u = max(1, t_u_of.get(info.paths[0], plan.globals_.t_update))
+        count = len(info.indices)
+        sched.append((bi, t_u, count, _phase_groups(list(phases[bi]))))
+
+    def events_at(step: int) -> List[Dict[str, Any]]:
+        out = []
+        for bi, t_u, count, groups in sched:
+            if step == 0:
+                # Mandatory whole-bucket Eqn-7 init for everyone at t=0.
+                out.append({"bucket": bi, "phase": 0, "size": count,
+                            "frac": 1.0, "kind": "recal"})
+                continue
+            for _, size, ph in groups:
+                if (step + ph) % t_u != 0:
+                    continue
+                kind = "recal" if (step + ph) % (lam * t_u) == 0 else "eqn6"
+                out.append({
+                    "bucket": bi, "phase": int(ph), "size": int(size),
+                    "frac": size / max(1, count), "kind": kind,
+                })
+        return out
+
+    return events_at
+
+
+def _fit_nnls_2(samples: List[Dict[str, float]]):
+    """Non-negative least squares for ``t ≈ x·bytes + y·flops`` (x, y ≥ 0)
+    via the 2×2 normal equations; a negative coordinate falls back to the
+    better-residual single-variable fit."""
+    sbb = sum(s["bytes"] ** 2 for s in samples)
+    sff = sum(s["flops"] ** 2 for s in samples)
+    sbf = sum(s["bytes"] * s["flops"] for s in samples)
+    sbt = sum(s["bytes"] * s["t"] for s in samples)
+    sft = sum(s["flops"] * s["t"] for s in samples)
+
+    def residual(x: float, y: float) -> float:
+        return sum(
+            (s["t"] - x * s["bytes"] - y * s["flops"]) ** 2 for s in samples
+        )
+
+    det = sbb * sff - sbf * sbf
+    if det > 0:
+        x = (sbt * sff - sft * sbf) / det
+        y = (sft * sbb - sbt * sbf) / det
+        if x >= 0 and y >= 0:
+            return x, y, residual(x, y)
+    xb = sbt / sbb if sbb > 0 else 0.0
+    yf = sft / sff if sff > 0 else 0.0
+    cands = [(max(0.0, xb), 0.0), (0.0, max(0.0, yf))]
+    x, y = min(cands, key=lambda c: residual(*c))
+    return x, y, residual(x, y)
+
+
+def build_from_trace(
+    trace_path: str,
+    plan,
+    out_path: Optional[str] = None,
+    min_samples: int = 4,
+) -> Dict[str, Any]:
+    """Fit a ``coap-calib/v1`` artifact from a traced run's ``loop/step``
+    spans and the plan they ran under. Returns the artifact dict (and
+    writes it atomically to ``out_path`` when given).
+
+    Compile-tagged spans (first step of an attempt — jit trace+compile
+    dominates) are excluded. Raises ``ValueError`` below ``min_samples``
+    usable spans: a fit from almost nothing would silently steer the
+    planner.
+    """
+    import jax.numpy as jnp
+
+    from repro.plan import cost as pcost
+    from repro.train.fleet import plan_digest
+
+    rows = read_trace(trace_path)
+    steps = [
+        r for r in rows
+        if r.get("name") == "loop/step" and r.get("ph", "X") == "X"
+        and not (r.get("attrs") or {}).get("compile")
+    ]
+    if len(steps) < min_samples:
+        raise ValueError(
+            f"build_from_trace: only {len(steps)} usable loop/step spans in "
+            f"{trace_path} (need >= {min_samples}) — trace a longer run"
+        )
+
+    calib = pcost.Calibration.load()
+    g = plan.globals_
+    state_itemsize = jnp.dtype(g.state_dtype).itemsize
+    splits = []
+    for b in plan.buckets:
+        splits.append(pcost.bucket_step_cost(
+            b.kind, b.shape, b.spec, b.count,
+            quantize=b.quantize, t_update=b.t_update, lam=g.lam,
+            eqn6_steps=g.eqn6_steps, stacked_state=g.stacked_state,
+            state_itemsize=state_itemsize,
+            grad_itemsize=jnp.dtype(b.dtype).itemsize,
+            calib=calib,
+        ))
+    hot_bytes = sum(c["hot_bytes"] for c in splits)
+    hot_flops = sum(c["hot_flops"] for c in splits)
+
+    samples = []
+    n_refresh = 0
+    for r in steps:
+        attrs = r.get("attrs") or {}
+        ev = attrs.get("refresh") or []
+        bytes_ = hot_bytes
+        flops = hot_flops
+        for e in ev:
+            bi = int(e.get("bucket", -1))
+            if not (0 <= bi < len(splits)):
+                continue
+            c = splits[bi]
+            frac = float(e.get("frac", 1.0))
+            term = "recal" if e.get("kind") == "recal" else "eqn6"
+            bytes_ += c[f"{term}_event_bytes"] * frac
+            flops += c[f"{term}_event_flops"] * frac
+        if ev:
+            n_refresh += 1
+        samples.append({
+            "t": float(r["dur"]), "bytes": bytes_, "flops": flops,
+        })
+
+    x, y, res = _fit_nnls_2(samples)
+    artifact = {
+        "codec": pcost.CALIB_CODEC,
+        # 1/x and 1/y are the fitted roofline constants; a coordinate the
+        # fit zeroed (that term never bound) is recorded as None and
+        # Calibration.load keeps the analytic constant for it.
+        "hbm_bw": (1.0 / x) if x > 0 else None,
+        "peak_flops": (1.0 / y) if y > 0 else None,
+        "analytic": {
+            "hbm_bw": pcost.HBM_BW, "peak_flops": pcost.PEAK_FLOPS,
+        },
+        "n_samples": len(samples),
+        "n_refresh_samples": n_refresh,
+        "residual_rms_s": (res / len(samples)) ** 0.5,
+        "mean_step_s": sum(s["t"] for s in samples) / len(samples),
+        "source": trace_path,
+        "plan_digest": plan_digest(plan.to_dict()),
+    }
+    if out_path:
+        save_calib(out_path, artifact)
+    return artifact
+
+
+def save_calib(path: str, artifact: Dict[str, Any]) -> None:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(artifact, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_calib(path: str) -> Dict[str, Any]:
+    """Read + version-check a coap-calib artifact (loud, unlike the
+    silently-optional consumption inside ``Calibration.load``)."""
+    from repro.plan.cost import CALIB_CODEC
+
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or data.get("codec") != CALIB_CODEC:
+        raise ValueError(
+            f"{path}: not a {CALIB_CODEC} artifact "
+            f"(codec={data.get('codec') if isinstance(data, dict) else data!r})"
+        )
+    return data
+
+
+def main(argv=None) -> int:
+    """``python -m repro.obs.calib --trace trace.jsonl --plan plan.json``
+    — fit and write the artifact from a recorded run."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description="fit coap-calib/v1 from a trace")
+    ap.add_argument("--trace", required=True)
+    ap.add_argument("--plan", required=True,
+                    help="the coap-plan/v1 the traced run executed under")
+    ap.add_argument("--out", default=CALIB_DEFAULT_PATH)
+    args = ap.parse_args(argv)
+
+    from repro.plan.artifact import load_plan
+
+    artifact = build_from_trace(args.trace, load_plan(args.plan),
+                                out_path=args.out)
+    print(json.dumps(artifact, indent=1))
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,101 @@
+"""Process-wide counter/gauge registry (stdlib-only).
+
+One home for the telemetry that used to live as scattered one-off state:
+Eqn-6 VMEM fallbacks (``kernels/ops``), torn/skipped checkpoints and
+crash-budget charges (``train/elastic``), drain vs reactive kills
+(``ProcessSupervisor``). Everything is a named counter or gauge behind
+one snapshot API; the snapshot rides in heartbeat payloads (so a
+supervisor — and ``launch/fleet_status`` — sees a worker's counters
+without extra channels) and in dryrun artifacts.
+
+Naming convention: ``<subsystem>/<event>[/<detail>]``, e.g.
+``eqn6/fallback/2048x2048x512``, ``ckpt/torn``, ``supervisor/kill``,
+``fleet/adopted``. Gauges carry point-in-time values; the reserved gauge
+``phase`` is the worker's current lifecycle phase (``boot`` → ``replan``
+→ ``restore`` → ``migrate`` → ``train`` → ``final_eval``).
+
+Counters from different processes merge by summation
+(:func:`merge_snapshots`); gauges are per-process state, last writer
+wins.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, Optional
+
+
+class Registry:
+    """Thread-safe named counters + gauges with a snapshot API."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, Any] = {}
+
+    # -- writes --------------------------------------------------------------
+    def inc(self, name: str, n: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + n
+
+    def set_gauge(self, name: str, value: Any) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def set_phase(self, phase: str) -> None:
+        """The reserved lifecycle gauge every worker keeps current — what
+        ``fleet_status`` reports as the host's phase."""
+        self.set_gauge("phase", phase)
+
+    # -- reads ---------------------------------------------------------------
+    def get(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def gauge(self, name: str, default: Any = None) -> Any:
+        with self._lock:
+            return self._gauges.get(name, default)
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """A point-in-time copy: ``{"counters": {...}, "gauges": {...}}``.
+        Counters are ints when integral so the snapshot JSON stays tidy."""
+        with self._lock:
+            counters = {
+                k: (int(v) if float(v).is_integer() else float(v))
+                for k, v in self._counters.items()
+            }
+            return {"counters": counters, "gauges": dict(self._gauges)}
+
+    def reset(self) -> None:
+        """Test isolation; production registries live for the process."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+
+
+def merge_snapshots(
+    snaps: Iterable[Optional[Dict[str, Dict[str, Any]]]],
+) -> Dict[str, Dict[str, Any]]:
+    """Combine snapshots from several processes: counters sum, gauges
+    last-writer-wins (iterate oldest→newest). ``None`` entries (host never
+    reported) are skipped."""
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, Any] = {}
+    for s in snaps:
+        if not s:
+            continue
+        for k, v in (s.get("counters") or {}).items():
+            counters[k] = counters.get(k, 0.0) + float(v)
+        gauges.update(s.get("gauges") or {})
+    counters_out = {
+        k: (int(v) if float(v).is_integer() else float(v))
+        for k, v in counters.items()
+    }
+    return {"counters": counters_out, "gauges": gauges}
+
+
+_REGISTRY = Registry()
+
+
+def get_registry() -> Registry:
+    """THE process-wide registry (one per process, like a logger root)."""
+    return _REGISTRY

@@ -20,6 +20,15 @@ A bucket's per-step cost is ``max(bytes/HBM_BW, flops/PEAK_FLOPS)`` (the
 Calibration ratios are read from the ``BENCH_*.json`` files at the repo
 root when present and fall back to their shipped values otherwise — the
 plan artifact records which sources were live.
+
+The roofline constants themselves are calibratable too: a measured
+``coap-calib/v1`` artifact (``obs/calib.py`` fits HBM bandwidth and peak
+FLOPS from recorded per-step span durations) overrides the analytic
+``launch/roofline`` constants when present — explicit path, then the
+``REPRO_COAP_CALIB`` environment variable, then
+``artifacts/calib/coap-calib.json`` at the repo root. Without an
+artifact the analytic constants apply and plans are bit-identical to the
+uncalibrated solve.
 """
 from __future__ import annotations
 
@@ -56,7 +65,17 @@ _BENCH_DEFAULTS = {
     "resume_migrate_s": 1.8712,
     "resume_recompile_s": 16.3881,
     "resume_n_buckets": 8.0,
+    # coap-calib/v1 (artifacts/calib/coap-calib.json, built by
+    # obs/calib.py from recorded step spans): fitted roofline constants —
+    # the planner ranks candidates by MEASURED seconds when these are
+    # live, analytic chip constants otherwise.
+    "hbm_bw": HBM_BW,
+    "peak_flops": PEAK_FLOPS,
 }
+
+# Versioned schema of the measured-calibration artifact (obs/calib.py
+# writes it, Calibration.load consumes it).
+CALIB_CODEC = "coap-calib/v1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +88,8 @@ class Calibration:
     resume_migrate_s: float = _BENCH_DEFAULTS["resume_migrate_s"]
     resume_recompile_s: float = _BENCH_DEFAULTS["resume_recompile_s"]
     resume_n_buckets: float = _BENCH_DEFAULTS["resume_n_buckets"]
+    hbm_bw: float = _BENCH_DEFAULTS["hbm_bw"]
+    peak_flops: float = _BENCH_DEFAULTS["peak_flops"]
     sources: Tuple[Tuple[str, str], ...] = ()  # (ratio, file) actually loaded
 
     def resume_penalty_s_per_bucket(self) -> float:
@@ -80,7 +101,11 @@ class Calibration:
         )
 
     @classmethod
-    def load(cls, root: Optional[str] = None) -> "Calibration":
+    def load(
+        cls,
+        root: Optional[str] = None,
+        calib_path: Optional[str] = None,
+    ) -> "Calibration":
         if root is None:
             root = os.path.dirname(os.path.dirname(os.path.dirname(
                 os.path.dirname(os.path.abspath(__file__)))))
@@ -117,6 +142,27 @@ class Calibration:
             "resume_migrate_s": d.get("migrate_s"),
             "resume_recompile_s": d.get("recompile_s"),
             "resume_n_buckets": d.get("scenario", {}).get("n_buckets")})
+
+        # Measured roofline constants (coap-calib/v1): the solver ranks
+        # candidates by FITTED seconds when an artifact is present;
+        # absent / malformed / version-mismatched artifacts leave the
+        # analytic constants — and every existing plan — bit-identical.
+        cpath = (
+            calib_path
+            or os.environ.get("REPRO_COAP_CALIB")
+            or os.path.join(root, "artifacts", "calib", "coap-calib.json")
+        )
+        try:
+            with open(cpath) as f:
+                data = json.load(f)
+            if isinstance(data, dict) and data.get("codec") == CALIB_CODEC:
+                for key in ("hbm_bw", "peak_flops"):
+                    v = float(data.get(key) or 0.0)
+                    if v > 0:
+                        vals[key] = v
+                        sources.append((key, os.path.basename(cpath)))
+        except (OSError, ValueError, TypeError):
+            pass  # no/unreadable artifact -> analytic constants
         return cls(sources=tuple(sources), **vals)
 
 
@@ -130,8 +176,13 @@ def eqn6_fused_ok(m: int, n: int, r: int, g_itemsize: int = 4,
     ) is not None
 
 
-def _roofline_seconds(bytes_: float, flops: float) -> float:
-    return max(bytes_ / HBM_BW, flops / PEAK_FLOPS)
+def _roofline_seconds(
+    bytes_: float,
+    flops: float,
+    hbm_bw: float = HBM_BW,
+    peak_flops: float = PEAK_FLOPS,
+) -> float:
+    return max(bytes_ / hbm_bw, flops / peak_flops)
 
 
 def bucket_step_cost(
@@ -152,9 +203,15 @@ def bucket_step_cost(
 ) -> Dict[str, float]:
     """Predicted amortized per-step cost of one bucket (``count`` leaves).
 
-    Returns ``{seconds, bytes_per_step, flops_per_step, eqn6_fused}`` —
-    ``eqn6_fused`` is None for buckets with no Eqn-6 refresh (dense, or
-    non-coap paths).
+    Returns ``{seconds, bytes_per_step, flops_per_step, eqn6_fused}``
+    plus the hot/event split (``hot_bytes``, ``hot_flops``,
+    ``eqn6_event_bytes``, ``eqn6_event_flops``, ``recal_event_bytes``,
+    ``recal_event_flops`` — per-EVENT totals across the bucket, what
+    ``obs/calib.py`` attributes to individual refresh-group spans when
+    fitting the roofline constants from a trace). ``eqn6_fused`` is None
+    for buckets with no Eqn-6 refresh (dense, or non-coap paths).
+    ``seconds`` uses ``calib.hbm_bw``/``calib.peak_flops`` — the fitted
+    constants when a coap-calib/v1 artifact is live.
     """
     state = pbytes.leaf_state_bytes(shape, spec, quantize, state_itemsize)
     state_total = sum(state.values())
@@ -208,8 +265,16 @@ def bucket_step_cost(
     bytes_step *= count
     flops_step *= count
     return {
-        "seconds": _roofline_seconds(bytes_step, flops_step),
+        "seconds": _roofline_seconds(
+            bytes_step, flops_step, calib.hbm_bw, calib.peak_flops
+        ),
         "bytes_per_step": bytes_step,
         "flops_per_step": flops_step,
         "eqn6_fused": eqn6_fused,
+        "hot_bytes": hot_bytes * count,
+        "hot_flops": hot_flops * count,
+        "eqn6_event_bytes": eqn6_bytes * count,
+        "eqn6_event_flops": eqn6_flops * count,
+        "recal_event_bytes": recal_bytes * count,
+        "recal_event_flops": recal_flops * count,
     }

@@ -46,7 +46,6 @@ from repro.core.projector import (
 )
 from repro.core import stacked_state
 from repro.kernels import ref as kref
-from repro.launch.roofline import HBM_BW
 from repro.plan import bytes as pbytes
 from repro.plan import cost as pcost
 from repro.plan.artifact import (
@@ -239,7 +238,7 @@ def solve(
             # under prev_plan) additionally pays the amortized resume
             # penalty, expressed in roofline-equivalent bytes — so
             # buckets already stored int8 flip first.
-            churn_b = resume_pen_s * HBM_BW
+            churn_b = resume_pen_s * calib.hbm_bw
 
             def flip_key(i: int) -> float:
                 saving = q8_b[i] - fp32_b[i]
@@ -357,6 +356,8 @@ def solve(
             "resume_migrate_s": calib.resume_migrate_s,
             "resume_recompile_s": calib.resume_recompile_s,
             "resume_n_buckets": calib.resume_n_buckets,
+            "hbm_bw": calib.hbm_bw,
+            "peak_flops": calib.peak_flops,
         },
         "calibration_sources": [list(s) for s in calib.sources],
     }

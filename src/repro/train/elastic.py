@@ -55,6 +55,10 @@ import jax.numpy as jnp
 from repro.core import stacked_state
 from repro.core.api import OptimizerConfig, make_optimizer
 from repro.core.coap_adam import ProjectedAdamState, bucket_phases
+from repro.obs import calib as obs_calib
+from repro.obs.registry import get_registry
+from repro.obs.trace import configure as trace_configure
+from repro.obs.trace import get_tracer
 from repro.plan import apply as plan_apply
 from repro.plan.artifact import Plan
 from repro.plan.solver import solve_for_topology
@@ -156,6 +160,12 @@ class ElasticConfig:
     # elected host solves, peers adopt the committed coap-plan/v1.
     fleet_dir: Optional[str] = None
     host_id: str = "host-0"
+    # Span-trace journal (obs/trace.py): when set, every attempt records
+    # restore/migrate/compile/step/checkpoint spans here (exportable to
+    # Perfetto via obs.trace.export_perfetto, fittable into a
+    # coap-calib/v1 artifact via obs.calib.build_from_trace). Serialized
+    # with the rest of the config, so spawned workers trace too.
+    trace_path: Optional[str] = None
 
 
 def elastic_config_to_dict(cfg: ElasticConfig) -> Dict[str, Any]:
@@ -305,6 +315,7 @@ class ElasticSupervisor:
         shared JSON-lines journal — the channel a worker process uses to
         report resumes/migrations back across the process boundary."""
         self.events.append(event)
+        get_registry().inc(f"events/{event[0]}")
         path = self.cfg.events_path
         if path:
             parent = os.path.dirname(path)
@@ -390,6 +401,9 @@ class ElasticSupervisor:
         with the restore/migrate wall-time split."""
         timings = {"restore_s": 0.0, "migrate_s": 0.0}
         cfg = self.cfg
+        tracer = get_tracer()
+        reg = get_registry()
+        reg.set_phase("restore")
         for step in reversed(ckpt.steps(cfg.ckpt_dir)):
             try:
                 try:
@@ -420,33 +434,40 @@ class ElasticSupervisor:
                     # Identical plan (or legacy checkpoint without one):
                     # direct restore into the target template — the codec-
                     # aware manifest handles stacked/per-leaf differences.
-                    template = self._template(tx)
-                    mesh = cfg.mesh
-                    spec_tree = None
-                    if mesh is not None:
-                        from repro.distributed.sharding import replicated_specs
+                    with tracer.span("elastic/restore", step=step):
+                        template = self._template(tx)
+                        mesh = cfg.mesh
+                        spec_tree = None
+                        if mesh is not None:
+                            from repro.distributed.sharding import (
+                                replicated_specs,
+                            )
 
-                        spec_tree = replicated_specs(template)
-                    state = ckpt.restore(
-                        cfg.ckpt_dir, template, step=step,
-                        mesh=mesh, spec_tree=spec_tree,
-                    )
+                            spec_tree = replicated_specs(template)
+                        state = ckpt.restore(
+                            cfg.ckpt_dir, template, step=step,
+                            mesh=mesh, spec_tree=spec_tree,
+                        )
                     timings["restore_s"] = time.perf_counter() - t0
                 else:
                     # Replan happened: restore under the SOURCE plan's
                     # exact layout, then migrate to the target.
-                    src_tx = self._tx_for(src_plan)
-                    state = ckpt.restore(
-                        cfg.ckpt_dir, self._template(src_tx), step=step
-                    )
+                    with tracer.span("elastic/restore", step=step,
+                                     replanned=True):
+                        src_tx = self._tx_for(src_plan)
+                        state = ckpt.restore(
+                            cfg.ckpt_dir, self._template(src_tx), step=step
+                        )
                     timings["restore_s"] = time.perf_counter() - t0
                     t1 = time.perf_counter()
-                    opt = migrate_opt_state(
-                        state.opt_state, src_plan, dst_plan,
-                        self._abstract_params, self.ocfg,
-                    )
-                    opt = jax.tree_util.tree_map(jnp.asarray, opt)
-                    state = state._replace(opt_state=opt)
+                    reg.set_phase("migrate")
+                    with tracer.span("elastic/migrate", step=step):
+                        opt = migrate_opt_state(
+                            state.opt_state, src_plan, dst_plan,
+                            self._abstract_params, self.ocfg,
+                        )
+                        opt = jax.tree_util.tree_map(jnp.asarray, opt)
+                        state = state._replace(opt_state=opt)
                     timings["migrate_s"] = time.perf_counter() - t1
                     self._emit(("migrate", step))
                 return state, step, timings
@@ -464,6 +485,10 @@ class ElasticSupervisor:
         what an out-of-process worker executes (``launch/worker.py``);
         :meth:`run` drives it in-process under the restart policy."""
         cfg = self.cfg
+        if cfg.trace_path:
+            trace_configure(cfg.trace_path, host=cfg.host_id)
+        tracer = get_tracer()
+        reg = get_registry()
         # A notice acted on by the PREVIOUS attempt is consumed here; a
         # live notice always arrives after the attempt is underway.
         if cfg.notice_path and os.path.exists(cfg.notice_path):
@@ -473,10 +498,13 @@ class ElasticSupervisor:
             refresher = Heartbeat(
                 cfg.heartbeat_path, timeout=cfg.heartbeat_timeout_s
             ).auto(cfg.heartbeat_interval_s)
-        with refresher:
+        with refresher, tracer.span("elastic/attempt", attempt=attempt):
+            reg.set_phase("replan")
             topo = self.current_topology()
-            plan = self.plan_for(topo)
-            tx = self._tx_for(plan)
+            with tracer.span("elastic/replan", attempt=attempt,
+                             n_devices=topo.n_devices):
+                plan = self.plan_for(topo)
+                tx = self._tx_for(plan)
             state, step, timings = self.restore_into_plan(plan, tx)
             self.last_resume = {
                 "attempt": attempt,
@@ -486,6 +514,17 @@ class ElasticSupervisor:
                 **timings,
             }
             self._emit(("resume", attempt, step, topo.n_devices))
+            tracer.instant(
+                "elastic/resume", attempt=attempt, step=step,
+                n_devices=topo.n_devices, **timings,
+            )
+            refresh_schedule = None
+            if tracer.enabled:
+                # Step-span refresh attribution (and the calibration fit
+                # keyed on it) only matters when a trace is recorded.
+                refresh_schedule = obs_calib.planned_refresh_schedule(
+                    plan, self._abstract_params, self.ocfg
+                )
             loop_cfg = TrainLoopConfig(
                 total_steps=cfg.total_steps,
                 ckpt_dir=cfg.ckpt_dir,
@@ -501,6 +540,7 @@ class ElasticSupervisor:
                 ckpt_meta={"plan": plan.to_dict()},
                 notice_path=cfg.notice_path,
                 min_step_s=cfg.min_step_s,
+                refresh_schedule=refresh_schedule,
             )
             loop = TrainLoop(
                 self.model, tx, self.batch_fn, loop_cfg,
@@ -639,6 +679,8 @@ class ProcessSupervisor:
     # -- plumbing -----------------------------------------------------------
     def _emit(self, event: tuple) -> None:
         self.events.append(event)
+        get_registry().inc(f"supervisor/{event[0]}")
+        get_tracer().instant(f"supervisor/{event[0]}")
         path = self.cfg.events_path
         if path:
             with open(path, "a") as f:
@@ -751,6 +793,9 @@ class ProcessSupervisor:
                 policy=pcfg.policy,
             )
             if decision == "kill":
+                # Reactive kill on heartbeat evidence — distinct from the
+                # planned drain path in the counter taxonomy.
+                get_registry().inc("supervisor/reactive_kill")
                 proc.kill()
                 rc = self._reap(proc)
                 # The heartbeat verdict may have raced a clean handoff.

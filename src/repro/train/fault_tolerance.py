@@ -68,17 +68,31 @@ class Heartbeat:
     path: str
     timeout: float = 300.0
 
-    def beat(self, step: int, extra: Optional[Dict] = None):
+    def _write(self, payload: Dict) -> None:
+        """Atomic publish (write-temp + ``os.replace``) with a PER-WRITER
+        temp name: the training loop's ``beat`` and the refresher
+        daemon's ``touch`` run on different threads (and supervisor/
+        worker on different processes) against the same path — a shared
+        ``.tmp`` would let one writer replace a file the other is still
+        mid-``json.dump`` into, publishing a torn heartbeat that reads
+        as "missing" and gets a live worker killed."""
         parent = os.path.dirname(self.path)
         if parent:
             os.makedirs(parent, exist_ok=True)
+        tmp = f"{self.path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+
+    def beat(self, step: int, extra: Optional[Dict] = None):
         payload = {"step": step, "time": time.time()}
         if extra:
             payload.update(extra)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, self.path)
+        self._write(payload)
 
     def read(self) -> Optional[Dict]:
         """The full last-beat payload (step, time, any extras), or None."""
@@ -93,16 +107,20 @@ class Heartbeat:
         the last payload with a fresh timestamp. Used by the worker's
         auto-beat thread so liveness is process-liveness (a SIGKILL stops
         the refresher instantly) while ``step`` still tracks real
-        progress from the training loop's own beats."""
+        progress from the training loop's own beats.
+
+        The obs registry's ``phase`` gauge rides every touch: during long
+        non-stepping phases (restore, migrate, jit compile) the refresher
+        is the only writer, and operators (``launch/fleet_status``) want
+        to see WHICH phase the silent worker is in."""
+        from repro.obs.registry import get_registry
+
         payload = self.read() or {"step": 0}
         payload["time"] = time.time()
-        parent = os.path.dirname(self.path)
-        if parent:
-            os.makedirs(parent, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, self.path)
+        phase = get_registry().gauge("phase", None)
+        if phase is not None:
+            payload["phase"] = phase
+        self._write(payload)
 
     def auto(self, interval: float) -> "HeartbeatRefresher":
         """A daemon-thread refresher calling :meth:`touch` every

@@ -47,6 +47,9 @@ import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.registry import get_registry
+from repro.obs.trace import get_tracer
+
 
 def plan_digest(plan_dict: Dict) -> str:
     """Content address of a plan: sha256 over canonical (sorted-key,
@@ -140,11 +143,14 @@ class PlanConsensus:
     def stage(self, epoch: str, plan_dict: Dict) -> str:
         """Stage this host's proposal for ``epoch``; returns its digest."""
         digest = plan_digest(plan_dict)
-        _atomic_write_json(
-            os.path.join(self._edir(epoch), "props",
-                         _slug(self.host) + ".json"),
-            {"host": self.host, "digest": digest, "plan": plan_dict},
-        )
+        with get_tracer().span("fleet/propose", epoch=epoch,
+                               digest=digest[:12]):
+            _atomic_write_json(
+                os.path.join(self._edir(epoch), "props",
+                             _slug(self.host) + ".json"),
+                {"host": self.host, "digest": digest, "plan": plan_dict},
+            )
+        get_registry().inc("fleet/proposed")
         return digest
 
     def staged(self, epoch: str) -> List[Dict]:
@@ -177,15 +183,19 @@ class PlanConsensus:
         winner = min(props, key=lambda p: (p["digest"], p["host"]))
         path = os.path.join(self._edir(epoch), "plan.json")
         tmp = f"{path}.{_slug(self.host)}.{os.getpid()}.tmp"
-        with open(tmp, "w") as f:
-            json.dump(winner, f)
-        try:
-            os.link(tmp, path)  # atomic first-wins; complete content
-        except FileExistsError:
-            pass  # someone else landed first — adopt theirs below
-        finally:
-            os.unlink(tmp)
-        out = self.committed(epoch)
+        with get_tracer().span("fleet/commit", epoch=epoch,
+                               digest=winner["digest"][:12]):
+            with open(tmp, "w") as f:
+                json.dump(winner, f)
+            try:
+                os.link(tmp, path)  # atomic first-wins; complete content
+                get_registry().inc("fleet/commit_won")
+            except FileExistsError:
+                # someone else landed first — adopt theirs below
+                get_registry().inc("fleet/commit_lost")
+            finally:
+                os.unlink(tmp)
+            out = self.committed(epoch)
         assert out is not None  # link succeeded or a commit already existed
         return out
 
@@ -201,18 +211,23 @@ class PlanConsensus:
         self.beat()
         c = self.committed(epoch)
         if c is not None:
+            get_registry().inc("fleet/adopted")
             return c["plan"], "adopted"
         if self.leader() != self.host:
             deadline = self.time_fn() + self.cfg.adopt_timeout_s
-            while self.time_fn() < deadline:
-                c = self.committed(epoch)
-                if c is not None:
-                    return c["plan"], "adopted"
-                self.beat()
-                if self.leader() == self.host:
-                    break  # leader's lease lapsed — take over
-                self.sleep_fn(self.cfg.poll_interval_s)
-        self.stage(epoch, solve_fn())
+            with get_tracer().span("fleet/adopt_wait", epoch=epoch):
+                while self.time_fn() < deadline:
+                    c = self.committed(epoch)
+                    if c is not None:
+                        get_registry().inc("fleet/adopted")
+                        return c["plan"], "adopted"
+                    self.beat()
+                    if self.leader() == self.host:
+                        break  # leader's lease lapsed — take over
+                    self.sleep_fn(self.cfg.poll_interval_s)
+        with get_tracer().span("fleet/solve", epoch=epoch):
+            self.stage(epoch, solve_fn())
         c = self.commit(epoch)
         role = "published" if c["host"] == self.host else "adopted"
+        get_registry().inc(f"fleet/{role}")
         return c["plan"], role

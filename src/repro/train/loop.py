@@ -15,6 +15,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.registry import get_registry
+from repro.obs.trace import get_tracer
 from repro.train import checkpoint as ckpt
 from repro.train.fault_tolerance import (
     DrainPreemption,
@@ -56,6 +58,12 @@ class TrainLoopConfig:
     # races (notice vs kill vs heartbeat) testable on CPU where smoke
     # steps would otherwise finish in microseconds.
     min_step_s: float = 0.0
+    # Optional refresh-group attribution for step spans: a callable
+    # ``step -> [ {bucket, phase, size, frac, kind}, ... ]`` (see
+    # ``obs.calib.planned_refresh_schedule``). The elastic supervisor
+    # passes the planned schedule so a trace shows WHICH stagger groups
+    # refreshed on each step — what the calibration fit keys on.
+    refresh_schedule: Optional[Callable[[int], Any]] = None
 
 
 class TrainLoop:
@@ -116,9 +124,12 @@ class TrainLoop:
         acknowledge the notice, and hand control back as a planned
         preemption. The next attempt resumes from ``step``: zero lost."""
         cfg = self.cfg
+        get_registry().inc("loop/drain")
         if cfg.ckpt_dir:
-            ckpt.save(cfg.ckpt_dir, step, state, keep=cfg.ckpt_keep,
-                      meta=cfg.ckpt_meta)
+            with get_tracer().span("loop/checkpoint", step=step,
+                                   reason="drain"):
+                ckpt.save(cfg.ckpt_dir, step, state, keep=cfg.ckpt_keep,
+                          meta=cfg.ckpt_meta)
         if cfg.notice_path:
             ack = cfg.notice_path + ".ack"
             tmp = ack + ".tmp"
@@ -129,7 +140,19 @@ class TrainLoop:
 
     # -- main ----------------------------------------------------------------
     def run(self) -> TrainState:
+        # The logger is closed in the finally: worker processes run one
+        # loop per attempt, and leaked jsonl handles accumulate across
+        # restarts otherwise. ``logger.history`` stays readable after.
+        try:
+            return self._run()
+        finally:
+            self.logger.close()
+
+    def _run(self) -> TrainState:
         cfg = self.cfg
+        tracer = get_tracer()
+        reg = get_registry()
+        reg.set_phase("train")
         state = self.init_or_restore()
         start = int(state.step)
         ceu_total = 0.0
@@ -143,21 +166,43 @@ class TrainLoop:
             if inj is not None:
                 inj.maybe_kill(step)
             batch = self.batch_fn(step, 0)
+            # Refresh-group attribution is computed host-side BEFORE the
+            # step (a pure function of (plan, step)) so the span carries
+            # exactly what the jitted update is about to do.
+            span_attrs = {"step": step}
+            if cfg.refresh_schedule is not None:
+                ev = cfg.refresh_schedule(step)
+                if ev:
+                    span_attrs["refresh"] = ev
+            if step == start:
+                # First execution of this loop instance traces + compiles.
+                span_attrs["compile"] = True
             t0 = time.time()
-            state, metrics = self._step_fn(state, batch)
-            jax.block_until_ready(state.params)
+            with tracer.span("loop/step", **span_attrs):
+                state, metrics = self._step_fn(state, batch)
+                jax.block_until_ready(state.params)
             dt = time.time() - t0
             if cfg.min_step_s > 0 and dt < cfg.min_step_s:
                 time.sleep(cfg.min_step_s - dt)
             if inj is not None:
                 dt += inj.slow_delay(step)
             slow = self.straggler.observe(dt)
+            if slow:
+                reg.inc("loop/straggler_step")
             ceu_total += float(metrics["ceu"])
             if self.heartbeat and not (
                 inj is not None and inj.heartbeat_silent(step)
             ):
                 self.heartbeat.beat(
-                    step, extra={"straggler_flagged": self.straggler.flagged}
+                    step,
+                    extra={
+                        "straggler_flagged": self.straggler.flagged,
+                        "phase": reg.gauge("phase", "train"),
+                        # The registry snapshot rides every beat: the
+                        # supervisor (and fleet_status) reads a worker's
+                        # counters with no extra channel.
+                        "counters": reg.snapshot()["counters"],
+                    },
                 )
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
                 row = dict(metrics)
@@ -173,13 +218,18 @@ class TrainLoop:
                 and cfg.ckpt_every
                 and (step + 1) % cfg.ckpt_every == 0
             ):
-                ckpt.save(cfg.ckpt_dir, step + 1, state, keep=cfg.ckpt_keep,
-                          meta=cfg.ckpt_meta)
+                with tracer.span("loop/checkpoint", step=step + 1):
+                    ckpt.save(cfg.ckpt_dir, step + 1, state,
+                              keep=cfg.ckpt_keep, meta=cfg.ckpt_meta)
+                reg.inc("ckpt/save")
                 if inj is not None:
                     inj.after_save(cfg.ckpt_dir, step + 1)
         if cfg.ckpt_dir:
-            ckpt.save(cfg.ckpt_dir, int(state.step), state, keep=cfg.ckpt_keep,
-                      meta=cfg.ckpt_meta)
+            with tracer.span("loop/checkpoint", step=int(state.step),
+                             reason="final"):
+                ckpt.save(cfg.ckpt_dir, int(state.step), state,
+                          keep=cfg.ckpt_keep, meta=cfg.ckpt_meta)
+            reg.inc("ckpt/save")
             if inj is not None:
                 inj.after_save(cfg.ckpt_dir, int(state.step))
         return state

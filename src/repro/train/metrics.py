@@ -34,7 +34,11 @@ class MetricsLogger:
     def log(self, step: int, metrics: Dict[str, Any], tokens: int = 0):
         now = time.time()
         row = {"step": step}
-        for k, v in metrics.items():
+        # ONE transfer for the whole row: per-key float(v) would issue a
+        # blocking device sync per metric, serializing the host against
+        # the device once per key every log step.
+        fetched = jax.device_get(metrics)
+        for k, v in fetched.items():
             try:
                 row[k] = float(v)
             except (TypeError, ValueError):
@@ -53,6 +57,15 @@ class MetricsLogger:
     def close(self):
         if self._f:
             self._f.close()
+            self._f = None
+
+    # Context-manager close so worker processes (which run many logger
+    # lifetimes per process across restarts) never leak file handles.
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def ppl(ce: float) -> float:
