@@ -1,6 +1,7 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
-.PHONY: test smoke plan plan-smoke fault-smoke obs-smoke bench-overhead \
-	bench-refresh bench-state bench-conv bench-plan bench-elastic bench-obs
+.PHONY: test smoke plan plan-smoke fault-smoke obs-smoke dist-smoke \
+	bench-overhead bench-refresh bench-state bench-conv bench-plan \
+	bench-elastic bench-obs bench-sync
 
 test:
 	./scripts/ci.sh
@@ -32,6 +33,13 @@ fault-smoke:
 # all checked. Part of the default `make test` path via scripts/ci.sh.
 obs-smoke:
 	./scripts/ci.sh obs-smoke
+
+# Compressed cross-pod sync smoke: fp32 + quantized 2-pod equivalence,
+# the sync_codes int8 collective, stagger/override cadence parity and the
+# wire-format gate, on the 8-device CPU test mesh under interpret-mode
+# kernels. Part of the default `make test` path via scripts/ci.sh.
+dist-smoke:
+	./scripts/ci.sh dist-smoke
 
 # Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
@@ -71,3 +79,10 @@ bench-elastic:
 # at <3% tracing / <0.1% disabled).
 bench-obs:
 	PYTHONPATH=src:. python benchmarks/run.py --only obs
+
+# Regenerates BENCH_sync.json (cross-pod wire bytes/step on the LLaMA-1B
+# bucket structure: full-G fp32 vs r-rank fp32 vs r-rank int8+scales, with
+# the >=3x int8-vs-fp32-compressed gate enforced by
+# tests/test_benchmarks_sync.py).
+bench-sync:
+	PYTHONPATH=src:. python benchmarks/run.py --only sync

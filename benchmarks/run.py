@@ -17,7 +17,7 @@ def main() -> None:
                     help="trim the largest shapes / fewest steps")
     ap.add_argument("--only", default="",
                     help="comma list: memory,svd,overhead,refresh,state,"
-                         "conv,plan,elastic,obs,fig3,table7,fig4,t5q")
+                         "conv,plan,elastic,obs,sync,fig3,table7,fig4,t5q")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,6 +48,8 @@ def main() -> None:
         overhead.run_elastic(csv, fast=args.fast)
     if want("obs"):
         overhead.run_obs(csv, fast=args.fast)
+    if want("sync"):
+        overhead.run_sync(csv, fast=args.fast)
     steps = 80 if args.fast else 200
     if want("fig3"):
         convergence.fig3_ceu(csv, steps=steps)

@@ -6,6 +6,7 @@
 #   ./scripts/ci.sh plan-smoke   plan smoke only (planner/accounting edits)
 #   ./scripts/ci.sh fault-smoke  elastic/fault-injection smoke (train/ edits)
 #   ./scripts/ci.sh obs-smoke    observability smoke (obs/ + fleet_status edits)
+#   ./scripts/ci.sh dist-smoke   compressed cross-pod sync smoke (distributed/ edits)
 #
 # The smoke subset re-runs the fused-kernel correctness tests with the
 # actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
@@ -153,6 +154,29 @@ print("obs smoke OK:", len(rows), "trace rows,",
 PY
 }
 
+dist_smoke() {
+  echo "== compressed cross-pod sync smoke (CPU test mesh) =="
+  # The distributed/compression.py parity surface on the 8-device CPU test
+  # mesh: fp32 + QUANTIZED 2-pod equivalence (bit-exact int8 codes where
+  # pmean is the identity), the sync_codes int8 collective (telescoping EF
+  # + end-to-end), stagger/override cadence parity vs the core transform,
+  # and the loud structural ValueErrors. The in-subprocess tests force
+  # their own device count; interpret mode keeps the codec bodies honest
+  # for the in-process schedule tests. The wire-format gate rides along
+  # (BENCH_sync.json methodology).
+  REPRO_PALLAS=interpret python -m pytest -q \
+    tests/test_distributed.py::test_crosspod_compression_matches_uncompressed \
+    tests/test_distributed.py::test_crosspod_conv_compression_matches_uncompressed \
+    tests/test_distributed.py::test_crosspod_quantized_matches_single_pod \
+    tests/test_distributed.py::test_crosspod_sync_codes_int8_collective \
+    tests/test_distributed.py::test_compressed_stagger_cadence_matches_core \
+    tests/test_distributed.py::test_compressed_per_bucket_t_update_override_matches_core \
+    tests/test_distributed.py::test_compressed_perleaf_reordered_state_raises \
+    tests/test_distributed.py::test_compressed_sync_codes_requires_ef_sidecar \
+    tests/test_bucketing.py::test_compressed_update_accepts_quantized_states \
+    tests/test_benchmarks_sync.py
+}
+
 if [[ "${1:-}" == "smoke" ]]; then
   smoke
   exit 0
@@ -169,6 +193,10 @@ if [[ "${1:-}" == "obs-smoke" ]]; then
   obs_smoke
   exit 0
 fi
+if [[ "${1:-}" == "dist-smoke" ]]; then
+  dist_smoke
+  exit 0
+fi
 
 echo "== tier-1 suite =="
 python -m pytest -x -q
@@ -176,3 +204,4 @@ smoke
 plan_smoke
 fault_smoke
 obs_smoke
+dist_smoke

@@ -36,6 +36,10 @@ CATEGORY_GROUPS = {
     "factored_v": "moment_state",
     "projection": "projector",
     "quant_scales": "quant_sidecar",
+    # The int8-collective error-feedback accumulator (sync_codes) is comms
+    # state, not optimizer moments: grouped under 'other' so the paper's
+    # moment-reduction ratios are unaffected by enabling the wire codec.
+    "ef_sidecar": "other",
     "other": "other",
 }
 
@@ -105,9 +109,11 @@ def _leaf_bytes(x) -> int:
 
 _CATEGORY_FIELDS = {
     ProjLeaf: {"p": "projection", "m": "moments", "v": "moments",
-               "m_scale": "quant_scales", "v_scale": "quant_scales"},
+               "m_scale": "quant_scales", "v_scale": "quant_scales",
+               "ef": "ef_sidecar"},
     ConvLeaf: {"p_o": "projection", "p_i": "projection", "m": "moments",
-               "v": "moments", "m_scale": "quant_scales", "v_scale": "quant_scales"},
+               "v": "moments", "m_scale": "quant_scales",
+               "v_scale": "quant_scales", "ef": "ef_sidecar"},
     DenseLeaf: {"mu": "dense_moments", "nu": "dense_moments",
                 "mu_scale": "quant_scales", "nu_scale": "quant_scales"},
     ProjFactorLeaf: {"p": "projection", "m": "moments", "row": "factored_v",
@@ -132,6 +138,8 @@ def optimizer_state_bytes(opt_state: Any) -> MemoryReport:
         if t in _CATEGORY_FIELDS:
             for field, cat in _CATEGORY_FIELDS[t].items():
                 val = getattr(node, field)
+                if val is None:  # absent sidecar (e.g. ef without sync_codes)
+                    continue
                 # A field may be a single array (leaf states) or a whole
                 # param-shaped subtree (ScaleByAdamState.mu/nu).
                 b = sum(

@@ -159,6 +159,8 @@ def make_optimizer(cfg: OptimizerConfig) -> optim.GradientTransformation:
                 seed=cfg.seed,
                 update_scale=0.25 if strategy == "galore" else cfg.update_scale,
                 stacked_state=cfg.stacked_state,
+                stagger=cfg.stagger,
+                stagger_groups=cfg.stagger_groups,
             )
         )
     else:

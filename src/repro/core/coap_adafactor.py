@@ -23,13 +23,17 @@ benchmarks; the literal one diverges for any η < 1, corroborating the typo
 Because learning rate is *inside* ΔW here, this transformation is terminal:
 chain it with ``scale(-1)`` only (no extra lr scaling).
 
-``stacked_state=True`` stores the leaf states pre-stacked per congruence
-bucket (``core/stacked_state.py`` — the same codec the Adam variant,
-checkpointing, accounting and compression use). The adafactor update still
-COMPUTES per leaf through ``leaf_view`` slices (bit-identical to the
-per-leaf mode by construction); porting the bucket+phase hot-path machinery
-from ``coap_adam.update_fn`` is the existing "staggered adafactor refresh"
-ROADMAP item.
+The update runs on the SAME bucket+phase hot-path machinery as the Adam
+variant (``coap_adam.update_fn``): congruent projected leaves compute as
+one stacked launch per bucket (``stacked_state=True`` additionally STORES
+them pre-stacked — no gather/scatter copies), refreshes follow the shared
+staggered schedule (``bucket_phases`` — the same allocation the elastic
+supervisor and the cross-pod compression path derive cadence from), and a
+plan's per-bucket overrides apply through ``_bucket_cfg``. Dense buckets
+vmap the per-leaf Adafactor step (the factored-iff-ndim≥2 branch is a
+static per-leaf property, preserved under vmap). Both storage modes share
+the bucketed compute, so they stay bit-identical by construction
+(``tests/test_stacked_state.py::test_stacked_adafactor_matches_per_leaf_bitwise``).
 
 CONV NOTE. Algorithm 2 has no Tucker-2 path: every non-projected leaf —
 conv ``(O,I,K1,K2)`` kernels included — takes the dense Adafactor path.
@@ -51,7 +55,13 @@ from jax import lax
 
 from repro.core import correlation, projector, recalibrate
 from repro.core import stacked_state
-from repro.core.coap_adam import ProjectedAdamConfig, _refresh_p, _maybe_transplant
+from repro.core.coap_adam import (
+    ProjectedAdamConfig,
+    _bucket_cfg,
+    _maybe_transplant,
+    _refresh_p,
+    bucket_phases,
+)
 from repro.core.projector import (
     KIND_DENSE,
     KIND_PROJECT,
@@ -155,32 +165,39 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
         denom = row[..., :, None] * col[..., None, :] + _EPS
         return jnp.sqrt(mean_r[..., None] / denom)
 
-    def _update_proj(leaf: ProjFactorLeaf, g, spec, count, t, idx, b2):
+    def _update_proj_bucket(bcfg, leaf: ProjFactorLeaf, g, spec, count, t,
+                            idx_arr, b2, phases):
+        """Algorithm 2 for a stacked bucket of congruent projected leaves
+        (leading (B,) axis everywhere; B == 1 for singleton buckets).
+        ``bcfg`` is the bucket-effective config (plan overrides applied);
+        ``phases`` staggers the refresh cadence exactly as in the Adam
+        variant — same ``_refresh_p`` group dispatch, same transplant
+        group structure."""
         gc = projector.to_canonical(g, spec).astype(jnp.float32)
         p_old = leaf.p
-        # _refresh_p operates on stacked buckets — lift to a B=1 stack (the
-        # original flat idx keeps flora's per-leaf RNG stream unchanged).
+
+        def m_loader(sl=slice(None)):
+            return leaf.m[sl].astype(jnp.float32)
+
         new_p, refreshed = _refresh_p(
-            cfg, spec, p_old[None], gc[None], lambda: leaf.m[None], count,
-            jnp.asarray([idx], jnp.int32),
+            bcfg, spec, p_old, gc, m_loader, count, idx_arr, phases
         )
-        new_p = new_p[0]
-        # _refresh_p returns a (B,)=(1,) refresh mask; this per-leaf path
-        # (synchronized schedule) consumes it as a scalar.
-        m = _maybe_transplant(cfg, leaf.m, p_old, new_p, refreshed[0])
+        m = _maybe_transplant(
+            bcfg, leaf.m, p_old, new_p, refreshed, phases, count
+        )
         g_proj = projector.project(gc, new_p)
         g2 = jnp.square(g_proj)
         new_row = b2 * leaf.row + (1.0 - b2) * jnp.sum(g2, axis=-1)
         new_col = b2 * leaf.col + (1.0 - b2) * jnp.sum(g2, axis=-2)
         vhat = _vhat(new_row, new_col)
-        if cfg.interpretation == "literal":
-            new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_proj
-            delta = cfg.b1 * new_m + (1.0 - cfg.b1) * cfg.learning_rate * vhat * g_proj
+        if bcfg.interpretation == "literal":
+            new_m = bcfg.b1 * m + (1.0 - bcfg.b1) * g_proj
+            delta = bcfg.b1 * new_m + (1.0 - bcfg.b1) * bcfg.learning_rate * vhat * g_proj
         else:
-            delta = cfg.b1 * m + (1.0 - cfg.b1) * cfg.learning_rate * vhat * g_proj
+            delta = bcfg.b1 * m + (1.0 - bcfg.b1) * bcfg.learning_rate * vhat * g_proj
             new_m = delta  # momentum over scaled updates (consistent units)
         upd_c = projector.backproject(delta, new_p)
-        upd = projector.from_canonical(upd_c, spec) * cfg.update_scale
+        upd = projector.from_canonical(upd_c, spec) * bcfg.update_scale
         return upd.astype(g.dtype), ProjFactorLeaf(
             p=new_p, m=new_m, row=new_row, col=new_col
         )
@@ -206,8 +223,15 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
         t = count + 1
         b2 = 1.0 - (t.astype(jnp.float32)) ** (-cfg.gamma)
         flat_u, treedef = jax.tree_util.tree_flatten_with_path(updates)
+        n_leaves = len(flat_u)
+
+        # THE bucket assignment (shared with the stacked-state codec, the
+        # checkpoint/accounting stack and the elastic supervisor) — under
+        # the adafactor classification: project buckets + dense buckets,
+        # never conv, never tail (module docstring CONV NOTE).
+        layout = _af_layout(cfg, flat_u)
+
         if cfg.stacked_state:
-            layout = _af_layout(cfg, flat_u)
             prev = state.leaves
             if (
                 not isinstance(prev, stacked_state.StackedLeaves)
@@ -217,24 +241,68 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
                     "stacked adafactor state does not match the gradient "
                     "tree (rules / model structure changed since init?)"
                 )
-            flat_s = [
-                stacked_state.leaf_view(prev, i) for i in range(len(flat_u))
-            ]
+            flat_s = None
         else:
+            prev = None
             flat_s = treedef.flatten_up_to(state.leaves)
-        new_updates, new_leaves = [], []
-        for idx, ((kp, g), leaf) in enumerate(zip(flat_u, flat_s)):
-            spec = cfg.rules.spec_for(path_str(kp), g.shape)
-            if spec.kind == KIND_PROJECT:
-                u, nl = _update_proj(leaf, g, spec, count, t, idx, b2)
-            else:
-                u, nl = _update_dense(leaf, g, t, b2)
-            new_updates.append(u)
-            new_leaves.append(nl)
+
+        bucket_cfgs = [_bucket_cfg(cfg, info) for info in layout.buckets]
+        # Per-leaf refresh phases: THE staggered allocation, shared with
+        # the Adam variant and every schedule consumer.
+        phase_by_bucket = bucket_phases(cfg, layout)
+
+        new_updates = [None] * n_leaves
+        new_buckets = [None] * len(layout.buckets)
+        new_flat = [None] * n_leaves  # per-leaf mode only
+
+        for bi, info in enumerate(layout.buckets):
+            is_proj = info.kind == stacked_state.BUCKET_PROJECT
+            bcfg = bucket_cfgs[bi]
+            phases = phase_by_bucket.get(bi)
+            if cfg.bucket_leaves:
+                slot_groups = [tuple(range(len(info.indices)))]
+            else:  # per-leaf A/B mode (stacked_state forbids this)
+                slot_groups = [(k,) for k in range(len(info.indices))]
+            for slots in slot_groups:
+                idxs = [info.indices[k] for k in slots]
+                g_stack = jnp.stack([flat_u[i][1] for i in idxs])
+                if cfg.stacked_state:
+                    # Hot-path win: the bucket state is ALREADY stacked —
+                    # no stack copy in, no scatter copy out.
+                    leaf_stack = prev.buckets[bi]
+                else:
+                    leaf_stack = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *[flat_s[i] for i in idxs],
+                    )
+                if is_proj:
+                    u_stack, nl_stack = _update_proj_bucket(
+                        bcfg, leaf_stack, g_stack, info.spec, count, t,
+                        jnp.asarray(idxs, jnp.int32), b2,
+                        tuple(phases[k] for k in slots),
+                    )
+                else:
+                    # The factored-iff-ndim>=2 branch is static per leaf
+                    # shape; vmap keeps it per-element while batching the
+                    # congruent bucket into one launch.
+                    u_stack, nl_stack = jax.vmap(
+                        lambda lf, gg: _update_dense(lf, gg, t, b2)
+                    )(leaf_stack, g_stack)
+                for b, i in enumerate(idxs):
+                    new_updates[i] = u_stack[b]
+                    if not cfg.stacked_state:
+                        new_flat[i] = jax.tree_util.tree_map(
+                            lambda x: x[b], nl_stack
+                        )
+                if cfg.stacked_state:
+                    new_buckets[bi] = nl_stack
+
         if cfg.stacked_state:
-            leaves_out = stacked_state.encode(prev.layout, new_leaves)
+            leaves_out = stacked_state.StackedLeaves(
+                new_buckets, prev.tail, prev.layout
+            )
         else:
-            leaves_out = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            leaves_out = jax.tree_util.tree_unflatten(treedef, new_flat)
         return (
             jax.tree_util.tree_unflatten(treedef, new_updates),
             ProjectedAdafactorState(count=count + 1, leaves=leaves_out),
@@ -257,6 +325,8 @@ def coap_adafactor(
     seed: int = 0,
     update_scale: float = 1.0,
     stacked_state: bool = False,
+    stagger: bool = True,
+    stagger_groups: int = 8,
 ) -> GradientTransformation:
     """Adafactor+COAP per Algorithm 2 (η inside; terminal sign flip only)."""
     cfg = ProjectedAdafactorConfig(
@@ -272,5 +342,7 @@ def coap_adafactor(
         learning_rate=learning_rate,
         update_scale=update_scale,
         stacked_state=stacked_state,
+        stagger=stagger,
+        stagger_groups=stagger_groups,
     )
     return chain(scale_by_projected_adafactor(cfg), scale(-1.0))

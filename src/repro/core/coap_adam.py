@@ -126,13 +126,19 @@ class ProjLeaf(NamedTuple):
 
     Quantized moments are shape-preserving int8 under the row-block codec:
     ``m``/``v`` stay (…,m,r) int8 and ``*_scale`` are (…,m,ceil(r/block))
-    fp32 — the layout the fused q8 kernel consumes tile-locally."""
+    fp32 — the layout the fused q8 kernel consumes tile-locally.
+
+    ``ef`` is the int8-collective error-feedback accumulator (fp32, moment
+    shape) used by the cross-pod ``sync_codes`` path; ``None`` (an empty
+    pytree slot — zero bytes, zero checkpoint entries) unless the config
+    enables ``sync_codes``. Single-pod updates carry it through untouched."""
 
     p: Any
     m: Any
     v: Any
     m_scale: Any  # codec scales; zeros((1,)) placeholders when fp32
     v_scale: Any
+    ef: Any = None  # sync_codes error-feedback sidecar (distributed only)
 
 
 class DenseLeaf(NamedTuple):
@@ -151,6 +157,7 @@ class ConvLeaf(NamedTuple):
     v: Any
     m_scale: Any
     v_scale: Any
+    ef: Any = None  # sync_codes error-feedback sidecar (core shape; see ProjLeaf)
 
 
 class ProjectedAdamState(NamedTuple):
@@ -215,6 +222,12 @@ class ProjectedAdamConfig:
     stagger: bool = True  # phase-staggered refresh schedule (module docstring)
     stagger_groups: int = 8  # max phase groups per congruent bucket
     stacked_state: bool = False  # store state pre-stacked (module docstring)
+    # Cross-pod int8 collective (distributed/compression.py): all-reduce the
+    # int8 codes + per-block scales of G_proj instead of fp32 values, with a
+    # per-leaf fp32 error-feedback accumulator (ProjLeaf/ConvLeaf.ef). The
+    # knob lives here so init_fn allocates the sidecar and the byte model
+    # (plan/bytes.py) predicts it; single-pod updates ignore it.
+    sync_codes: bool = False
     # Plan-driven per-bucket knob overrides (quantize / T_u / stagger_groups;
     # repro/plan consumes coap-plan/v1 artifacts into this field).
     overrides: Optional[PlanOverrides] = None
@@ -310,18 +323,40 @@ def _leaf_cfg(cfg: ProjectedAdamConfig, path: str) -> ProjectedAdamConfig:
 def _bucket_cfg(cfg: ProjectedAdamConfig, info) -> ProjectedAdamConfig:
     """The effective config for a congruence bucket. Storage codec and
     refresh cadence are bucket-level properties, so every member path must
-    resolve to identical overrides."""
+    resolve to the same EFFECTIVE knobs. Overrides are normalized against
+    the global config before comparing: an entry that merely restates the
+    global value (or a reordered ``entries`` container) is not a conflict —
+    only a genuinely different effective (quantize, T_u, stagger_groups)
+    triple raises, and the error names a path from each side."""
     if cfg.overrides is None:
         return cfg
-    ovs = {cfg.overrides.for_path(p) for p in info.paths}
-    if len(ovs) > 1:
-        raise ValueError(
-            f"plan overrides disagree within bucket {info.shape}/{info.dtype}"
-            f" (paths {info.paths[:3]}...): a bucket's quantize/T_u/"
-            "stagger_groups must be uniform — assign overrides per bucket, "
-            "not per leaf"
+
+    def norm(ov: Optional[LeafOverrides]):
+        if ov is None:
+            return (cfg.quantize, cfg.t_update, cfg.stagger_groups)
+        return (
+            cfg.quantize if ov.quantize is None else ov.quantize,
+            cfg.t_update if ov.t_update is None else ov.t_update,
+            cfg.stagger_groups
+            if ov.stagger_groups is None
+            else ov.stagger_groups,
         )
-    return _apply_overrides(cfg, next(iter(ovs)))
+
+    groups: dict = {}
+    for p in info.paths:
+        groups.setdefault(norm(cfg.overrides.for_path(p)), []).append(p)
+    if len(groups) > 1:
+        (ka, pa), (kb, pb) = list(groups.items())[:2]
+        raise ValueError(
+            f"plan overrides disagree within bucket {info.shape}/{info.dtype}:"
+            f" {pa[0]!r} resolves to (quantize, t_update, stagger_groups)="
+            f"{ka} but {pb[0]!r} to {kb} — a bucket's knobs must be uniform;"
+            " assign overrides per bucket, not per leaf"
+        )
+    # All members normalize identically; any representative override yields
+    # the same effective config (``_apply_overrides`` only replaces knobs
+    # that actually differ from the global value).
+    return _apply_overrides(cfg, cfg.overrides.for_path(info.paths[0]))
 
 
 def _layout_of(cfg: ProjectedAdamConfig, flat) -> stacked_state.StackedLayout:
@@ -676,7 +711,10 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 msh = projector.moment_shape(leaf.shape, spec)
                 m0, ms0 = _init_stored_proj(msh, lcfg)
                 v0, vs0 = _init_stored_proj(msh, lcfg)
-                leaves.append(ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0))
+                ef0 = jnp.zeros(msh, jnp.float32) if cfg.sync_codes else None
+                leaves.append(
+                    ProjLeaf(p=p0, m=m0, v=v0, m_scale=ms0, v_scale=vs0, ef=ef0)
+                )
             elif spec.kind == KIND_CONV:
                 po, pi = conv_mod.init_factors(
                     jax.random.fold_in(key, idx), leaf.shape, spec
@@ -684,8 +722,10 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 msh = conv_mod.core_shape(leaf.shape, spec)
                 m0, ms0 = _init_stored(msh, lcfg)
                 v0, vs0 = _init_stored(msh, lcfg)
+                ef0 = jnp.zeros(msh, jnp.float32) if cfg.sync_codes else None
                 leaves.append(
-                    ConvLeaf(p_o=po, p_i=pi, m=m0, v=v0, m_scale=ms0, v_scale=vs0)
+                    ConvLeaf(p_o=po, p_i=pi, m=m0, v=v0, m_scale=ms0,
+                             v_scale=vs0, ef=ef0)
                 )
             else:
                 m0, ms0 = _init_stored(leaf.shape, lcfg)
@@ -796,7 +836,8 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                     gc, new_p, m_q, m_s, leaf.v, leaf.v_scale, t,
                     b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, block=cfg.quant_block,
                 )
-            new_leaf = ProjLeaf(p=new_p, m=nmq, v=nvq, m_scale=nms, v_scale=nvs)
+            new_leaf = ProjLeaf(p=new_p, m=nmq, v=nvq, m_scale=nms,
+                                v_scale=nvs, ef=leaf.ef)
         else:
             m = m_loader()
             v = leaf.v.astype(jnp.float32)
@@ -822,6 +863,7 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
                 v=new_v.astype(cfg.state_dtype),
                 m_scale=leaf.m_scale,  # fp32 placeholders pass through
                 v_scale=leaf.v_scale,
+                ef=leaf.ef,
             )
         update = projector.from_canonical(update_c, spec) * cfg.update_scale
         return update.astype(g.dtype), new_leaf

@@ -319,7 +319,7 @@ def update_conv_bucket(cfg, leaf, g, spec: ProjSpec, count, t, idx_arr,
     sm, sms = _store_stack(new_m, cfg)
     sv, svs = _store_stack(new_v, cfg)
     return update.astype(g.dtype), ConvLeaf(
-        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs
+        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs, ef=leaf.ef
     )
 
 
@@ -354,5 +354,5 @@ def update_conv_leaf(cfg, leaf, g, spec: ProjSpec, count, t, leaf_idx):
     sm, sms = _store(new_m, cfg)
     sv, svs = _store(new_v, cfg)
     return update.astype(g.dtype), ConvLeaf(
-        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs
+        p_o=p_o, p_i=p_i, m=sm, v=sv, m_scale=sms, v_scale=svs, ef=leaf.ef
     )

@@ -759,6 +759,15 @@ def migrate(
     sqb = quant_block if src_quant_block is None else src_quant_block
     src_layout = src.layout
     src_states = decode(src)
+    # RESET — the sync_codes error-feedback sidecar (ProjLeaf/ConvLeaf.ef)
+    # never migrates: it accumulates COLLECTIVE rounding residue of the
+    # int8 all-reduce, which is meaningless under a new layout/topology
+    # (and plans do not own the knob). Dropping it keeps every migration
+    # byte-exact against a fresh target init, like the scale placeholders.
+    src_states = [
+        s._replace(ef=None) if getattr(s, "ef", None) is not None else s
+        for s in src_states
+    ]
 
     by_path = {}
     for info in src_layout.buckets:

@@ -93,6 +93,7 @@ def planned_config(plan: Plan, ocfg) -> ProjectedAdamConfig:
         stagger=True,
         stagger_groups=g.stagger_groups,
         stacked_state=g.stacked_state,
+        sync_codes=g.sync_codes,
         overrides=plan_overrides(plan),
     )
 

@@ -58,6 +58,11 @@ class PlanGlobals:
     eqn6_lr: float = 0.1
     rank_compression: float = 4.0  # quality floor: r >= min(m,n)/c
     min_dim: int = 128
+    # Cross-pod int8 collective (distributed/compression.py): when True the
+    # constructed optimizer allocates the error-feedback sidecar and the
+    # predicted bytes include it ('ef_sidecar'). Defaults False — absent
+    # from older artifacts, which decode unchanged.
+    sync_codes: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

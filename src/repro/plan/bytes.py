@@ -32,6 +32,7 @@ CAT_PROJECTION = "projection"
 CAT_MOMENTS = "moments"
 CAT_DENSE_MOMENTS = "dense_moments"
 CAT_SCALES = "quant_scales"
+CAT_EF = "ef_sidecar"  # sync_codes error-feedback accumulator (fp32)
 CAT_OTHER = "other"
 
 
@@ -58,9 +59,13 @@ def _merge(into: Dict[str, int], add: Dict[str, int], times: int = 1) -> None:
 
 def proj_leaf_bytes(
     shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
-    block: int = kref.QUANT_BLOCK,
+    block: int = kref.QUANT_BLOCK, sync_codes: bool = False,
 ) -> Dict[str, int]:
-    """One ``ProjLeaf``: P ``lead+(n, r)``; moments ``lead+(m, r)``."""
+    """One ``ProjLeaf``: P ``lead+(n, r)``; moments ``lead+(m, r)``.
+
+    ``sync_codes`` adds the cross-pod error-feedback accumulator (fp32,
+    moment shape; ``ProjLeaf.ef``) — absent (zero bytes, not a placeholder)
+    when the int8 collective is off."""
     lead, m, n = _canonical_mn(shape, spec)
     r = int(spec.rank)
     out = {CAT_PROJECTION: lead * n * r * state_itemsize}
@@ -71,16 +76,19 @@ def proj_leaf_bytes(
     else:
         out[CAT_MOMENTS] = 2 * lead * m * r * state_itemsize
         out[CAT_SCALES] = 2 * 4  # (1,) fp32 placeholders
+    if sync_codes:
+        out[CAT_EF] = lead * m * r * 4
     return out
 
 
 def conv_leaf_bytes(
     shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
-    block: int = kref.QUANT_BLOCK,
+    block: int = kref.QUANT_BLOCK, sync_codes: bool = False,
 ) -> Dict[str, int]:
     """One ``ConvLeaf``: factors ``(O, r_O)``/``(I, r_I)`` fp32; core
     moments ``(r_O, r_I, K1, K2)`` under the flat int8 codec when
-    quantized."""
+    quantized. ``sync_codes`` adds the fp32 core-shaped error-feedback
+    accumulator (``ConvLeaf.ef``)."""
     o, i = int(shape[0]), int(shape[1])
     core = int(spec.rank_o) * int(spec.rank_i) * _numel(shape[2:])
     out = {CAT_PROJECTION: (o * spec.rank_o + i * spec.rank_i) * 4}
@@ -91,6 +99,8 @@ def conv_leaf_bytes(
     else:
         out[CAT_MOMENTS] = 2 * core * state_itemsize
         out[CAT_SCALES] = 2 * 4
+    if sync_codes:
+        out[CAT_EF] = core * 4
     return out
 
 
@@ -109,12 +119,17 @@ def dense_leaf_bytes(
 
 def leaf_state_bytes(
     shape, spec: ProjSpec, quantize: bool, state_itemsize: int = 4,
-    block: int = kref.QUANT_BLOCK,
+    block: int = kref.QUANT_BLOCK, sync_codes: bool = False,
 ) -> Dict[str, int]:
     if spec.kind == KIND_PROJECT:
-        return proj_leaf_bytes(shape, spec, quantize, state_itemsize, block)
+        return proj_leaf_bytes(
+            shape, spec, quantize, state_itemsize, block, sync_codes
+        )
     if spec.kind == KIND_CONV:
-        return conv_leaf_bytes(shape, spec, quantize, state_itemsize, block)
+        return conv_leaf_bytes(
+            shape, spec, quantize, state_itemsize, block, sync_codes
+        )
+    # Dense leaves sync full fp32 gradients (small); no EF sidecar.
     return dense_leaf_bytes(shape, quantize, state_itemsize, block)
 
 
@@ -124,11 +139,14 @@ def layout_state_report(
     quantize_for: Callable[[str], bool],
     state_itemsize: int = 4,
     block: int = kref.QUANT_BLOCK,
+    sync_codes: bool = False,
 ) -> Tuple[Dict[str, int], List[Dict[str, int]]]:
     """Predicted ``scale_by_projected_adam`` state bytes for a layout.
 
     ``shapes[i]`` is the i-th flat leaf's shape; ``quantize_for(path)``
-    resolves the per-leaf storage codec (a plan's per-bucket knob). Returns
+    resolves the per-leaf storage codec (a plan's per-bucket knob);
+    ``sync_codes`` adds the int8-collective error-feedback sidecar on every
+    projected/conv leaf (a tree-wide knob, matching the config). Returns
     ``(by_category_total, per_bucket)`` where ``per_bucket`` aligns with
     ``layout.buckets`` followed by ``layout.tail``. The total includes the
     transform's own step counter (4 bytes, 'other') — chain-level scalars
@@ -139,7 +157,8 @@ def layout_state_report(
     for info in layout.buckets:
         q = quantize_for(info.paths[0])
         one = leaf_state_bytes(
-            shapes[info.indices[0]], info.spec, q, state_itemsize, block
+            shapes[info.indices[0]], info.spec, q, state_itemsize, block,
+            sync_codes,
         )
         mine: Dict[str, int] = {}
         _merge(mine, one, times=len(info.indices))
@@ -148,7 +167,7 @@ def layout_state_report(
     for t in layout.tail:
         one = leaf_state_bytes(
             shapes[t.index], t.spec, quantize_for(t.path), state_itemsize,
-            block,
+            block, sync_codes,
         )
         per_bucket.append(dict(one))
         _merge(total, one)

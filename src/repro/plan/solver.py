@@ -108,6 +108,7 @@ def solve(
     vmem_budget: Optional[int] = None,
     prev_plan: Optional[Plan] = None,
     resume_horizon_steps: int = 0,
+    sync_codes: bool = False,
 ) -> Plan:
     """Plan ``params`` (a concrete or abstract pytree) under
     ``budget_bytes`` (``None`` = unconstrained: keep the quality-preferred
@@ -222,7 +223,8 @@ def solve(
 
     def bucket_bytes(info, q: bool) -> Dict[str, int]:
         one = pbytes.leaf_state_bytes(
-            shapes[info.indices[0]], info.spec, q, state_itemsize, quant_block
+            shapes[info.indices[0]], info.spec, q, state_itemsize,
+            quant_block, sync_codes,
         )
         return {k: v * len(info.indices) for k, v in one.items()}
 
@@ -279,7 +281,7 @@ def solve(
     }
     by_cat, per_bucket = pbytes.layout_state_report(
         layout, shapes, lambda p: quantize_by_path[p], state_itemsize,
-        quant_block,
+        quant_block, sync_codes,
     )
     bucket_plans: List[BucketPlan] = []
     step_seconds = 0.0
@@ -383,6 +385,7 @@ def solve(
             eqn6_lr=eqn6_lr,
             rank_compression=rank_compression,
             min_dim=min_dim,
+            sync_codes=sync_codes,
         ),
         buckets=bucket_plans,
         predicted=predicted,

@@ -1,0 +1,41 @@
+"""Cross-pod sync wire-format gate (the BENCH_sync.json methodology).
+
+``benchmarks/overhead.sync_report`` prices the per-step cross-pod bytes of
+the three sync schedules on the LLaMA-1B bucket structure: full-G fp32,
+r-rank fp32 compressed, and the ``sync_codes`` int8 collective (codes +
+per-block scales, refresh traffic amortized over T_u). The int8 path must
+cut the wire >=3x vs fp32 compressed sync — gated here so a codec or
+wire-model regression fails CI, not just the benchmark report.
+"""
+
+
+def test_sync_wire_int8_gate():
+    from benchmarks.overhead import sync_report
+
+    rep = sync_report()
+    assert rep["int8_vs_fp32_compressed_ratio"] >= 3.0, rep
+    # and compression beats full-G sync at all in the first place
+    assert rep["full_vs_compressed_fp32_ratio"] > 1.0, rep
+    assert rep["full_vs_compressed_int8_ratio"] > rep[
+        "full_vs_compressed_fp32_ratio"], rep
+
+
+def test_sync_report_structure():
+    """The report prices every bucket and the totals are consistent with
+    the per-bucket decomposition (no silently dropped buckets)."""
+    from benchmarks.overhead import sync_report
+
+    rep = sync_report()
+    totals = rep["totals_bytes_per_step"]
+    for key in ("full_fp32", "compressed_fp32", "compressed_int8"):
+        got = sum(
+            b["count"] * b["per_leaf_bytes_per_step"][key]
+            for b in rep["buckets"]
+        )
+        assert abs(totals[key] - got) < 1e-6 * totals[key], key
+    for b in rep["buckets"]:
+        # int8 wire = 1B codes + fp32 block scales + amortized refresh;
+        # scales must be priced (they are the honest part of the format)
+        per = b["per_leaf_bytes_per_step"]
+        assert per["int8_scale_bytes"] > 0
+        assert per["compressed_int8"] < per["compressed_fp32"]

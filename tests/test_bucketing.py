@@ -172,18 +172,36 @@ def test_q8_fused_bytes_accessed_ratio_llama1b():
         assert row["launches_unfused"] == 8 and row["launches_fused"] == 1
 
 
-def test_compressed_update_rejects_quantized_states():
-    """compressed_update does fp32 arithmetic on raw moment arrays — under
-    the row-block int8 codec those are codes, so it must refuse loudly
-    instead of corrupting silently."""
+def test_compressed_update_accepts_quantized_states():
+    """compressed_update now runs the dequant→reduce→requant schedule for
+    int8 states (the former NotImplementedError): on a 1-pod mesh (pmean is
+    the identity) the quantized compressed step must run end-to-end and
+    emit int8 codes + finite updates. Multi-pod numerical parity lives in
+    tests/test_distributed.py."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
     from repro.distributed.compression import compressed_update
 
-    cfg = _cfg(quantize=True)
-    params = {"w": jnp.zeros((96, 64))}
+    cfg = _cfg(quantize=True, use_fused_kernel=False, t_update=2, lam=2)
+    params = {"w": jnp.zeros((96, 64)), "bias": jnp.zeros((7,))}
     tx = scale_by_projected_adam(cfg)
     state = tx.init(params)
-    with pytest.raises(NotImplementedError, match="quantize"):
-        compressed_update(cfg, _grads(params), state, "pod")
+    g = _grads(params)
+    mesh = jax.make_mesh((1,), ("pod",))
+
+    def body(gg, st):
+        return compressed_update(cfg, gg, st, "pod")
+
+    mapped = compat.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False, axis_names={"pod"},
+    )
+    for _ in range(3):
+        upd, state = jax.jit(mapped)(g, state)
+    assert state.leaves["w"].m.dtype == jnp.int8
+    for leaf in jax.tree_util.tree_leaves(upd):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
 
 
 def test_mixed_tree_full_optimizer_runs():

@@ -381,10 +381,13 @@ def test_mixed_overrides_within_bucket_rejected():
         scale_by_projected_adam(cfg).init(tree)
 
 
-def test_compression_guard_plan_uniform_vs_divergent_t_update():
+def test_compression_overrides_uniform_divergent_and_mixed():
     """compressed_update must ACCEPT solver-produced overrides (they
-    restate the global T_u on every bucket) and REJECT a bucket pinned to
-    a different cadence — its schedule comes from the global cfg only."""
+    restate the global T_u on every bucket — normalization, not identity,
+    decides uniformity), ACCEPT a bucket pinned to a genuinely different
+    cadence (per-bucket T_u is native now: the schedule tables are
+    per-leaf), and REJECT overrides that disagree WITHIN one congruence
+    bucket with an error naming the offending paths."""
     from repro.core.coap_adam import (
         ProjectedAdamConfig,
         scale_by_projected_adam,
@@ -403,19 +406,65 @@ def test_compression_guard_plan_uniform_vs_divergent_t_update():
     grads = _grads(tree)
     try:
         compressed_update(cfg, grads, state, "pod")
-    except NotImplementedError:
+    except ValueError:
         pytest.fail("uniform plan overrides must pass the guard")
     except Exception:
         pass  # pmean outside shard_map — the guard itself already passed
 
+    # Whole bucket pinned to a different cadence: supported natively (the
+    # compressed schedule is per-leaf; test_distributed pins the cadence
+    # parity against the core transform).
     divergent = dataclasses.replace(
+        cfg,
+        overrides=PlanOverrides(entries=(
+            ("blk0/w", LeafOverrides(t_update=g.t_update + 1)),
+            ("blk1/w", LeafOverrides(t_update=g.t_update + 1)),
+        )),
+    )
+    try:
+        compressed_update(divergent, grads, state, "pod")
+    except ValueError:
+        pytest.fail("per-bucket t_update overrides are supported natively")
+    except Exception:
+        pass  # pmean outside shard_map again
+
+    # Same override on only ONE member of the (blk0/w, blk1/w) bucket:
+    # genuinely mixed — loud ValueError naming both sides.
+    mixed = dataclasses.replace(
         cfg,
         overrides=PlanOverrides(entries=(
             ("blk0/w", LeafOverrides(t_update=g.t_update + 1)),
         )),
     )
-    with pytest.raises(NotImplementedError, match="t_update"):
-        compressed_update(divergent, grads, state, "pod")
+    with pytest.raises(ValueError, match="blk0/w"):
+        compressed_update(mixed, grads, state, "pod")
+
+
+def test_plan_sync_codes_ef_sidecar_byte_exact():
+    """solve(sync_codes=True) prices the int8-collective error-feedback
+    sidecar (fp32 per projected/conv moment core) and the plan STILL
+    verifies byte-exactly against the constructed optimizer — init_fn
+    allocates exactly the accumulators the byte model predicts."""
+    tree = _small_tree()
+    base = solve(tree, None, **_SOLVE_KW)
+    plan = solve(tree, None, sync_codes=True, **_SOLVE_KW)
+
+    pred = plan.predicted["by_category"]
+    assert pred.get("ef_sidecar", 0) > 0, pred
+    assert base.predicted["by_category"].get("ef_sidecar", 0) == 0
+    # the sidecar is the ONLY delta between the two plans
+    deltas = {
+        k: pred.get(k, 0) - base.predicted["by_category"].get(k, 0)
+        for k in set(pred) | set(base.predicted["by_category"])
+    }
+    assert {k: v for k, v in deltas.items() if v} == {
+        "ef_sidecar": pred["ef_sidecar"]
+    }, deltas
+
+    assert verify(plan, tree)["match"]
+    # the knob survives the artifact codec round-trip
+    assert Plan.from_dict(plan.to_dict()).globals_.sync_codes is True
+    assert Plan.from_dict(base.to_dict()).globals_.sync_codes is False
 
 
 # ---------------------------------------------------------------------------
