@@ -1,7 +1,8 @@
 # Convenience entry points (see scripts/ci.sh for the definitions).
 .PHONY: test smoke plan plan-smoke fault-smoke obs-smoke dist-smoke \
-	bench-overhead bench-refresh bench-state bench-conv bench-plan \
-	bench-elastic bench-obs bench-sync
+	health-smoke bench-overhead bench-refresh bench-state bench-conv \
+	bench-plan bench-elastic bench-obs bench-sync bench-health \
+	bench-quality bench-check
 
 test:
 	./scripts/ci.sh
@@ -40,6 +41,13 @@ obs-smoke:
 # kernels. Part of the default `make test` path via scripts/ci.sh.
 dist-smoke:
 	./scripts/ci.sh dist-smoke
+
+# Projection-health smoke: journal/verdict unit layer (injected numeric
+# pathologies firing RANK_STARVED/QUANT_SATURATED/...), solver feedback,
+# plus a health-journaled 10-step run checked through heartbeat gauges and
+# the fleet_status health column. Part of the default `make test` path.
+health-smoke:
+	./scripts/ci.sh health-smoke
 
 # Regenerates BENCH_overhead.json (fused vs unfused 8-bit traffic + launch
 # counts on LLaMA-1B shapes) alongside the overhead CSV rows.
@@ -86,3 +94,22 @@ bench-obs:
 # tests/test_benchmarks_sync.py).
 bench-sync:
 	PYTHONPATH=src:. python benchmarks/run.py --only sync
+
+# Regenerates BENCH_obs.json's `health` block (per-row record cost +
+# per-call observe_state cost vs a health-journaled run's measured step
+# time, gated at <1% overhead AND zero extra G round-trips outside
+# refresh steps).
+bench-health:
+	PYTHONPATH=src:. python benchmarks/run.py --only health
+
+# Regenerates BENCH_quality.json (eval-CE rank ladder, each run
+# health-journaled: the ranks whose runs fire RANK_STARVED should be
+# exactly the ranks whose quality visibly degrades vs AdamW).
+bench-quality:
+	PYTHONPATH=src:. python benchmarks/run.py --only quality
+
+# Compares the newest artifacts/bench_history.jsonl row (appended by
+# `python -m benchmarks.run --record`) against the previous one; fails on
+# any >20% regression of a gated ratio in its bad direction.
+bench-check:
+	PYTHONPATH=src:. python -m benchmarks.ledger --check

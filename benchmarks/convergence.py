@@ -34,7 +34,8 @@ def _train(name: str, steps: int = 200, seed: int = 0, rank: int = 16,
            t_update: int = 10, lam: int = 4, lr: float = 8e-3,
            eqn6_lr: float = 0.1, eqn6_steps: int = 1,
            opt_overrides: Optional[dict] = None,
-           data: Optional[SyntheticLM] = None) -> RunResult:
+           data: Optional[SyntheticLM] = None,
+           health_every: int = 0) -> RunResult:
     cfg = dataclasses.replace(get_smoke("llama-1b"), dtype=jnp.float32)
     model = build_model(cfg)
     data = data or SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.1)
@@ -64,6 +65,10 @@ def _train(name: str, steps: int = 200, seed: int = 0, rank: int = 16,
         params, opt_state, loss, ceu = step(params, opt_state, batch)
         ceu_total += float(ceu)
         final_ce = float(loss)
+        if health_every and i % health_every == 0:
+            from repro.obs import health as _health
+
+            _health.observe_state(opt_state, i)
     dt = time.perf_counter() - t0
     # eval CE on held-out steps
     ces = []
@@ -125,6 +130,85 @@ def fig4_hparams(csv: Csv, steps: int = 120):
                         f"eval_ce={res.final_ce:.4f}")
                 print(f"  r={r_:3d} T_u={t_u:3d} λ={lam:3d} "
                       f"eval_ce={res.final_ce:.4f}")
+
+
+def quality_sweep(csv: Csv, steps: int = 150):
+    """The plan–quality feedback loop's evidence base: eval CE as a
+    function of the rank floor, each run health-journaled. Writes
+    ``BENCH_quality.json`` — {baseline, configs: [{rank, c, final_ce,
+    ceu, health}]} — the per-rank quality ladder ``plan.solver``'s
+    tighten/relax thresholds are judged against: ranks whose runs fire
+    RANK_STARVED should be exactly the ranks whose eval CE visibly
+    degrades vs the AdamW baseline."""
+    import json
+    import os
+    import tempfile
+
+    from repro.obs import health
+
+    print(f"# quality_sweep ({steps} steps, rank ladder, health-journaled)")
+    data = SyntheticLM(vocab=256, order=1, noise=0.1)
+    adam = _train("adamw", steps=steps, data=data)
+    csv.add("quality_sweep/adamw", 1e6 / adam.steps_per_s,
+            f"eval_ce={adam.final_ce:.4f}")
+    print(f"  adamw (baseline)    eval_ce={adam.final_ce:.4f}")
+    # min projected dim is d_model=64 (smoke llama), so c = 64/rank.
+    min_proj_dim = 64
+    configs = []
+    tmp = tempfile.mkdtemp(prefix="coap_quality_")
+    for rank in [32, 16, 8, 4, 2]:
+        jpath = os.path.join(tmp, f"health_r{rank}.jsonl")
+        health.configure(jpath, host="bench", sample_every=1)
+        try:
+            r = _train("coap-adamw", steps=steps, rank=rank, data=data,
+                       opt_overrides={"stacked_state": True},
+                       health_every=10)
+        finally:
+            health.configure(None)
+        rep = health.analyze_journal(jpath)
+        verdicts = sorted(
+            {v for b in rep.buckets.values() for v in b["verdicts"]}
+        )
+        energies = [
+            b["metrics"].get("energy_median")
+            for b in rep.buckets.values()
+            if b["metrics"].get("energy_median") is not None
+        ]
+        e_med = float(np.median(energies)) if energies else None
+        configs.append({
+            "rank": rank,
+            "c": min_proj_dim / rank,
+            "final_ce": r.final_ce,
+            "ceu": r.ceu_total,
+            "gap_vs_adamw": r.final_ce - adam.final_ce,
+            "health": {"energy_median": e_med, "verdicts": verdicts},
+        })
+        csv.add(f"quality_sweep/coap_r{rank}", 1e6 / r.steps_per_s,
+                f"eval_ce={r.final_ce:.4f};verdicts={'|'.join(verdicts)}")
+        print(f"  coap r={rank:3d} (c={min_proj_dim/rank:4.1f}) "
+              f"eval_ce={r.final_ce:.4f} gap={r.final_ce-adam.final_ce:+.4f} "
+              f"energy_med={e_med if e_med is None else round(e_med, 3)} "
+              f"verdicts={verdicts or '-'}")
+    report = {
+        "baseline": {"optimizer": "adamw", "final_ce": adam.final_ce,
+                     "ceu": adam.ceu_total},
+        "configs": configs,
+        "method": (
+            f"synthetic-Markov LM (ce_floor={data.ce_floor():.4f}), 2-layer "
+            f"llama-style smoke model, {steps} steps, identical seed/LR; "
+            "only the COAP rank floor varies. Each COAP run journals "
+            "refresh health (obs/health) and is analyzed for verdicts; "
+            "c = min_proj_dim/rank."
+        ),
+    }
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_quality.json",
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"  -> {out}")
+    return report
 
 
 def table5_quality(csv: Csv, steps: int = 250):

@@ -1,0 +1,195 @@
+"""Bench ledger: append-only history of the gated benchmark ratios.
+
+``python -m benchmarks.run --record`` (or ``python -m benchmarks.ledger
+--record``) appends one row to ``artifacts/bench_history.jsonl``::
+
+    {"ts_utc": ..., "git_sha": ..., "benches": {<metric>: <value>, ...}}
+
+harvested from the BENCH_*.json artifacts at the repo root — only the
+GATED metrics (the numbers the suite asserts on), each with a known good
+direction. ``python -m benchmarks.ledger --check`` (``make bench-check``)
+compares the newest row against the previous one and FAILS on any >20%
+regression in the bad direction: a kernel speedup ratio that fell to
+three-quarters of what the last recorded run measured is a perf
+regression even while it still clears its absolute gate.
+
+History is committed under ``artifacts/`` precisely so the comparison
+crosses sessions and machines; the 20% band absorbs normal CPU-container
+noise (the gated metrics are ratios of same-machine measurements, which
+cancels most host variance).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HISTORY_PATH = os.path.join(_ROOT, "artifacts", "bench_history.jsonl")
+REGRESSION_BAND = 0.20
+
+# metric -> (bench file, path inside the json, direction). Direction
+# "higher" = bigger is better (a drop regresses); "lower" = smaller is
+# better (a rise regresses).
+GATED: Dict[str, Tuple[str, Tuple[str, ...], str]] = {
+    "overhead/ratio_min": (
+        "BENCH_overhead.json", ("ratio_min",), "higher"),
+    "overhead/ratio_min_conservative": (
+        "BENCH_overhead.json", ("ratio_min_conservative",), "higher"),
+    "refresh/eqn6_ratio_min": (
+        "BENCH_refresh.json", ("eqn6_ratio_min",), "higher"),
+    "refresh/stagger_worst_step_bytes_ratio": (
+        "BENCH_refresh.json", ("stagger", "worst_step_bytes_ratio"),
+        "higher"),
+    "conv/worst_step_bytes_ratio": (
+        "BENCH_conv.json", ("conv_refresh", "worst_step_bytes_ratio"),
+        "higher"),
+    "plan/q8_reduction_vs_adamw": (
+        "BENCH_plan.json", ("llama1b", "q8", "reduction_vs_adamw"),
+        "higher"),
+    "sync/full_vs_compressed_int8_ratio": (
+        "BENCH_sync.json", ("sync", "full_vs_compressed_int8_ratio"),
+        "higher"),
+    "obs/tracing_overhead_frac": (
+        "BENCH_obs.json", ("tracing_overhead_frac",), "lower"),
+    "obs/disabled_overhead_frac": (
+        "BENCH_obs.json", ("disabled_overhead_frac",), "lower"),
+    "health/overhead_frac": (
+        "BENCH_obs.json", ("health", "overhead_frac"), "lower"),
+}
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_ROOT, check=True,
+        )
+        return out.stdout.strip() or None
+    except (OSError, subprocess.CalledProcessError):
+        return None
+
+
+def _dig(doc: Any, path: Tuple[str, ...]) -> Optional[float]:
+    for k in path:
+        if not isinstance(doc, dict) or k not in doc:
+            return None
+        doc = doc[k]
+    return float(doc) if isinstance(doc, (int, float)) else None
+
+
+def harvest() -> Dict[str, float]:
+    """The gated metrics currently on disk (missing files/keys skipped —
+    a partial bench run records what it produced)."""
+    out: Dict[str, float] = {}
+    cache: Dict[str, Optional[Dict]] = {}
+    for metric, (fname, path, _direction) in GATED.items():
+        if fname not in cache:
+            try:
+                with open(os.path.join(_ROOT, fname)) as f:
+                    cache[fname] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                cache[fname] = None
+        doc = cache[fname]
+        if doc is None:
+            continue
+        v = _dig(doc, path)
+        if v is not None:
+            out[metric] = v
+    return out
+
+
+def read_history(path: str = HISTORY_PATH) -> list:
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn tail
+                if isinstance(row, dict) and "benches" in row:
+                    rows.append(row)
+    except OSError:
+        pass
+    return rows
+
+
+def record(path: str = HISTORY_PATH) -> Dict[str, Any]:
+    """Append one ledger row from the BENCH artifacts on disk."""
+    benches = harvest()
+    row = {
+        "ts_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "benches": benches,
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+    print(f"ledger: recorded {len(benches)} gated metric(s) -> {path}")
+    return row
+
+
+def check(path: str = HISTORY_PATH, band: float = REGRESSION_BAND) -> int:
+    """Newest row vs the previous one: fail on any >``band`` regression
+    in the bad direction. Returns a process exit code."""
+    rows = read_history(path)
+    if len(rows) < 2:
+        print(f"ledger: {len(rows)} row(s) in {path} — nothing to compare")
+        return 0
+    prev, new = rows[-2], rows[-1]
+    regressions = []
+    compared = 0
+    for metric, (_f, _p, direction) in GATED.items():
+        a, b = prev["benches"].get(metric), new["benches"].get(metric)
+        if a is None or b is None:
+            continue
+        compared += 1
+        if direction == "higher":
+            bad = b < a * (1.0 - band)
+        else:
+            bad = b > a * (1.0 + band)
+        arrow = "regressed" if bad else "ok"
+        print(f"  {metric:42s} {a:12.6g} -> {b:12.6g}  [{arrow}]")
+        if bad:
+            regressions.append((metric, a, b))
+    print(f"ledger: compared {compared} metric(s), "
+          f"{new.get('git_sha', '?')} vs {prev.get('git_sha', '?')}")
+    if regressions:
+        for metric, a, b in regressions:
+            print(f"ledger: REGRESSION {metric}: {a:.6g} -> {b:.6g} "
+                  f"(>{band:.0%} in the bad direction)", file=sys.stderr)
+        return 1
+    print("ledger: no >20% regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--record", action="store_true",
+                    help="append a row from the BENCH artifacts on disk")
+    ap.add_argument("--check", action="store_true",
+                    help="newest vs previous row; exit 1 on regression")
+    ap.add_argument("--path", default=HISTORY_PATH)
+    args = ap.parse_args(argv)
+    if not (args.record or args.check):
+        ap.error("give --record and/or --check")
+    rc = 0
+    if args.record:
+        record(args.path)
+    if args.check:
+        rc = check(args.path)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,7 +17,11 @@ def main() -> None:
                     help="trim the largest shapes / fewest steps")
     ap.add_argument("--only", default="",
                     help="comma list: memory,svd,overhead,refresh,state,"
-                         "conv,plan,elastic,obs,sync,fig3,table7,fig4,t5q")
+                         "conv,plan,elastic,obs,sync,health,fig3,table7,"
+                         "fig4,t5q,quality")
+    ap.add_argument("--record", action="store_true",
+                    help="append the gated ratios to "
+                         "artifacts/bench_history.jsonl (benchmarks.ledger)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -50,6 +54,8 @@ def main() -> None:
         overhead.run_obs(csv, fast=args.fast)
     if want("sync"):
         overhead.run_sync(csv, fast=args.fast)
+    if want("health"):
+        overhead.run_health(csv, fast=args.fast)
     steps = 80 if args.fast else 200
     if want("fig3"):
         convergence.fig3_ceu(csv, steps=steps)
@@ -59,10 +65,17 @@ def main() -> None:
         convergence.fig4_hparams(csv, steps=max(50, steps // 2))
     if want("t5q"):
         convergence.table5_quality(csv, steps=max(100, steps))
+    if want("quality"):
+        convergence.quality_sweep(csv, steps=max(60, steps // 2))
 
     print(f"\n# total benchmark wall time: {time.time()-t0:.1f}s")
     print("name,us_per_call,derived")
     csv.emit()
+
+    if args.record:
+        from benchmarks import ledger
+
+        ledger.record()
 
 
 if __name__ == "__main__":

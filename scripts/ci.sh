@@ -7,6 +7,7 @@
 #   ./scripts/ci.sh fault-smoke  elastic/fault-injection smoke (train/ edits)
 #   ./scripts/ci.sh obs-smoke    observability smoke (obs/ + fleet_status edits)
 #   ./scripts/ci.sh dist-smoke   compressed cross-pod sync smoke (distributed/ edits)
+#   ./scripts/ci.sh health-smoke projection-health smoke (obs/health + solver feedback)
 #
 # The smoke subset re-runs the fused-kernel correctness tests with the
 # actual Pallas bodies under interpret mode (REPRO_PALLAS=interpret routes
@@ -154,6 +155,88 @@ print("obs smoke OK:", len(rows), "trace rows,",
 PY
 }
 
+health_smoke() {
+  echo "== projection-health smoke (journaled run -> verdicts + fleet_status) =="
+  # Unit layer: journal reader edges, injected numeric pathologies firing
+  # their typed verdicts end-to-end through real optimizers, the solver's
+  # health-report feedback (incl. the bit-identical health-blind path),
+  # and the fleet_status health column.
+  REPRO_PALLAS=interpret python -m pytest -q tests/test_health.py
+  # End-to-end: a health-journaled 10-step elastic run must append
+  # per-bucket refresh + sample rows, mirror them as health/ gauges in the
+  # heartbeat, and surface an analyzable health column in fleet_status.
+  REPRO_PALLAS=interpret python - <<'PY'
+import json, os, tempfile
+
+from repro.configs import get_smoke
+from repro.core.api import OptimizerConfig
+from repro.data.synthetic import SyntheticLM
+from repro.launch import fleet_status
+from repro.obs.health import read_health
+from repro.train.elastic import ElasticConfig, ElasticSupervisor, Topology
+
+tmp = tempfile.mkdtemp(prefix="health_smoke_")
+cfg = get_smoke("tinyllama-1.1b")
+from repro.models.model import build_model
+model = build_model(cfg)
+data = SyntheticLM(vocab=cfg.vocab_size, order=1, noise=0.2)
+sup = ElasticSupervisor(
+    model, lambda step, host: data.batch(step, batch=4, seq=16, host=host),
+    ElasticConfig(
+        ckpt_dir=tmp, total_steps=10,
+        topology=(Topology(1, 10**12),),
+        solve_kw=dict(min_dim=16, t_update=4, lam=2, stagger_groups=2),
+        ckpt_every=5, log_every=2,
+        heartbeat_path=os.path.join(tmp, "heartbeat.json"),
+        metrics_path=os.path.join(tmp, "metrics.jsonl"),
+        events_path=os.path.join(tmp, "events.jsonl"),
+        health_path=os.path.join(tmp, "health.jsonl"),
+        health_every=2,
+        host_id="health-smoke",
+    ),
+    ocfg=OptimizerConfig(name="coap-adamw", learning_rate=1e-3),
+)
+state = sup.run()
+assert int(state.step) == 10, int(state.step)
+
+rows = read_health(os.path.join(tmp, "health.jsonl"))
+assert rows, "health journal is empty"
+events = {r["event"] for r in rows}
+assert "refresh" in events, events
+# Zero-extra-G contract, per bucket: after the step-0 init refresh, rows
+# land on at most stagger_groups=2 residues mod t_update=4, each residue
+# exactly 4-periodic — i.e. rows appear ONLY where the staggered refresh
+# schedule touches G, never in between.
+per_bucket = {}
+for r in rows:
+    if r["event"] == "refresh":
+        per_bucket.setdefault(r["bucket"], []).append(r["step"])
+assert per_bucket, "no refresh rows"
+for bucket, steps in per_bucket.items():
+    steps = sorted(set(steps))
+    assert steps[0] == 0, (bucket, steps)  # the init refresh
+    sched = steps[1:]
+    assert sched, (bucket, steps)
+    residues = {s % 4 for s in sched}
+    assert len(residues) <= 2, (bucket, steps)
+    for res in residues:
+        run = [s for s in sched if s % 4 == res]
+        assert all(b - a == 4 for a, b in zip(run, run[1:])), (bucket, steps)
+
+hb = json.load(open(os.path.join(tmp, "heartbeat.json")))
+gauges = hb.get("gauges") or {}
+assert any(k.startswith("health/") for k in gauges), sorted(gauges)[:5]
+
+view = fleet_status.collect([tmp], None)
+h = view["hosts"][0]
+assert h["health"] is not None and "verdicts" in h["health"], h["health"]
+print(fleet_status.render(view))
+print("health smoke OK:", len(rows), "journal rows,",
+      sum(1 for k in gauges if k.startswith('health/')), "health gauges,",
+      "verdicts:", h["health"]["verdicts"] or "none")
+PY
+}
+
 dist_smoke() {
   echo "== compressed cross-pod sync smoke (CPU test mesh) =="
   # The distributed/compression.py parity surface on the 8-device CPU test
@@ -197,6 +280,10 @@ if [[ "${1:-}" == "dist-smoke" ]]; then
   dist_smoke
   exit 0
 fi
+if [[ "${1:-}" == "health-smoke" ]]; then
+  health_smoke
+  exit 0
+fi
 
 echo "== tier-1 suite =="
 python -m pytest -x -q
@@ -205,3 +292,4 @@ plan_smoke
 fault_smoke
 obs_smoke
 dist_smoke
+health_smoke

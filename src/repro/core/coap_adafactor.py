@@ -68,6 +68,7 @@ from repro.core.projector import (
     ProjectionRules,
     path_str,
 )
+from repro.obs import health
 from repro.optim.transform import GradientTransformation, chain, scale
 
 _EPS = 1e-30
@@ -181,6 +182,15 @@ def scale_by_projected_adafactor(cfg: ProjectedAdafactorConfig) -> GradientTrans
 
         new_p, refreshed = _refresh_p(
             bcfg, spec, p_old, gc, m_loader, count, idx_arr, phases
+        )
+        # Projection-health emit (obs/health): refresh-boundary metrics
+        # (captured energy, Eqn-6 residual, subspace overlap) ride the
+        # refresh branch that already holds G — zero extra HBM reads of G
+        # on non-refresh steps, and a trace-time no-op when the monitor is
+        # disabled (bit-identical compiled program).
+        health.emit_refresh_matrix(
+            health.bucket_label("project", g.shape[1:], g.dtype),
+            gc, p_old, new_p, refreshed, count,
         )
         m = _maybe_transplant(
             bcfg, leaf.m, p_old, new_p, refreshed, phases, count

@@ -111,6 +111,7 @@ from repro.core.projector import (
 )
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs import health
 from repro.optim.transform import (
     GradientTransformation,
     add_decayed_weights,
@@ -768,6 +769,16 @@ def scale_by_projected_adam(cfg: ProjectedAdamConfig) -> GradientTransformation:
 
         new_p, refreshed = _refresh_p(
             cfg, spec, p_old, gc, m_loader, count, idx_arr, phases
+        )
+
+        # Projection-health emit (obs/health): refresh-boundary metrics
+        # computed where G is already materialized, under the same
+        # lax.cond as the refresh — non-refresh steps execute nothing, so
+        # the hot path keeps zero extra G round-trips. Trace-time no-op
+        # (identical compiled program) when no monitor is configured.
+        health.emit_refresh_matrix(
+            health.bucket_label("project", g.shape[1:], g.dtype),
+            gc, p_old, new_p, refreshed, count,
         )
 
         if cfg.quantize:

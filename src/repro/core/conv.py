@@ -33,6 +33,7 @@ from repro.core import correlation, recalibrate
 from repro.core.projector import ProjSpec
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs import health
 
 
 def init_factors(key, w_shape, spec: ProjSpec):
@@ -217,6 +218,7 @@ def update_conv_bucket(cfg, leaf, g, spec: ProjSpec, count, t, idx_arr,
     from repro.core.coap_adam import (  # circular-safe
         ConvLeaf,
         _phase_groups,
+        _refresh_mask,
         _sched_preds,
         _stagger_dispatch,
     )
@@ -303,6 +305,15 @@ def update_conv_bucket(cfg, leaf, g, spec: ProjSpec, count, t, idx_arr,
             # phase (do_recal is True at count==0 inside refresh_slice).
             full_fn=lambda: refresh_slice(slice(None), 0),
         )
+
+    # Projection-health emit (obs/health): Tucker-2 refresh metrics under
+    # the refresh cond (G already materialized there); trace-time no-op
+    # with no monitor configured, zero extra G traffic off-refresh.
+    health.emit_refresh_conv(
+        health.bucket_label("conv", g.shape[1:], g.dtype),
+        g32, leaf.p_o, leaf.p_i, p_o, p_i,
+        _refresh_mask(count, phases, t_u), count,
+    )
 
     g_core = project_core(g32, p_o, p_i)
     new_m = cfg.b1 * m + (1.0 - cfg.b1) * g_core

@@ -126,6 +126,14 @@ def _allreduce_codes(x, ef, axis_name: str, block: int):
     Returns ``(reduced_mean, new_ef)`` where the mean carries exactly one
     blockwise rounding and ``new_ef`` is the pod-mean rounding residual
     (see the module docstring's simulation note).
+
+    Telemetry contract (``obs/health.observe_state``): the EF sidecar this
+    returns is stored on ``ProjLeaf.ef`` / ``ConvLeaf.ef`` and sampled
+    HOST-SIDE at the health cadence as ``ef_rms`` — no in-collective
+    instrumentation, no per-device callbacks under shard_map. A healthy
+    loop keeps ``ef_rms`` bounded (the applied error telescopes, shrinking
+    ~1/T over a window); a monotonically growing trajectory means the
+    compensation is not being applied and fires ``EF_NOT_DRAINING``.
     """
     y = x + ef  # compensated contribution: EF applies once, in the mean
     flat = y.reshape(-1)

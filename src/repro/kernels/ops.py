@@ -91,6 +91,15 @@ def dequantize_rowblock(q, scale, block=ref.QUANT_BLOCK, dtype=jnp.float32):
 
 
 @functools.partial(jax.jit, static_argnames=("block",))
+def rowblock_code_stats(q, scale, block=ref.QUANT_BLOCK):
+    """Codec-health stats (sat/rail rate, non-finite scales, relative
+    quant error) of a row-block-coded state tensor — the sampled
+    ``obs/health.observe_state`` surface. jnp in all modes: it reads only
+    resident int8 state at the health cadence, never the hot loop."""
+    return ref.rowblock_code_stats(q, scale, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
 def quantize_blockwise(x, block=ref.QUANT_BLOCK):
     if _mode() == "ref":
         return ref.quantize_blockwise(x, block)

@@ -189,6 +189,48 @@ def dequantize_rowblock(
     return b.reshape(q.shape[:-1] + (nblk * block,))[..., :r].astype(dtype)
 
 
+def rowblock_code_stats(
+    q: jnp.ndarray, scale: jnp.ndarray, block: int = QUANT_BLOCK
+) -> dict:
+    """Codec-health stats of a row-block-coded tensor (``obs/health``).
+
+    Absmax scaling never clips by construction (the block max maps onto
+    ±127 exactly), so "saturation" here is the EXCESS rail fraction: the
+    share of codes at |q| == 127 beyond the one absmax element each
+    nonzero block is guaranteed to park there. That baseline-corrects the
+    metric against block geometry (a rank-4 moment row has 1/4 of its
+    codes at the rail when healthy) — ~0 for a well-spread block, rising
+    when a block's mass collapses onto its absmax — complemented by the
+    non-finite-scale fraction (an inf/nan input poisons its block's
+    absmax, the loud overflow signal the int8-v underflow/overflow guards
+    key on). ``err_rel`` is the uniform quant-noise model:
+    rms(step)/sqrt(12) over rms(value), with step == scale
+    (scale = absmax/127 IS the quantization step).
+    Returns jnp scalars (caller does one device_get)."""
+    absq = jnp.abs(q.astype(jnp.int32))
+    n_codes = jnp.asarray(absq.size, jnp.float32)
+    n_rail = jnp.sum((absq == 127).astype(jnp.float32))
+    # One guaranteed rail element per block that has any nonzero code.
+    finite0 = jnp.isfinite(scale)
+    n_live = jnp.sum(
+        ((scale > 0) | ~finite0).astype(jnp.float32)
+    )
+    sat_rate = jnp.maximum(n_rail - n_live, 0.0) / jnp.maximum(n_codes, 1.0)
+    finite = finite0
+    nonfinite = 1.0 - jnp.mean(finite.astype(jnp.float32))
+    safe_scale = jnp.where(finite, scale, 0.0)
+    n_finite = jnp.maximum(jnp.sum(finite.astype(jnp.float32)), 1.0)
+    step_ms = jnp.sum(jnp.square(safe_scale)) / n_finite
+    err_rms = jnp.sqrt(step_ms / 12.0)
+    deq = dequantize_rowblock(q, safe_scale, block)
+    val_rms = jnp.sqrt(jnp.mean(jnp.square(deq)))
+    return {
+        "sat_rate": sat_rate,
+        "scale_nonfinite": nonfinite,
+        "err_rel": err_rms / jnp.maximum(val_rms, 1e-30),
+    }
+
+
 def coap_fused_update_q8(
     g: jnp.ndarray,  # (..., m, n) canonical gradient
     p: jnp.ndarray,  # (..., n, r) projection

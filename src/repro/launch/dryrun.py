@@ -174,7 +174,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              optimizer: str = "coap-adamw", tag: str = "",
              rules=shd.PARAM_RULES, extra_opt: Optional[dict] = None,
              save: bool = True, arch_overrides: Optional[dict] = None,
-             grad_accum_override: Optional[int] = None, plan=None) -> dict:
+             grad_accum_override: Optional[int] = None, plan=None,
+             health_journal: Optional[str] = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = supports_shape(cfg, shape)
@@ -276,6 +277,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         })
         if plan_rec is not None:
             rec["plan"] = plan_rec
+        if health_journal:
+            # Embed the analyzed verdicts of a prior run's health journal
+            # so the dryrun artifact carries BOTH the predicted cost of
+            # this cell and the observed numerics of the run it models.
+            from repro.obs.health import analyze_journal
+
+            rec["health"] = analyze_journal(health_journal).to_dict()
     except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
         rec = dict(meta)
         rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
@@ -336,6 +344,10 @@ def main():
                     help="coap-plan/v1 artifact: drive the train cells from "
                          "the planned knobs and cross-check predicted vs "
                          "accounted state bytes before compiling")
+    ap.add_argument("--health", default="",
+                    help="health.jsonl journal from a prior run: embed its "
+                         "analyzed coap-health/v1 verdicts in each cell "
+                         "artifact")
     ap.add_argument("--tag", default="")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the §Perf beyond-paper overrides")
@@ -380,7 +392,8 @@ def main():
                     print(f"[skip] {out}: plan is for {plan.arch}")
                     continue
                 rec = run_cell(arch, shape, mp, args.optimizer, args.tag,
-                               arch_overrides=overrides, plan=plan)
+                               arch_overrides=overrides, plan=plan,
+                               health_journal=args.health or None)
                 dt = time.time() - t0
                 status = rec["status"]
                 extra = rec.get("reason", rec.get("error", ""))[:90]

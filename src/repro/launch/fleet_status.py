@@ -8,11 +8,13 @@ Every elastic run directory already carries the full story as plain
 files — ``heartbeat.json`` (liveness + step + phase + registry
 counters), ``events.jsonl`` (both sides' supervision events),
 ``metrics.jsonl`` (loss/throughput rows), ``DONE.json``, the checkpoint
-directories, and ``worker_spec.json`` (which knows the heartbeat
-timeout). A fleet directory (``train/fleet.py``) adds member liveness
-and the committed ``coap-plan/v1`` per replan epoch. This CLI tails them
-all into one table: per-host phase/step/staleness, last loss, checkpoint
-progress, the current plan epoch + digest, and recent events.
+directories, ``health.jsonl`` (projection-health rows; ``obs/health``),
+and ``worker_spec.json`` (which knows the heartbeat timeout). A fleet
+directory (``train/fleet.py``) adds member liveness and the committed
+``coap-plan/v1`` per replan epoch. This CLI tails them all into one
+table: per-host phase/step/staleness, last loss, checkpoint progress,
+projection-health verdicts, the current plan epoch + digest, and recent
+events.
 
 ``--json`` emits the same view as one machine-readable document;
 ``--follow`` redraws every ``--interval`` seconds. Deliberately imports
@@ -122,6 +124,27 @@ def host_view(
     )
     last_metrics = (_tail_jsonl(metrics_path, 1) or [None])[-1]
 
+    # Projection-health verdicts from the run's health journal
+    # (``obs/health`` is stdlib-only at import, so this stays operator-box
+    # safe). Analyze the recent tail only: verdicts are about the CURRENT
+    # numerics, and the tail keeps the CLI O(1) in journal length.
+    health_path = ecfg.get("health_path") or os.path.join(
+        run_dir, "health.jsonl"
+    )
+    health: Optional[Dict[str, Any]] = None
+    health_rows = _tail_jsonl(health_path, 400)
+    if health_rows:
+        from repro.obs.health import analyze
+
+        rep = analyze(health_rows)
+        health = {
+            "ok": rep.ok(),
+            "verdicts": sorted(
+                {v for b in rep.buckets.values() for v in b["verdicts"]}
+            ),
+            "n_buckets": len(rep.buckets),
+        }
+
     ckpts = _ckpt_steps(run_dir)
     hb = hb or {}
     return {
@@ -136,6 +159,9 @@ def host_view(
         "straggler_flagged": hb.get("straggler_flagged"),
         "counters": (hb.get("counters")
                      if isinstance(hb.get("counters"), dict) else None),
+        "gauges": (hb.get("gauges")
+                   if isinstance(hb.get("gauges"), dict) else None),
+        "health": health,
         "total_steps": ecfg.get("total_steps"),
         "last_metrics": last_metrics,
         "ckpt_latest": ckpts[-1] if ckpts else None,
@@ -229,13 +255,21 @@ def _fmt_event(e: Dict) -> str:
 
 def render(doc: Dict[str, Any]) -> str:
     lines = [
-        "| host | status | phase | step | ckpt | stale | straggler | loss |",
-        "|---|---|---|---|---|---|---|---|",
+        "| host | status | phase | step | ckpt | stale | straggler "
+        "| loss | health |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for h in doc["hosts"]:
         m = h.get("last_metrics") or {}
         loss = m.get("loss")
         loss_s = f"{loss:.4f}" if isinstance(loss, (int, float)) else "-"
+        hl = h.get("health")
+        if hl is None:
+            health_s = "-"
+        elif hl.get("ok"):
+            health_s = "ok"
+        else:
+            health_s = ",".join(hl.get("verdicts") or []) or "ok"
         total = h.get("total_steps")
         step = h.get("step")
         if step is not None and total:
@@ -248,7 +282,8 @@ def render(doc: Dict[str, Any]) -> str:
             f"| {h['host']} | {h['status']} | {h.get('phase') or '-'} | "
             f"{step_s} | {ckpt if ckpt is not None else '-'} | "
             f"{_fmt_age(h.get('staleness_s'))} | "
-            f"{strag if strag is not None else '-'} | {loss_s} |"
+            f"{strag if strag is not None else '-'} | {loss_s} | "
+            f"{health_s} |"
         )
     fleet = doc.get("fleet")
     if fleet:

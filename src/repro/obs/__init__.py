@@ -1,11 +1,14 @@
-"""Unified telemetry: span tracing, counter registry, cost calibration.
+"""Unified telemetry: span tracing, counter registry, cost calibration,
+projection-health metrics.
 
-``obs.trace`` and ``obs.registry`` are STDLIB-ONLY by design — the
-operator CLI (``launch/fleet_status``), the fleet protocol
-(``train/fleet.py``) and the kernel dispatch layer all import them, and
-none of those should drag in jax. ``obs.calib`` (the measured-cost
-feedback loop) is the one jax-aware module: it re-derives the planned
-refresh schedule and fits roofline constants from recorded spans.
+``obs.trace``, ``obs.registry`` and ``obs.health`` are STDLIB-ONLY at
+import by design — the operator CLI (``launch/fleet_status``), the fleet
+protocol (``train/fleet.py``) and the kernel dispatch layer all import
+them, and none of those should drag in jax (``obs.health`` imports jax
+lazily inside its device-side emitters only). ``obs.calib`` (the
+measured-cost feedback loop) is the one jax-aware module: it re-derives
+the planned refresh schedule and fits roofline constants from recorded
+spans.
 """
 from repro.obs.registry import get_registry, merge_snapshots  # noqa: F401
 from repro.obs.trace import configure, get_tracer  # noqa: F401

@@ -15,12 +15,19 @@ Naming convention: ``<subsystem>/<event>[/<detail>]``, e.g.
 → ``restore`` → ``migrate`` → ``train`` → ``final_eval``).
 
 Counters from different processes merge by summation
-(:func:`merge_snapshots`); gauges are per-process state, last writer
-wins.
+(:func:`merge_snapshots`); gauges are per-process state, and the merge
+winner is the DETERMINISTIC newest: each snapshot stamps ``ts`` (wall
+clock at snapshot time) and ``host`` (``REPRO_HOST_ID``), and a gauge is
+taken from the snapshot with the lexicographically largest
+``(ts, host, input-position)``. Snapshots missing the stamps (older
+artifacts) default to ``(-inf, "")`` so the historical
+later-input-wins behavior is preserved for them.
 """
 from __future__ import annotations
 
+import os
 import threading
+import time
 from typing import Any, Dict, Iterable, Optional
 
 
@@ -56,14 +63,22 @@ class Registry:
             return self._gauges.get(name, default)
 
     def snapshot(self) -> Dict[str, Dict[str, Any]]:
-        """A point-in-time copy: ``{"counters": {...}, "gauges": {...}}``.
-        Counters are ints when integral so the snapshot JSON stays tidy."""
+        """A point-in-time copy: ``{"counters": {...}, "gauges": {...},
+        "ts": ..., "host": ...}``. Counters are ints when integral so the
+        snapshot JSON stays tidy; the ``(ts, host)`` stamp is what makes
+        cross-process gauge merging deterministic (newest wins, host id
+        breaks wall-clock ties)."""
         with self._lock:
             counters = {
                 k: (int(v) if float(v).is_integer() else float(v))
                 for k, v in self._counters.items()
             }
-            return {"counters": counters, "gauges": dict(self._gauges)}
+            return {
+                "counters": counters,
+                "gauges": dict(self._gauges),
+                "ts": time.time(),
+                "host": os.environ.get("REPRO_HOST_ID", ""),
+            }
 
     def reset(self) -> None:
         """Test isolation; production registries live for the process."""
@@ -75,17 +90,32 @@ class Registry:
 def merge_snapshots(
     snaps: Iterable[Optional[Dict[str, Dict[str, Any]]]],
 ) -> Dict[str, Dict[str, Any]]:
-    """Combine snapshots from several processes: counters sum, gauges
-    last-writer-wins (iterate oldest→newest). ``None`` entries (host never
-    reported) are skipped."""
+    """Combine snapshots from several processes: counters sum (order
+    independent — associative and commutative by construction), and each
+    gauge is taken from the snapshot with the largest ``(ts, host,
+    input-position)``. The explicit stamp makes the result a function of
+    the snapshot CONTENTS, not the iteration order fleet_status happened
+    to glob heartbeat files in; unstamped snapshots sort as ``(-inf, "")``
+    so within an all-unstamped input the historical later-input-wins
+    behavior is unchanged. ``None`` entries (host never reported) are
+    skipped."""
     counters: Dict[str, float] = {}
     gauges: Dict[str, Any] = {}
-    for s in snaps:
+    gauge_rank: Dict[str, tuple] = {}
+    for idx, s in enumerate(snaps):
         if not s:
             continue
         for k, v in (s.get("counters") or {}).items():
             counters[k] = counters.get(k, 0.0) + float(v)
-        gauges.update(s.get("gauges") or {})
+        try:
+            ts = float(s.get("ts", float("-inf")))
+        except (TypeError, ValueError):
+            ts = float("-inf")
+        rank = (ts, str(s.get("host", "") or ""), idx)
+        for k, v in (s.get("gauges") or {}).items():
+            if k not in gauge_rank or rank >= gauge_rank[k]:
+                gauge_rank[k] = rank
+                gauges[k] = v
     counters_out = {
         k: (int(v) if float(v).is_integer() else float(v))
         for k, v in counters.items()

@@ -109,6 +109,7 @@ def solve(
     prev_plan: Optional[Plan] = None,
     resume_horizon_steps: int = 0,
     sync_codes: bool = False,
+    health_report=None,
 ) -> Plan:
     """Plan ``params`` (a concrete or abstract pytree) under
     ``budget_bytes`` (``None`` = unconstrained: keep the quality-preferred
@@ -128,7 +129,22 @@ def solve(
     A long horizon amortizes the penalty to ~nothing (re-layout freely);
     a short one makes the solver conservative. With ``prev_plan=None`` or
     ``resume_horizon_steps=0`` the output is bit-identical to the
-    history-free solve."""
+    history-free solve.
+
+    Health-aware mode (``health_report``: an ``obs/health.HealthReport``
+    or its ``to_dict()`` form from a prior run of THIS model): observed
+    numerics adjust the per-bucket rank FLOOR before the candidate ladder
+    is built. A bucket whose journal fired ``RANK_STARVED`` (captured
+    energy below the floor) or ``SUBSPACE_THRASH`` (refreshes not
+    converging) gets its floor tightened one power-of-two step up — the
+    compression recipe was too aggressive for this tensor's spectrum. A
+    verdict-free bucket whose median captured energy sits above the
+    headroom threshold gets its floor relaxed one power-of-two step down
+    (free memory; quality margin says the rank was overprovisioned).
+    Buckets the journal never saw keep the recipe floor. Every adjustment
+    is recorded in ``cost['health_adjustments']``. With
+    ``health_report=None`` the output is bit-identical to the
+    health-blind solve."""
     if quantize not in ("auto", "force", "off"):
         raise ValueError("quantize must be 'auto', 'force' or 'off'")
     calib = calib or pcost.Calibration.load()
@@ -161,6 +177,56 @@ def solve(
     # ---- rank selection per leaf (identical across congruent leaves) ----
     dtype_of = dict(zip(paths, dtypes))
 
+    # Health feedback (see docstring): per-bucket-label floor shifts,
+    # +1 = tighten one pow2 step, -1 = relax one step. Everything here is
+    # gated on health_report so the health-blind solve stays bit-identical.
+    floor_shift: Dict[str, int] = {}
+    health_adjustments: Optional[Dict[str, Dict]] = None
+    if health_report is not None:
+        from repro.obs import health as _health
+
+        rep = (
+            _health.HealthReport.from_dict(health_report)
+            if isinstance(health_report, dict)
+            else health_report
+        )
+        headroom = float(
+            rep.thresholds.get(
+                "energy_headroom",
+                _health.DEFAULT_THRESHOLDS["energy_headroom"],
+            )
+        )
+        tighten_on = {
+            _health.VERDICT_RANK_STARVED,
+            _health.VERDICT_SUBSPACE_THRASH,
+        }
+        for label, b in rep.buckets.items():
+            verdicts = set(b.get("verdicts") or [])
+            if verdicts & tighten_on:
+                floor_shift[label] = 1
+            elif not verdicts:
+                em = (b.get("metrics") or {}).get("energy_median")
+                if em is not None and float(em) >= headroom:
+                    floor_shift[label] = -1
+        health_adjustments = {}
+
+        def _health_label(kind: str, shape, path: str) -> str:
+            return _health.bucket_label(kind, shape, dtype_of[path])
+
+        def _record_adjust(label, action, old_spec, new_spec):
+            if old_spec.kind == KIND_CONV:
+                frm = {"rank_o": old_spec.rank_o, "rank_i": old_spec.rank_i}
+                to = {"rank_o": new_spec.rank_o, "rank_i": new_spec.rank_i}
+            else:
+                frm = {"rank": old_spec.rank}
+                to = {"rank": new_spec.rank}
+            health_adjustments[label] = {
+                "bucket": label,
+                "action": action,
+                "from": frm,
+                "to": to,
+            }
+
     def cost_of(kind: str, shape, spec: ProjSpec, q: bool,
                 g_itemsize: int = 4) -> Dict[str, float]:
         return pcost.bucket_step_cost(
@@ -174,12 +240,44 @@ def solve(
         base = base_rules.spec_for(path, shape)
         if base.kind == KIND_PROJECT:
             mn = min(shape[-2], shape[-1])
+            if floor_shift:
+                label = _health_label(base.kind, shape, path)
+                shift = floor_shift.get(label, 0)
+                if shift > 0:
+                    new = base._replace(
+                        rank=min(mn, _next_pow2(base.rank + 1))
+                    )
+                elif shift < 0:
+                    new = base._replace(rank=max(1, base.rank // 2))
+                else:
+                    new = base
+                if new.rank != base.rank:
+                    _record_adjust(
+                        label,
+                        "tighten" if shift > 0 else "relax",
+                        base, new,
+                    )
+                    base = new
             cands = [
                 base._replace(rank=r)
                 for r in _rank_candidates(base.rank, mn)
             ]
         elif base.kind == KIND_CONV:
             o, i = int(shape[0]), int(shape[1])
+            if floor_shift:
+                # Tighten-only for Tucker-2: the relax signal (energy
+                # headroom) is a per-mode question the scalar captured
+                # energy cannot attribute, so only starvation/thrash acts.
+                label = _health_label(base.kind, shape, path)
+                if floor_shift.get(label, 0) > 0:
+                    new = base._replace(
+                        rank_o=min(o, _next_pow2(base.rank_o + 1)),
+                        rank_i=min(i, _next_pow2(base.rank_i + 1)),
+                    )
+                    if (new.rank_o, new.rank_i) != (base.rank_o,
+                                                    base.rank_i):
+                        _record_adjust(label, "tighten", base, new)
+                        base = new
             pairs = {(base.rank_o, base.rank_i)}
             ro, ri = base.rank_o, base.rank_i
             while _next_pow2(ro + 1) < o and _next_pow2(ri + 1) < i:
@@ -368,6 +466,12 @@ def solve(
             "resume_horizon_steps": int(resume_horizon_steps),
             "penalty_s_per_step_per_bucket": resume_pen_s,
         }
+    if health_adjustments is not None:
+        # Present whenever a report was passed (possibly empty): the
+        # artifact says "health was consulted" even when nothing moved.
+        cost["health_adjustments"] = [
+            health_adjustments[k] for k in sorted(health_adjustments)
+        ]
     return Plan(
         codec=PLAN_CODEC_V1,
         arch=arch,

@@ -57,6 +57,7 @@ from repro.core.api import OptimizerConfig, make_optimizer
 from repro.core.coap_adam import ProjectedAdamState, bucket_phases
 from repro.obs import calib as obs_calib
 from repro.obs.registry import get_registry
+from repro.obs.health import configure as health_configure
 from repro.obs.trace import configure as trace_configure
 from repro.obs.trace import get_tracer
 from repro.plan import apply as plan_apply
@@ -166,6 +167,14 @@ class ElasticConfig:
     # coap-calib/v1 artifact via obs.calib.build_from_trace). Serialized
     # with the rest of the config, so spawned workers trace too.
     trace_path: Optional[str] = None
+    # Projection-health journal (obs/health.py): when set, every attempt
+    # configures the process monitor here — refresh-boundary numerics
+    # (captured energy / Eqn-6 residual / subspace overlap) from inside
+    # the optimizer plus sampled int8-codec and EF-sidecar stats every
+    # ``health_every`` steps. Serialized with the config so spawned
+    # workers journal too; fleet_status reads it for the health column.
+    health_path: Optional[str] = None
+    health_every: int = 25
 
 
 def elastic_config_to_dict(cfg: ElasticConfig) -> Dict[str, Any]:
@@ -487,6 +496,8 @@ class ElasticSupervisor:
         cfg = self.cfg
         if cfg.trace_path:
             trace_configure(cfg.trace_path, host=cfg.host_id)
+        if cfg.health_path:
+            health_configure(cfg.health_path, host=cfg.host_id)
         tracer = get_tracer()
         reg = get_registry()
         # A notice acted on by the PREVIOUS attempt is consumed here; a
@@ -541,6 +552,7 @@ class ElasticSupervisor:
                 notice_path=cfg.notice_path,
                 min_step_s=cfg.min_step_s,
                 refresh_schedule=refresh_schedule,
+                health_every=cfg.health_every,
             )
             loop = TrainLoop(
                 self.model, tx, self.batch_fn, loop_cfg,

@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import health
 from repro.obs.registry import get_registry
 from repro.obs.trace import get_tracer
 from repro.train import checkpoint as ckpt
@@ -64,6 +65,13 @@ class TrainLoopConfig:
     # passes the planned schedule so a trace shows WHICH stagger groups
     # refreshed on each step — what the calibration fit keys on.
     refresh_schedule: Optional[Callable[[int], Any]] = None
+    # Sampled projection-health cadence (``obs/health.observe_state``):
+    # every N steps the loop reads the RESIDENT optimizer state (int8
+    # codec stats, EF-sidecar norms) — never the gradient, so off-cadence
+    # steps pay nothing and no step ever re-reads G. Refresh-boundary
+    # metrics (energy/residual/overlap) are emitted from inside the
+    # optimizer's own refresh branch, not from here. 0 disables.
+    health_every: int = 25
 
 
 class TrainLoop:
@@ -190,9 +198,16 @@ class TrainLoop:
             if slow:
                 reg.inc("loop/straggler_step")
             ceu_total += float(metrics["ceu"])
+            if (
+                cfg.health_every
+                and health.get_monitor().enabled
+                and step % cfg.health_every == 0
+            ):
+                health.observe_state(state.opt_state, step)
             if self.heartbeat and not (
                 inj is not None and inj.heartbeat_silent(step)
             ):
+                snap = reg.snapshot()
                 self.heartbeat.beat(
                     step,
                     extra={
@@ -200,8 +215,9 @@ class TrainLoop:
                         "phase": reg.gauge("phase", "train"),
                         # The registry snapshot rides every beat: the
                         # supervisor (and fleet_status) reads a worker's
-                        # counters with no extra channel.
-                        "counters": reg.snapshot()["counters"],
+                        # counters AND health gauges with no extra channel.
+                        "counters": snap["counters"],
+                        "gauges": snap["gauges"],
                     },
                 )
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:

@@ -30,6 +30,7 @@ class MetricsLogger:
         self.history = []
         self._last_time = None
         self._last_step = None
+        self._last_counters: Dict[str, float] = {}
 
     def log(self, step: int, metrics: Dict[str, Any], tokens: int = 0):
         now = time.time()
@@ -43,6 +44,18 @@ class MetricsLogger:
                 row[k] = float(v)
             except (TypeError, ValueError):
                 row[k] = str(v)
+        # Registry counter DELTAS since the previous row (``delta/<name>``,
+        # nonzero only). The registry is host-resident state, so this adds
+        # zero device syncs — the ONE device_get above stays the row's only
+        # transfer (contract regression-tested in test_obs).
+        from repro.obs.registry import get_registry
+
+        counters = get_registry().snapshot()["counters"]
+        for name, val in counters.items():
+            d = float(val) - self._last_counters.get(name, 0.0)
+            if d:
+                row[f"delta/{name}"] = int(d) if d.is_integer() else d
+        self._last_counters = {k: float(v) for k, v in counters.items()}
         if self._last_time is not None and tokens and step > self._last_step:
             dt = now - self._last_time
             row["tokens_per_s"] = tokens * (step - self._last_step) / max(dt, 1e-9)

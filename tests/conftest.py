@@ -5,7 +5,8 @@ container does not ship it (and nothing may be pip-installed), so when the
 real package is absent we register a tiny deterministic stand-in in
 ``sys.modules`` *before* collection. The shim reproduces the small API
 surface these tests use — ``given``, ``settings`` and the ``integers`` /
-``floats`` / ``sampled_from`` / ``text`` / ``booleans`` strategies — and
+``floats`` / ``sampled_from`` / ``text`` / ``booleans`` /
+``dictionaries`` strategies (plus ``.map``) — and
 runs each property a bounded number of deterministic examples (seeded by
 the test name, edge cases first). With the real hypothesis installed the
 shim is inert.
@@ -36,6 +37,12 @@ def _install_hypothesis_shim() -> None:
                 return self._edges[i]
             return self._draw(rng)
 
+        def map(self, fn):
+            return _Strategy(
+                [fn(e) for e in self._edges],
+                lambda rng: fn(self._draw(rng)),
+            )
+
     def integers(min_value=0, max_value=1 << 16):
         return _Strategy(
             [min_value, max_value],
@@ -56,6 +63,18 @@ def _install_hypothesis_shim() -> None:
 
     def booleans():
         return _Strategy([False, True], lambda rng: bool(rng.getrandbits(1)))
+
+    def dictionaries(keys, values, min_size=0, max_size=4):
+        max_size = 4 if max_size is None else max_size
+
+        def draw(rng: random.Random):
+            out = {}
+            for _ in range(rng.randint(min_size, max_size)):
+                out[keys.example(rng, 1 << 30)] = values.example(rng, 1 << 30)
+            return out
+
+        edges = [{}] if min_size == 0 else []
+        return _Strategy(edges, draw)
 
     def text(alphabet=None, min_size=0, max_size=20):
         chars = (
@@ -115,6 +134,7 @@ def _install_hypothesis_shim() -> None:
     st.sampled_from = sampled_from
     st.booleans = booleans
     st.text = text
+    st.dictionaries = dictionaries
     mod.given = given
     mod.settings = settings
     mod.strategies = st

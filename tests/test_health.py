@@ -1,0 +1,465 @@
+"""Projection-health telemetry (``obs/health``): journal + monitor
+mechanics, the analyze() verdict logic on injected pathologies, the
+solver feedback loop, and the fleet_status health column.
+
+The pathology tests run REAL optimizers with gradients constructed to
+break the numerics — rank-1 floor on a high-rank gradient stream fires
+RANK_STARVED, gradients past the int8 dynamic range fire
+QUANT_SATURATED — so the verdicts are earned end-to-end, not asserted
+against synthetic rows alone. EF_NOT_DRAINING / SUBSPACE_THRASH use
+synthetic journals (their triggers are trajectory shapes, cheap to
+write exactly)."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import OptimizerConfig, make_optimizer
+from repro.obs import health
+from repro.obs.registry import get_registry
+
+
+@pytest.fixture(autouse=True)
+def _clean_health():
+    """Monitor and registry are process-wide singletons: put them back."""
+    yield
+    health.configure(None)
+    get_registry().reset()
+
+
+def _journal(tmp_path, name="health.jsonl"):
+    return str(tmp_path / name)
+
+
+def _write_rows(path, rows, torn_tail=False):
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+        if torn_tail:
+            f.write('{"ts": 1.0, "bucket": "project:8x8:flo')
+
+
+def _row(step, bucket, event, metrics):
+    return {"ts": time.time(), "host": "t", "step": step,
+            "bucket": bucket, "event": event, "metrics": metrics}
+
+
+# ---------------------------------------------------------------------------
+# label, journal reader, monitor
+# ---------------------------------------------------------------------------
+def test_bucket_label_is_rank_free():
+    lab = health.bucket_label("project", (96, 64), "float32")
+    assert lab == "project:96x64:float32"
+    # Stable across rank changes by construction: the label has no rank
+    # field, so a tightened plan still addresses the same journal bucket.
+    assert "rank" not in lab
+    assert health.bucket_label("conv", (48, 32, 3, 3), "float32") == (
+        "conv:48x32x3x3:float32"
+    )
+
+
+def test_read_health_torn_tail_and_missing(tmp_path):
+    path = _journal(tmp_path)
+    good = [
+        _row(0, "project:8x8:float32", "refresh", {"energy": 0.9}),
+        _row(4, "project:8x8:float32", "refresh", {"energy": 0.8}),
+    ]
+    _write_rows(path, good, torn_tail=True)
+    rows = health.read_health(path)
+    assert len(rows) == 2
+    assert [r["step"] for r in rows] == [0, 4]
+    # Missing file and empty file are both just "no rows".
+    assert health.read_health(str(tmp_path / "nope.jsonl")) == []
+    empty = _journal(tmp_path, "empty.jsonl")
+    open(empty, "w").close()
+    assert health.read_health(empty) == []
+
+
+def test_monitor_journals_and_mirrors_gauges(tmp_path):
+    path = _journal(tmp_path)
+    mon = health.configure(path, host="h9", sample_every=7)
+    assert mon.enabled and mon.sample_every == 7
+    mon.record(12, "project:8x8:float32", "refresh",
+               {"energy": 0.75, "bad": "not-a-number"})
+    rows = health.read_health(path)
+    assert len(rows) == 1
+    assert rows[0]["host"] == "h9"
+    assert rows[0]["metrics"] == {"energy": 0.75}  # non-numeric dropped
+    snap = get_registry().snapshot()
+    assert snap["gauges"]["health/project:8x8:float32/energy"] == 0.75
+    # Disabling restores the no-op monitor.
+    health.configure(None)
+    assert not health.get_monitor().enabled
+
+
+# ---------------------------------------------------------------------------
+# HealthReport codec: forward compat
+# ---------------------------------------------------------------------------
+def test_report_roundtrip_keeps_unknown_verdicts():
+    d = {
+        "codec": "coap-health/v2",
+        "buckets": {"project:8x8:float32": {
+            "verdicts": ["RANK_STARVED", "SOME_FUTURE_VERDICT"],
+            "metrics": {"energy_median": 0.1},
+        }},
+        "verdicts": ["RANK_STARVED", "SOME_FUTURE_VERDICT"],
+        "thresholds": {"energy_floor": 0.5},
+    }
+    rep = health.HealthReport.from_dict(d)
+    assert not rep.ok()
+    assert "SOME_FUTURE_VERDICT" in rep.verdicts  # preserved, not rejected
+    back = rep.to_dict()
+    assert back["codec"] == "coap-health/v2"
+    assert back["verdicts"] == ["RANK_STARVED", "SOME_FUTURE_VERDICT"]
+    with pytest.raises(ValueError):
+        health.HealthReport.from_dict({"codec": "coap-plan/v1"})
+
+
+def test_report_save_load(tmp_path):
+    rep = health.analyze([_row(0, "b", "refresh", {"energy": 0.9})])
+    path = str(tmp_path / "report.json")
+    rep.save(path)
+    back = health.HealthReport.load(path)
+    assert back.codec == health.HEALTH_CODEC_V1
+    assert back.buckets == rep.buckets
+    assert back.ok()
+
+
+def test_analyze_empty_and_malformed_rows():
+    assert health.analyze([]).ok()
+    rep = health.analyze([
+        {"nonsense": 1}, "not-a-dict", {"bucket": 3, "metrics": {}},
+        {"bucket": "b", "metrics": "nope"},
+    ])
+    assert rep.ok() and rep.buckets == {}
+
+
+# ---------------------------------------------------------------------------
+# Injected pathologies -> verdicts (real optimizer end-to-end)
+# ---------------------------------------------------------------------------
+def _run_steps(tx, params, steps, grad_fn):
+    state = tx.init(params)
+    step = jax.jit(lambda g, s: tx.update(g, s, params))
+    for i in range(steps):
+        _, state = step(grad_fn(i), state)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state))
+    return state
+
+
+def test_rank_starved_fires_on_rank1_high_rank_gradients(tmp_path):
+    """Rank-1 projection of a full-rank random gradient stream captures
+    ~1/64 of the energy -> RANK_STARVED after warmup."""
+    path = _journal(tmp_path)
+    health.configure(path, host="t")
+    params = {"w": jnp.zeros((4, 96, 64))}
+    tx = make_optimizer(OptimizerConfig(
+        name="coap-adamw", learning_rate=1e-3, rank=1, t_update=2, lam=2,
+        min_dim=32, stacked_state=True, grad_clip=None,
+    ))
+
+    def grad_fn(i):
+        key = jax.random.key(100 + i)
+        return {"w": jax.random.normal(key, (4, 96, 64))}
+
+    _run_steps(tx, params, 10, grad_fn)
+    rep = health.analyze_journal(path)
+    # Label carries the leaf's own stacked shape (4 layers of 96x64).
+    label = "project:4x96x64:float32"
+    assert label in rep.buckets
+    b = rep.buckets[label]
+    assert b["n_refresh"] >= 4  # t_update=2 -> refreshes at 0,2,4,...
+    assert b["metrics"]["energy_median"] < 0.5
+    assert health.VERDICT_RANK_STARVED in b["verdicts"]
+    assert health.VERDICT_RANK_STARVED in rep.verdicts
+
+
+def test_healthy_rank_stays_verdict_free(tmp_path):
+    """A rank-1 gradient stream under a rank-32 floor: energy ~= 1,
+    overlap high, no verdict."""
+    path = _journal(tmp_path)
+    health.configure(path, host="t")
+    params = {"w": jnp.zeros((4, 96, 64))}
+    tx = make_optimizer(OptimizerConfig(
+        name="coap-adamw", learning_rate=1e-3, rank=32, t_update=2, lam=2,
+        min_dim=32, stacked_state=True, grad_clip=None,
+    ))
+    _run_steps(tx, params, 10,
+               lambda i: {"w": 0.1 * jnp.ones((4, 96, 64))})
+    rep = health.analyze_journal(path)
+    b = rep.buckets["project:4x96x64:float32"]
+    assert b["metrics"]["energy_median"] > 0.9
+    assert b["verdicts"] == []
+    assert rep.ok()
+
+
+def test_quant_saturated_fires_past_int8_range(tmp_path):
+    """Gradients at 1e25 push the second moment past fp32 -> non-finite
+    block scales -> QUANT_SATURATED from the sampled codec stats."""
+    path = _journal(tmp_path)
+    health.configure(path, host="t")
+    params = {"w": jnp.zeros((4, 96, 64))}
+    tx = make_optimizer(OptimizerConfig(
+        name="8bit-coap-adamw", learning_rate=1e-3, rank=8, t_update=4,
+        lam=2, min_dim=32, stacked_state=True, grad_clip=None,
+    ))
+    state = tx.init(params)
+    step = jax.jit(lambda g, s: tx.update(g, s, params))
+    g = {"w": 1e25 * jnp.ones((4, 96, 64))}
+    for i in range(6):
+        _, state = step(g, state)
+        health.observe_state(state, i)
+    rep = health.analyze_journal(path)
+    sats = [b for b in rep.buckets.values()
+            if health.VERDICT_QUANT_SATURATED in b["verdicts"]]
+    assert sats, f"no QUANT_SATURATED in {rep.to_dict()}"
+    assert any(b["metrics"].get("scale_nonfinite_max", 0) > 0
+               or b["metrics"].get("sat_rate_max", 0) > 0.05
+               for b in sats)
+
+
+def test_quantized_healthy_run_no_quant_verdict(tmp_path):
+    """Sane gradient scale: excess-rail saturation stays ~0 (the one
+    guaranteed absmax rail per block is baseline-corrected away)."""
+    path = _journal(tmp_path)
+    health.configure(path, host="t")
+    params = {"w": jnp.zeros((4, 96, 64))}
+    tx = make_optimizer(OptimizerConfig(
+        name="8bit-coap-adamw", learning_rate=1e-3, rank=8, t_update=4,
+        lam=2, min_dim=32, stacked_state=True, grad_clip=None,
+    ))
+    state = tx.init(params)
+    step = jax.jit(lambda g, s: tx.update(g, s, params))
+    for i in range(6):
+        g = {"w": 0.1 * jax.random.normal(jax.random.key(i), (4, 96, 64))}
+        _, state = step(g, state)
+        health.observe_state(state, i)
+    rep = health.analyze_journal(path)
+    assert health.VERDICT_QUANT_SATURATED not in rep.verdicts
+    samples = [b for b in rep.buckets.values() if b["n_sample"] > 0]
+    assert samples
+    for b in samples:
+        assert b["metrics"]["sat_rate_max"] <= 0.05
+
+
+def test_observe_state_reads_no_gradient(tmp_path):
+    """observe_state's signature takes only (opt_state, step): the
+    zero-extra-G-round-trips property is structural, and a disabled
+    monitor short-circuits to 0 rows."""
+    assert health.observe_state({"not": "a state"}, 0) == 0
+    health.configure(_journal(tmp_path))
+    assert health.observe_state((), 5) == 0  # no projected states found
+
+
+def test_ef_not_draining_on_growing_sidecar():
+    """Linearly growing ef_rms (last-third/first-third > 3x) fires;
+    a bounded sidecar does not."""
+    bucket = "project:96x64:float32"
+    growing = [
+        _row(i, bucket, "sample", {"ef_rms": float(1 + i)})
+        for i in range(9)
+    ]
+    rep = health.analyze(growing)
+    b = rep.buckets[bucket]
+    assert b["metrics"]["ef_growth_ratio"] > 3.0
+    assert health.VERDICT_EF_NOT_DRAINING in b["verdicts"]
+
+    bounded = [
+        _row(i, bucket, "sample", {"ef_rms": 1.0 + 0.01 * (i % 2)})
+        for i in range(9)
+    ]
+    assert health.analyze(bounded).ok()
+    # Below the minimum sample count there is no judgment either way.
+    few = growing[: int(health.DEFAULT_THRESHOLDS["ef_min_samples"]) - 1]
+    assert health.analyze(few).ok()
+
+
+def test_subspace_thrash_on_low_overlap_after_warmup():
+    bucket = "project:96x64:float32"
+    rows = []
+    for i, ov in enumerate([0.9, 0.8, 0.1, 0.15, 0.05, 0.1]):
+        rows.append(_row(2 * i, bucket, "refresh",
+                         {"energy": 0.9, "subspace_overlap": ov}))
+    rep = health.analyze(rows)
+    b = rep.buckets[bucket]
+    # Warmup refreshes (the first 2, incl. the init from-nothing one) are
+    # excluded from the overlap judgment.
+    assert b["metrics"]["overlap_median"] < 0.5
+    assert b["verdicts"] == [health.VERDICT_SUBSPACE_THRASH]
+
+    stable = [
+        _row(2 * i, bucket, "refresh",
+             {"energy": 0.9, "subspace_overlap": ov})
+        for i, ov in enumerate([0.2, 0.3, 0.9, 0.95, 0.9, 0.92])
+    ]
+    assert health.analyze(stable).ok()
+
+
+def test_conv_bucket_emits_refresh_rows(tmp_path):
+    """Tucker-2 conv buckets journal refresh health too."""
+    path = _journal(tmp_path)
+    health.configure(path, host="t")
+    params = {"conv": {"kernel": jnp.zeros((48, 32, 3, 3))}}
+    tx = make_optimizer(OptimizerConfig(
+        name="coap-adamw", learning_rate=1e-3, rank=8, t_update=2, lam=2,
+        min_dim=16, stacked_state=True, grad_clip=None,
+    ))
+
+    def grad_fn(i):
+        return {"conv": {"kernel": 0.1 * jax.random.normal(
+            jax.random.key(i), (48, 32, 3, 3))}}
+
+    _run_steps(tx, params, 6, grad_fn)
+    rows = health.read_health(path)
+    conv_rows = [r for r in rows if r["bucket"].startswith("conv:")]
+    assert conv_rows, f"no conv rows in {[r['bucket'] for r in rows]}"
+    for r in conv_rows:
+        assert 0.0 <= r["metrics"]["energy"] <= 1.0 + 1e-5
+        assert "subspace_overlap" in r["metrics"]
+
+
+# ---------------------------------------------------------------------------
+# Solver feedback loop
+# ---------------------------------------------------------------------------
+_TREE = {
+    "blk0": {"w": jnp.zeros((96, 64)), "norm": jnp.zeros((64,))},
+    "tower": {"conv0": {"kernel": jnp.zeros((48, 32, 3, 3))}},
+}
+_SOLVE_KW = dict(min_dim=16, t_update=4, lam=2, stagger_groups=2)
+
+
+def _solve(**kw):
+    from repro.plan.solver import solve
+
+    return solve(_TREE, None, **_SOLVE_KW, **kw)
+
+
+def _proj_bucket(plan):
+    return next(b for b in plan.buckets if b.kind == "project")
+
+
+def _conv_bucket(plan):
+    return next(b for b in plan.buckets if b.kind == "conv")
+
+
+def _report_for(plan, verdicts_by_kind, metrics_by_kind=None):
+    buckets = {}
+    for b in plan.buckets:
+        if b.kind not in verdicts_by_kind:
+            continue
+        label = health.bucket_label(b.kind, b.shape, b.dtype)
+        buckets[label] = {
+            "verdicts": list(verdicts_by_kind[b.kind]),
+            "metrics": dict((metrics_by_kind or {}).get(b.kind, {})),
+        }
+    return health.HealthReport(
+        buckets=buckets, verdicts=sorted(
+            {v for vs in verdicts_by_kind.values() for v in vs}
+        ),
+        thresholds=dict(health.DEFAULT_THRESHOLDS),
+    )
+
+
+def test_solve_health_none_bit_identical():
+    blind = _solve()
+    none = _solve(health_report=None)
+    assert json.dumps(blind.to_dict(), sort_keys=True) == json.dumps(
+        none.to_dict(), sort_keys=True
+    )
+    assert "health_adjustments" not in blind.cost
+
+
+def test_solve_empty_report_changes_nothing_but_records_consult():
+    blind = _solve()
+    rep = health.HealthReport(
+        buckets={}, verdicts=[],
+        thresholds=dict(health.DEFAULT_THRESHOLDS),
+    )
+    plan = _solve(health_report=rep.to_dict())
+    assert plan.cost["health_adjustments"] == []
+    assert [b.spec for b in plan.buckets] == [b.spec for b in blind.buckets]
+
+
+def test_solve_tightens_on_rank_starved_and_thrash():
+    blind = _solve()
+    for verdict in (health.VERDICT_RANK_STARVED,
+                    health.VERDICT_SUBSPACE_THRASH):
+        rep = _report_for(blind, {"project": [verdict], "conv": [verdict]})
+        plan = _solve(health_report=rep)  # object form, not dict
+        pb, pb0 = _proj_bucket(plan), _proj_bucket(blind)
+        assert pb.spec.rank > pb0.spec.rank
+        cb, cb0 = _conv_bucket(plan), _conv_bucket(blind)
+        assert cb.spec.rank_o > cb0.spec.rank_o
+        assert cb.spec.rank_i > cb0.spec.rank_i
+        adjusts = plan.cost["health_adjustments"]
+        assert {a["action"] for a in adjusts} == {"tighten"}
+        assert len(adjusts) == 2
+
+
+def test_solve_relaxes_on_energy_headroom():
+    blind = _solve()
+    rep = _report_for(
+        blind, {"project": []},
+        metrics_by_kind={"project": {"energy_median": 0.99}},
+    )
+    plan = _solve(health_report=rep.to_dict())
+    pb, pb0 = _proj_bucket(plan), _proj_bucket(blind)
+    assert pb.spec.rank < pb0.spec.rank
+    assert pb.spec.rank >= 1
+    adjusts = plan.cost["health_adjustments"]
+    assert len(adjusts) == 1 and adjusts[0]["action"] == "relax"
+    # A verdicted bucket never relaxes, however high its energy.
+    rep2 = _report_for(
+        blind, {"project": [health.VERDICT_QUANT_SATURATED]},
+        metrics_by_kind={"project": {"energy_median": 0.99}},
+    )
+    plan2 = _solve(health_report=rep2.to_dict())
+    assert _proj_bucket(plan2).spec.rank == pb0.spec.rank
+
+
+def test_solve_ignores_unknown_verdicts():
+    """Forward compat: a newer writer's verdict neither tightens nor
+    blocks anything it should not."""
+    blind = _solve()
+    rep = _report_for(blind, {"project": ["SOME_FUTURE_VERDICT"]})
+    plan = _solve(health_report=rep.to_dict())
+    assert _proj_bucket(plan).spec.rank == _proj_bucket(blind).spec.rank
+    assert plan.cost["health_adjustments"] == []
+
+
+# ---------------------------------------------------------------------------
+# fleet_status health column
+# ---------------------------------------------------------------------------
+def test_fleet_status_health_column(tmp_path):
+    from repro.launch import fleet_status as fs
+
+    now = time.time()
+    sick = tmp_path / "sick"
+    sick.mkdir()
+    (sick / "heartbeat.json").write_text(json.dumps(
+        {"time": now, "host": "sick", "phase": "train", "step": 40}
+    ))
+    rows = [
+        _row(2 * i, "project:96x64:float32", "refresh",
+             {"energy": 0.05, "subspace_overlap": 0.9})
+        for i in range(5)
+    ]
+    _write_rows(str(sick / "health.jsonl"), rows, torn_tail=True)
+
+    quiet = tmp_path / "quiet"
+    quiet.mkdir()
+    (quiet / "heartbeat.json").write_text(json.dumps(
+        {"time": now, "host": "quiet", "phase": "train", "step": 40}
+    ))
+
+    doc = fs.collect([str(sick), str(quiet)], None)
+    by_host = {h["host"]: h for h in doc["hosts"]}
+    assert by_host["sick"]["health"]["ok"] is False
+    assert by_host["sick"]["health"]["verdicts"] == ["RANK_STARVED"]
+    assert by_host["sick"]["health"]["n_buckets"] == 1
+    assert by_host["quiet"]["health"] is None  # no journal -> no column
+
+    table = fs.render(doc)
+    assert "RANK_STARVED" in table
+    assert "| health |" in table.splitlines()[0]

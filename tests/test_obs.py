@@ -187,11 +187,15 @@ def test_registry_counters_gauges_snapshot():
     assert snap["counters"] == {"a/b": 3, "frac": 0.5}  # int when integral
     assert isinstance(snap["counters"]["a/b"], int)
     assert snap["gauges"] == {"phase": "restore", "g": 7}
+    # Snapshots are stamped for deterministic gauge merging.
+    assert isinstance(snap["ts"], float) and snap["ts"] > 0
+    assert snap["host"] == os.environ.get("REPRO_HOST_ID", "")
     # Snapshot is a copy, not a view.
     snap["counters"]["a/b"] = 99
     assert r.get("a/b") == 3.0
     r.reset()
-    assert r.snapshot() == {"counters": {}, "gauges": {}}
+    empty = r.snapshot()
+    assert empty["counters"] == {} and empty["gauges"] == {}
 
 
 def test_merge_snapshots():
@@ -200,8 +204,54 @@ def test_merge_snapshots():
     m = merge_snapshots([a, None, b])
     assert m["counters"] == {"x": 3, "y": 2.5}
     assert isinstance(m["counters"]["x"], int)
-    assert m["gauges"]["phase"] == "migrate"  # last writer wins
+    # Unstamped snapshots keep the historical semantics: last input wins.
+    assert m["gauges"]["phase"] == "migrate"
     assert merge_snapshots([]) == {"counters": {}, "gauges": {}}
+
+
+def test_merge_snapshots_gauges_deterministic_by_ts():
+    """Gauge merging is a function of snapshot CONTENTS, not input order:
+    the newest ``(ts, host)`` stamp wins even when the caller (e.g.
+    ``fleet_status`` globbing heartbeat files) iterates oldest-last or in
+    filesystem order."""
+    new = {"gauges": {"phase": "train"}, "ts": 200.0, "host": "h1"}
+    old = {"gauges": {"phase": "boot"}, "ts": 100.0, "host": "h9"}
+    for order in ([old, new], [new, old]):
+        assert merge_snapshots(order)["gauges"]["phase"] == "train"
+    # Wall-clock tie → host id breaks it, still order independent.
+    a = {"gauges": {"g": "a"}, "ts": 50.0, "host": "hostA"}
+    b = {"gauges": {"g": "b"}, "ts": 50.0, "host": "hostB"}
+    for order in ([a, b], [b, a]):
+        assert merge_snapshots(order)["gauges"]["g"] == "b"
+    # Stamped beats unstamped regardless of position.
+    stamped = {"gauges": {"g": "s"}, "ts": 1.0, "host": ""}
+    unstamped = {"gauges": {"g": "u"}}
+    for order in ([stamped, unstamped], [unstamped, stamped]):
+        assert merge_snapshots(order)["gauges"]["g"] == "s"
+
+
+def test_merge_snapshots_counter_properties():
+    """Counter merging is associative and commutative (property test over
+    the deterministic hypothesis shim): any merge tree over any
+    permutation yields the same counter totals."""
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    keys = st.sampled_from(["a", "b", "c/d"])
+    counters = st.dictionaries(keys, st.integers(0, 100), max_size=3)
+    snap = counters.map(lambda c: {"counters": dict(c), "gauges": {}})
+
+    @settings(max_examples=25, deadline=None)
+    @given(snap, snap, snap)
+    def check(x, y, z):
+        left = merge_snapshots([merge_snapshots([x, y]), z])
+        right = merge_snapshots([x, merge_snapshots([y, z])])
+        flat = merge_snapshots([x, y, z])
+        swapped = merge_snapshots([z, x, y])
+        assert left["counters"] == right["counters"] == flat["counters"]
+        assert swapped["counters"] == flat["counters"]
+
+    check()
 
 
 def test_registry_merge_across_processes(tmp_path):
@@ -290,16 +340,29 @@ def test_metrics_logger_one_device_get(tmp_path, monkeypatch):
 
     monkeypatch.setattr(metrics_mod.jax, "device_get", counting)
     path = str(tmp_path / "metrics.jsonl")
+    reg = get_registry()
+    reg.inc("ckpt/save", 2)
     with MetricsLogger(path) as lg:
         row = lg.log(0, {"loss": jax.numpy.float32(1.5),
                          "ceu": jax.numpy.float32(2.0)}, tokens=64)
         assert row["loss"] == 1.5
         assert len(calls) == 1  # ONE transfer for the whole row
-        lg.log(1, {"loss": jax.numpy.float32(1.2),
-                   "ceu": jax.numpy.float32(2.1)}, tokens=64)
+        # Counter deltas ride the row from the host-side registry without
+        # a second device transfer.
+        assert row["delta/ckpt/save"] == 2
+        reg.inc("ckpt/save")
+        row1 = lg.log(1, {"loss": jax.numpy.float32(1.2),
+                          "ceu": jax.numpy.float32(2.1)}, tokens=64)
+        assert len(calls) == 2  # still one device_get PER ROW
+        assert row1["delta/ckpt/save"] == 1
+        row2 = lg.log(2, {"loss": jax.numpy.float32(1.1),
+                          "ceu": jax.numpy.float32(2.2)}, tokens=64)
+        # Unchanged counters emit no delta keys (rows stay tidy).
+        assert "delta/ckpt/save" not in row2
+        assert len(calls) == 3
     assert lg._f is None  # context manager closed the handle
     rows = [json.loads(line) for line in open(path)]
-    assert [r["step"] for r in rows] == [0, 1]
+    assert [r["step"] for r in rows] == [0, 1, 2]
     assert rows[1]["tokens_per_s"] > 0
 
 
